@@ -1,0 +1,52 @@
+"""Kernel microbenches: Pallas (interpret on CPU) vs jnp reference.
+
+NOTE: on this CPU host the Pallas kernels run in INTERPRET mode, so their
+wall-times measure the validation path, not TPU performance — the numbers
+that matter are the ref-path times (XLA CPU) and, on real hardware, the
+Mosaic-compiled kernels.  Reported for completeness + regression tracking.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def main():
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit, timeit
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    N = 200_000
+    p = jnp.asarray(rng.integers(0, 1000, N), jnp.int32)
+    o = jnp.asarray(rng.integers(0, 1 << 20, N), jnp.int32)
+    params = jnp.asarray([100, 300, 0, 1 << 19], jnp.int32)
+    t, _ = timeit(ops.interval_filter, p, o, params, repeats=3)
+    emit("kernels/interval_filter_pallas", t, n=N)
+    import jax
+
+    reff = jax.jit(lambda: ref.ref_interval_filter(None, p, o, 100, 300, 0, 1 << 19, 0))
+    t, _ = timeit(reff, repeats=3)
+    emit("kernels/interval_filter_ref", t, n=N)
+
+    G, K = 2048, 16
+    conc = jnp.asarray(rng.integers(-1, 500, (G, K)).astype(np.int32))
+    bounds = conc + jnp.asarray(rng.integers(1, 64, (G, K)).astype(np.int32))
+    t, _ = timeit(ops.msc_select, conc, bounds, repeats=3)
+    emit("kernels/msc_select_pallas", t, groups=G)
+    reff = jax.jit(lambda: ref.ref_msc_select(conc, bounds))
+    t, _ = timeit(reff, repeats=3)
+    emit("kernels/msc_select_ref", t, groups=G)
+
+    V, E, B, L = 10_000, 64, 512, 16
+    table = jnp.asarray(rng.normal(size=(V, E)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-1, V, (B, L)).astype(np.int32))
+    t, _ = timeit(ops.embedding_bag, table, idx, repeats=3)
+    emit("kernels/embedding_bag_pallas", t, bags=B)
+    reff = jax.jit(lambda: ref.ref_embedding_bag(table, idx))
+    t, _ = timeit(reff, repeats=3)
+    emit("kernels/embedding_bag_ref", t, bags=B)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Tables IV + V: lite vs full materialization (duration + size delta).
+
+Run on the LUBM-style KB (paper: lite ~0% delta, full +38%) and on a
+deep-hierarchy KB standing in for DBPedia/Wikidata (paper: full +13..58%,
+lite may *shrink* the store).
+"""
+from __future__ import annotations
+
+
+def main():
+    from benchmarks.common import BENCH_UNIVERSITIES, emit, timeit
+    from repro.core.abox import encode_obe
+    from repro.core.closure import full_materialize
+    from repro.core.materialize import DeviceTBox, lite_materialize
+    from repro.core.tbox import build_tbox
+    from repro.rdf.generator import generate_deep_ontology, generate_lubm, generate_random_abox
+
+    def run(tag, raw, tbox):
+        kb = encode_obe(raw, tbox)
+        dtb = DeviceTBox.build(tbox)
+        n = kb.n
+        t_lite, (out, valid, stats) = timeit(
+            lambda: lite_materialize(kb, dtb), repeats=3
+        )
+        lite_n = stats["n_type_out"] + stats["n_nontype"]
+        emit(f"table4/lite_mat/{tag}", t_lite, triples=n,
+             throughput_tps=int(n / t_lite),
+             added=stats["n_added_implicit"], deleted=stats["n_deleted_explicit"],
+             delta_pct=round(100.0 * (lite_n - n) / n, 2))
+        t_full, (fout, fvalid, fstats) = timeit(
+            lambda: full_materialize(kb, dtb), repeats=3
+        )
+        emit(f"table5/full_mat/{tag}", t_full, triples=n,
+             throughput_tps=int(n / t_full),
+             added_pct=round(fstats["added_pct"], 2),
+             lite_speedup=round(t_full / t_lite, 2))
+
+    raw = generate_lubm(BENCH_UNIVERSITIES, seed=0)
+    run("lubm", raw, build_tbox(raw.onto))
+
+    onto = generate_deep_ontology(n_concepts=814, n_properties=120,
+                                  depth_bias=0.35, n_domain=60, n_range=55,
+                                  seed=3, max_children=7, max_depth=8)
+    deep = generate_random_abox(onto, n_instances=60_000, n_type_triples=150_000,
+                                n_prop_triples=350_000, seed=4)
+    run("deep-dbpedia-like", deep, build_tbox(onto))
+
+
+if __name__ == "__main__":
+    main()

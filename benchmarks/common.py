@@ -1,0 +1,48 @@
+"""Benchmark utilities: warmed, repeated wall-clock timing + CSV emit."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+BENCH_UNIVERSITIES = int(os.environ.get("REPRO_BENCH_UNIV", "4"))
+REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "5"))
+
+
+def timeit(fn, *args, repeats: int = None, warmup: int = 1):
+    """Median wall seconds of fn(*args) (block_until_ready aware)."""
+    repeats = repeats or REPEATS
+    for _ in range(warmup):
+        r = fn(*args)
+        _block(r)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        _block(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), r
+
+
+def _block(r):
+    import jax
+
+    for leaf in jax.tree.leaves(r):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+_rows = []
+
+
+def emit(name: str, seconds: float, **derived):
+    us = seconds * 1e6
+    extra = ",".join(f"{k}={v}" for k, v in derived.items())
+    line = f"{name},{us:.1f},{extra}"
+    _rows.append(line)
+    print(line, flush=True)
+
+
+def all_rows():
+    return list(_rows)

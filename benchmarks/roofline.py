@@ -1,0 +1,83 @@
+"""Roofline report: aggregate reports/dryrun/*.json into the §Roofline table.
+
+Per (arch x shape x mesh): the three terms (seconds), the dominant term,
+MODEL_FLOPS, the useful-compute ratio, and the roofline fraction
+(= achieved useful FLOP/s at the bound, divided by peak):
+
+    bound      = max(t_compute, t_memory, t_collective)
+    roofline%  = (model_flops / chips / bound) / PEAK_FLOPS
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+
+
+def load(dirpath="reports/dryrun"):
+    recs = []
+    for f in sorted(Path(dirpath).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def table(recs, mesh="single"):
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        t = r["roofline"]
+        bound = max(t.values())
+        frac = (r["model_flops_per_chip"] / bound) / PEAK_FLOPS if bound else 0.0
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"],
+            t_compute=t["t_compute"], t_memory=t["t_memory"],
+            t_collective=t["t_collective"], dominant=r["dominant"],
+            model_flops=r["model_flops"], useful_ratio=r.get("useful_ratio"),
+            roofline_frac=frac, compile_s=r.get("compile_s"),
+        ))
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | dominant | "
+           "MODEL_FLOPs | useful | roofline% |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | "
+            f"{r['t_memory']:.3e} | {r['t_collective']:.3e} | "
+            f"{r['dominant'].replace('t_', '')} | {r['model_flops']:.2e} | "
+            f"{(r['useful_ratio'] or 0):.2f} | {100 * r['roofline_frac']:.1f}% |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    from benchmarks.common import emit
+
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    fail = [r for r in recs if r.get("status") != "ok"]
+    emit("roofline/cells_ok", 0.0, ok=len(ok), fail=len(fail))
+    for mesh in ("single", "multi"):
+        rows = table(recs, mesh)
+        for r in rows:
+            emit(
+                f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                max(r["t_compute"], r["t_memory"], r["t_collective"]),
+                dominant=r["dominant"].replace("t_", ""),
+                roofline_pct=round(100 * r["roofline_frac"], 2),
+            )
+        md = render_markdown(rows)
+        out = Path(f"reports/roofline_{mesh}.md")
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(md + "\n")
+        print(f"wrote {out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3,table6]
+
+Sections (paper table -> module):
+    table2 -> bench_tbox          TBox encoding time vs ontology size
+    table3 -> bench_abox          SAE vs OBE ABox encoding throughput
+    table4/5 -> bench_materialize lite vs full materialization
+    table6 -> bench_queries       Q1-Q4 across lite/full/rewrite (+serving)
+    kernels -> bench_kernels      Pallas kernels vs refs
+    roofline -> roofline          dry-run aggregation (reads reports/dryrun)
+
+Scale via env: REPRO_BENCH_UNIV (default 4 universities ~ 0.5M triples).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table3,table6")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_abox, bench_kernels, bench_materialize, bench_queries,
+        bench_tbox, roofline,
+    )
+
+    sections = {
+        "table2": bench_tbox.main,
+        "table3": bench_abox.main,
+        "table45": bench_materialize.main,
+        "table6": bench_queries.main,
+        "kernels": bench_kernels.main,
+        "roofline": roofline.main,
+    }
+    chosen = (
+        {k.strip() for k in args.only.split(",")} if args.only else set(sections)
+    )
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in sections.items():
+        if name not in chosen:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+    print(f"# total bench wall: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: the whole LiteMat pipeline on the paper's Example 1.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.engine import KnowledgeBase
+from repro.core.query import Pattern
+from repro.rdf.parser import parse_ntriples
+
+# The paper's Example 1: Professor <= FacultyMember, domain(teaches) =
+# FacultyMember; bernd is an explicit Professor, hubert only teaches.
+NT = """
+<http://ex/Professor> <http://www.w3.org/2000/01/rdf-schema#subClassOf> <http://ex/FacultyMember> .
+<http://ex/teaches> <http://www.w3.org/2000/01/rdf-schema#domain> <http://ex/FacultyMember> .
+<http://ex/bernd> <http://www.w3.org/1999/02/22-rdf-syntax-ns#type> <http://ex/Professor> .
+<http://ex/hubert> <http://ex/teaches> <http://ex/course1> .
+"""
+
+
+def main():
+    ds, onto = parse_ntriples(NT)
+    print(f"parsed {ds.n_triples} ABox triples; ontology: {onto.stats()}")
+
+    K = KnowledgeBase.build(ds)
+    print("store sizes:", K.sizes())
+    print("concept encoding:")
+    enc = K.kb.tbox.concepts
+    for name in enc.tax.names:
+        if name.startswith("__"):
+            continue
+        (lo, hi), _ = enc.interval_of(name)
+        print(f"  {name:<28} id={lo:>4} interval=[{lo}, {hi})")
+
+    # 'SELECT ?x WHERE { ?x rdf:type FacultyMember }' — the naive store has
+    # NO FacultyMember triples; LiteMat answers via ONE interval compare.
+    q = [Pattern("?x", "rdf:type", "<http://ex/FacultyMember>")]
+    for mode in ("litemat", "full", "rewrite"):
+        rows = sorted(K.answers(q, mode=mode))
+        names = K.kb.extract([r[0] for r in rows])
+        print(f"{mode:>8}: {names}")
+    assert len(K.answers(q)) == 2, "bernd (explicit) + hubert (domain-derived)"
+    print("OK — both bernd and hubert are FacultyMembers under RDFS entailment")
+
+
+if __name__ == "__main__":
+    main()

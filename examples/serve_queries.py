@@ -1,0 +1,59 @@
+"""End-to-end driver (the paper's workload at serving scale):
+
+generate a multi-university LUBM-style KB (~0.5M triples by default) ->
+OBE-encode -> lite-materialize -> serve batched parameterized SPARQL-style
+queries through the vmapped LiteMat plans, with a completeness audit
+against the full-materialization and rewriting baselines.
+
+    PYTHONPATH=src python examples/serve_queries.py [--universities 4]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.engine import PAPER_QUERIES, KnowledgeBase
+from repro.rdf.generator import generate_lubm
+from repro.serving.engine import QueryServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--universities", type=int, default=4)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=256)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    raw = generate_lubm(args.universities, seed=0)
+    print(f"generated {raw.n_triples:,} triples in {time.time()-t0:.1f}s")
+
+    t0 = time.time()
+    K = KnowledgeBase.build(raw)
+    print(f"encoded + materialized in {time.time()-t0:.1f}s; sizes={K.sizes()}")
+
+    # completeness audit (the paper's own validation)
+    for qn, pats in PAPER_QUERIES.items():
+        res = {m: K.answers(pats, mode=m) for m in ("litemat", "full", "rewrite")}
+        assert res["litemat"] == res["full"] == res["rewrite"], qn
+        print(f"  {qn}: {len(res['litemat']):,} answers — complete in all 3 modes")
+
+    srv = QueryServer(K)
+    classes = ["Professor", "Student", "Faculty", "Person", "Course",
+               "Publication", "Organization", "Department"]
+    rng = np.random.default_rng(0)
+    srv.class_members(classes)  # warm/compile
+
+    t0 = time.time()
+    total = 0
+    for _ in range(args.batches):
+        names = [classes[i] for i in rng.integers(0, len(classes), args.batch)]
+        counts, members = srv.class_members(names)
+        total += len(names)
+    wall = time.time() - t0
+    print(f"served {total:,} class-member queries in {wall:.2f}s "
+          f"-> {total/wall:,.0f} q/s (batch={args.batch})")
+
+
+if __name__ == "__main__":
+    main()

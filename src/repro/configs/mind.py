@@ -1,0 +1,16 @@
+"""mind [arXiv:1904.08030]: embed_dim=64, 4 interests, 3 routing iters,
+multi-interest retrieval over a row-sharded item table."""
+from repro.models.recsys.mind import MINDConfig
+
+ARCH_ID = "mind"
+FAMILY = "recsys"
+
+
+def full_config() -> MINDConfig:
+    return MINDConfig(name=ARCH_ID, n_items=8_388_608, embed_dim=64,
+                      n_interests=4, capsule_iters=3, hist_len=50)
+
+
+def reduced_config() -> MINDConfig:
+    return MINDConfig(name=ARCH_ID + "-reduced", n_items=1024, embed_dim=16,
+                      n_interests=4, capsule_iters=3, hist_len=10)

@@ -1,0 +1,159 @@
+"""ABox encoding: OBE (ontology-based) vs SAE (standard) — paper §III.B/VI.C1.
+
+``encode_obe``: TBox terms (concepts, properties, rdf:type) are already
+encoded; only genuine instance/literal terms go through the parallel
+dictionary.  ``encode_sae`` is the paper's baseline: every term — including
+the very frequent rdf:type and property IRIs — is dictionary-encoded with no
+semantic structure.  The measured gap between the two reproduces Table III.
+
+Both paths are jit-compiled end-to-end; the sharded variant wraps the same
+logic in shard_map with the hash-partition dictionary of dictionary.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dictionary as dct
+from repro.core.tbox import RDF_TYPE, TBox
+from repro.utils import pair64
+from repro.utils.hashing import fingerprint_string
+
+
+@dataclass
+class EncodedKB:
+    """Device-encoded knowledge base."""
+
+    spo: jnp.ndarray  # int32[N, 3] encoded triples
+    tables: tuple  # dictionary parts (TBox map, instance table)
+    tbox: TBox | None
+    n_instance_terms: int
+    term_strings: dict | None = None  # host fp -> string (optional)
+    _merged: dct.TermTable | None = None
+
+    @property
+    def n(self) -> int:
+        return int(self.spo.shape[0])
+
+    @property
+    def table(self) -> dct.TermTable:
+        """Full dictionary (lazily merged — only locate/extract need it)."""
+        if self._merged is None:
+            t = self.tables[0]
+            for other in self.tables[1:]:
+                t = dct.merge_tables(t, other)
+            self._merged = t
+        return self._merged
+
+    # host conveniences ------------------------------------------------------
+    def locate(self, terms):
+        """strings -> ids (-1 if unknown)."""
+        fps = np.array([fingerprint_string(t) for t in terms], dtype=np.int64)
+        hi, lo = pair64.split_np(fps)
+        ids, _ = self.table.locate(jnp.asarray(hi), jnp.asarray(lo))
+        return np.asarray(ids)
+
+    def extract(self, ids):
+        """ids -> strings (via host term_strings; fp hex if unknown)."""
+        hi, lo, hit = self.table.extract_fp(jnp.asarray(np.asarray(ids, dtype=np.int32)))
+        fps = pair64.combine_np(np.asarray(hi), np.asarray(lo))
+        out = []
+        for f, h in zip(fps.tolist(), np.asarray(hit).tolist()):
+            if not h:
+                out.append(None)
+            elif self.term_strings and f in self.term_strings:
+                out.append(self.term_strings[f])
+            else:
+                out.append(f"fp:{f:x}")
+        return out
+
+
+def tbox_term_map(tbox: TBox):
+    """(fps, ids) of every TBox-encoded term (concept + property names)."""
+    fps, ids = [], []
+    for enc in (tbox.concepts, tbox.properties):
+        for name in enc.tax.names:
+            if name.startswith("__"):  # synthetic roots have no IRI
+                continue
+            fps.append(fingerprint_string(name))
+            ids.append(enc.id_of(name))
+    fps = np.array(fps, dtype=np.int64)
+    ids = np.array(ids, dtype=np.int32)
+    if len(np.unique(fps)) != len(fps):
+        raise ValueError("fingerprint collision among TBox terms")
+    return fps, ids
+
+
+@partial(jax.jit, static_argnames=("base", "dict_cols"))
+def _encode_columns(shi, slo, phi, plo, ohi, olo, thi, tlo, tids, base: int, dict_cols):
+    """Device core shared by OBE/SAE: resolve columns, dict-encode the rest.
+
+    ``dict_cols`` selects which columns feed the instance dictionary: OBE
+    passes (0, 2) — predicates and rdf:type objects are already TBox-encoded,
+    so the dictionary sort runs on 2N occurrences instead of SAE's 3N.  This
+    is exactly where the paper's OBE-vs-SAE throughput gap comes from.
+    """
+    qhi = jnp.stack([shi, phi, ohi])  # (3, N)
+    qlo = jnp.stack([slo, plo, olo])
+    tb_ids, tb_hit = pair64.lookup_pair(thi, tlo, tids, qhi, qlo)
+
+    # dictionary over unresolved occurrences of the selected columns
+    un_hi = jnp.where(tb_hit[dict_cols, :], dct.SENTINEL, qhi[dict_cols, :]).reshape(-1)
+    un_lo = jnp.where(tb_hit[dict_cols, :], dct.SENTINEL, qlo[dict_cols, :]).reshape(-1)
+    table = dct.build_local_dictionary(un_hi, un_lo, un_hi != dct.SENTINEL, base)
+    inst_ids, _ = table.locate(qhi, qlo)
+    ids = jnp.where(tb_hit, tb_ids, inst_ids)
+    return ids[0], ids[1], ids[2], table
+
+
+def _to_pairs(col: np.ndarray):
+    hi, lo = pair64.split_np(col)
+    return jnp.asarray(hi), jnp.asarray(lo)
+
+
+def encode_obe(raw, tbox: TBox) -> EncodedKB:
+    """Ontology-based encoding: TBox map + parallel instance dictionary."""
+    fps, ids = tbox_term_map(tbox)
+    ttable = dct.table_from_host(fps, ids)
+    shi, slo = _to_pairs(raw.s)
+    phi, plo = _to_pairs(raw.p)
+    ohi, olo = _to_pairs(raw.o)
+    s_id, p_id, o_id, itable = _encode_columns(
+        shi, slo, phi, plo, ohi, olo,
+        ttable.fp_hi, ttable.fp_lo, ttable.ids, base=tbox.instance_base, dict_cols=(0, 2),
+    )
+    if int(jnp.min(p_id)) < 0:
+        raise ValueError(
+            "OBE found predicates outside the TBox property map — classify "
+            "the ontology over the full predicate set first (the N-Triples "
+            "parser does this automatically)"
+        )
+    spo = jnp.stack([s_id, p_id, o_id], axis=1)
+    return EncodedKB(
+        spo=spo, tables=(ttable, itable), tbox=tbox,
+        n_instance_terms=int(itable.count),
+        term_strings=getattr(raw, "term_strings", None),
+    )
+
+
+def encode_sae(raw) -> EncodedKB:
+    """Standard ABox-only encoding (paper's baseline): no TBox knowledge."""
+    shi, slo = _to_pairs(raw.s)
+    phi, plo = _to_pairs(raw.p)
+    ohi, olo = _to_pairs(raw.o)
+    empty_hi = jnp.full((1,), dct.SENTINEL, dtype=jnp.int32)
+    empty_ids = jnp.full((1,), -1, dtype=jnp.int32)
+    s_id, p_id, o_id, itable = _encode_columns(
+        shi, slo, phi, plo, ohi, olo, empty_hi, empty_hi, empty_ids, base=0, dict_cols=(0, 1, 2),
+    )
+    spo = jnp.stack([s_id, p_id, o_id], axis=1)
+    return EncodedKB(
+        spo=spo, tables=(itable,), tbox=None,
+        n_instance_terms=int(itable.count),
+        term_strings=getattr(raw, "term_strings", None),
+    )

@@ -1,0 +1,85 @@
+"""KnowledgeBase facade: raw triples -> encoded -> materialized -> queryable.
+
+One object wires the whole LiteMat pipeline and exposes the three execution
+modes of the paper's evaluation (lite / full / no materialization), plus the
+paper's appendix queries Q1–Q4 as canned pattern lists.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.abox import EncodedKB, encode_obe, encode_sae
+from repro.core.closure import full_materialize
+from repro.core.materialize import DeviceTBox, compact_rows, lite_materialize
+from repro.core.query import Pattern, QueryEngine
+from repro.core.tbox import TBox, build_tbox
+from repro.rdf.generator import RawDataset
+
+# The paper's appendix queries (over the LUBM vocabulary).
+PAPER_QUERIES = {
+    "Q1": [Pattern("?x", "rdf:type", "Professor")],
+    "Q2": [Pattern("?x", "memberOf", "?y")],
+    "Q3": [Pattern("?x", "rdf:type", "Professor"), Pattern("?x", "memberOf", "?y")],
+    "Q4": [
+        Pattern("?x", "rdf:type", "Chair"),
+        Pattern("?y", "rdf:type", "Department"),
+        Pattern("?x", "worksFor", "?y"),
+    ],
+}
+
+
+@dataclass
+class KnowledgeBase:
+    kb: EncodedKB
+    dtb: DeviceTBox
+    lite_spo: jnp.ndarray  # compacted lite-materialized store
+    full_spo: jnp.ndarray  # compacted fully-materialized store
+    lite_stats: dict
+    full_stats: dict
+    _engines: dict = field(default_factory=dict)
+
+    @classmethod
+    def build(cls, raw: RawDataset, tbox: TBox | None = None,
+              parallel_tbox: bool = False) -> "KnowledgeBase":
+        tbox = tbox or build_tbox(raw.onto, parallel=parallel_tbox)
+        kb = encode_obe(raw, tbox)
+        dtb = DeviceTBox.build(tbox)
+        lite, lvalid, lstats = lite_materialize(kb, dtb)
+        full, fvalid, fstats = full_materialize(kb, dtb)
+        return cls(
+            kb=kb,
+            dtb=dtb,
+            lite_spo=compact_rows(lite, lvalid),
+            full_spo=compact_rows(full, fvalid),
+            lite_stats=lstats,
+            full_stats=fstats,
+        )
+
+    def engine(self, mode: str = "litemat") -> QueryEngine:
+        if mode not in self._engines:
+            store = {
+                "litemat": self.lite_spo,
+                "full": self.full_spo,
+                "rewrite": self.kb.spo,
+            }[mode]
+            self._engines[mode] = QueryEngine(kb=self.kb, spo=store, mode=mode, dtb=self.dtb)
+        return self._engines[mode]
+
+    def query(self, patterns, select=None, mode: str = "litemat"):
+        rows, sel = self.engine(mode).run(patterns, select=select)
+        return rows, sel
+
+    def answers(self, patterns, select=None, mode: str = "litemat") -> set:
+        rows, _ = self.query(patterns, select=select, mode=mode)
+        return {tuple(r) for r in rows.tolist()}
+
+    def sizes(self) -> dict:
+        return dict(
+            original=self.kb.n,
+            lite=int(self.lite_spo.shape[0]),
+            full=int(self.full_spo.shape[0]),
+        )

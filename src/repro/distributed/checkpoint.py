@@ -1,0 +1,122 @@
+"""Fault-tolerant checkpointing with elastic (mesh-independent) restore.
+
+Design (DESIGN.md §6): snapshots store HOST arrays + logical metadata, never
+device layouts, so a job restarted on a different mesh shape (256 -> 512
+chips, or a degraded 255-chip slice re-sliced to 128) reshards on load by
+re-applying its PartitionSpec rules to the new mesh.  Writes are atomic
+(tmp + rename), content-hashed, and keep-K garbage collected — a partially
+written checkpoint can never be restored.
+
+Format: one ``.npz`` per snapshot with flattened tree paths as keys, plus a
+JSON manifest (step, tree structure, hashes).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}"
+
+    def save(self, step: int, tree, extra: dict | None = None) -> Path:
+        flat = _flatten(tree)
+        digest = hashlib.sha256()
+        for k in sorted(flat):
+            digest.update(k.encode())
+            digest.update(np.ascontiguousarray(flat[k]).tobytes())
+        manifest = dict(
+            step=step,
+            keys=sorted(flat.keys()),
+            sha256=digest.hexdigest(),
+            extra=extra or {},
+        )
+        final = self._step_dir(step)
+        tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
+        np.savez(tmp / "arrays.npz", **flat)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        os.replace(tmp, final)  # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            d = self._step_dir(s)
+            for f in d.iterdir():
+                f.unlink()
+            d.rmdir()
+
+    def all_steps(self):
+        out = []
+        for d in self.dir.iterdir():
+            if d.name.startswith("step_") and (d / "manifest.json").exists():
+                out.append(int(d.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template_tree, step: int | None = None,
+                shardings=None, verify: bool = True):
+        """Restore onto the template's structure; optional resharding.
+
+        ``shardings`` may be a pytree of NamedSharding for a *different* mesh
+        than the one that saved — this is the elastic-restart path.
+        Returns (tree, manifest).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "arrays.npz")
+        if verify:
+            digest = hashlib.sha256()
+            for k in sorted(data.files):
+                digest.update(k.encode())
+                digest.update(np.ascontiguousarray(data[k]).tobytes())
+            if digest.hexdigest() != manifest["sha256"]:
+                raise IOError(f"checkpoint {d} failed integrity check")
+
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template_tree)
+        shard_leaves = (
+            jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec")
+            )
+            if shardings is not None
+            else [None] * len(leaves_p)
+        )
+        out = []
+        for (path, leaf), shard in zip(leaves_p, shard_leaves):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = data[key]
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+            if shard is not None:
+                out.append(jax.device_put(arr, shard))
+            else:
+                out.append(jax.device_put(arr.astype(leaf.dtype)))
+        return jax.tree_util.tree_unflatten(treedef, out), manifest

@@ -1,0 +1,72 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+At 1000+ nodes the DP-axis all-reduce dominates step time for small models;
+int8 quantization cuts that traffic 4x.  Error feedback (Seide et al. 2014 /
+EF-SGD arXiv:1901.09847) accumulates the quantization residual locally and
+re-injects it next step, preserving convergence (the compressed estimator
+stays unbiased in the EF sense — property-tested in tests/).
+
+``compressed_psum`` is shard_map-friendly: quantize -> psum(int32) ->
+dequantize; the scale itself needs one tiny f32 psum (max-abs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x, scale=None):
+    """x -> (int8 codes, scale). scale = max|x|/127 (per tensor)."""
+    if scale is None:
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, error_state):
+    """(grads + carried error) -> (quantized tree, scales, new error)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s)
+        return q, s, target - deq
+
+    flat = jax.tree.map(one, grads, error_state)
+    q = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    e = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return q, s, e
+
+
+def init_error_state(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compressed_psum(axis_name: str):
+    """Returns f(grads, error) -> (mean grads, new error) for shard_map.
+
+    int8 codes are summed in int32 across the axis (no overflow: <= 2^24
+    shards), then dequantized with the max participating scale.
+    """
+
+    def psum_one(g, e):
+        target = g.astype(jnp.float32) + e
+        scale = lax.pmax(jnp.max(jnp.abs(target)) / 127.0 + 1e-12, axis_name)
+        q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+        new_e = target - q.astype(jnp.float32) * scale
+        total = lax.psum(q.astype(jnp.int32), axis_name)
+        n = lax.psum(jnp.int32(1), axis_name)
+        return total.astype(jnp.float32) * scale / n, new_e
+
+    def f(grads, error):
+        pairs = jax.tree.map(psum_one, grads, error)
+        mean = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+        new_e = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+        return mean, new_e
+
+    return f

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: ELL-format SpMM (padded-neighbor message passing).
+
+The GNN hot loop in the sampled-training regime: neighbor lists are padded
+to a fixed fan-out K (exactly what the neighbor sampler emits), giving an
+ELL sparse layout — (N, K) neighbor ids + (N, K) edge weights.  Each output
+row accumulates K weighted feature rows.
+
+Same scalar-prefetch DMA-steering pattern as embedding_bag: neighbor ids
+drive the feature-row index_map, the out block is revisited across the K
+inner grid steps.  -1 neighbors are padding (zero contribution).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(nbr_ref, w_ref, row_ref, out_ref):
+    n = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = nbr_ref[n, k] >= 0
+    w = jnp.where(valid, w_ref[n, k], 0.0).astype(out_ref.dtype)
+    out_ref[...] += w * row_ref[...]
+
+
+def ell_spmm_pallas(x, neighbors, weights, *, interpret: bool = False):
+    """x: f32[Ns, F]; neighbors: int32[N, K]; weights: f32[N, K] -> f32[N, F]."""
+    N, K = neighbors.shape
+    _, F = x.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N, K),
+        in_specs=[
+            pl.BlockSpec((1, F), lambda n, k, nbr, w: (jnp.maximum(nbr[n, k], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, F), lambda n, k, nbr, w: (n, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, F), x.dtype),
+        interpret=interpret,
+    )(neighbors, weights, x)

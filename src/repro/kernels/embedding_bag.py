@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + bag-reduce) for recsys.
+
+JAX has no native EmbeddingBag; the recsys family (MIND) needs ragged
+multi-hot lookups over large tables.  TPU-native formulation: the bag
+indices are *scalar-prefetched* so the BlockSpec index_map can steer the
+HBM->VMEM DMA of exactly the embedding rows needed — the canonical Pallas
+embedding-gather pattern.  The grid is (B bags x L slots); the output block
+for bag b stays resident across the L inner steps and accumulates (slot 0
+initializes), so each row is touched once and reduction happens in VMEM.
+
+-1 indices are padding: their DMA is redirected to row 0 and their
+contribution multiplied by 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, row_ref, out_ref):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    scale = jnp.where(idx_ref[b, l] >= 0, 1.0, 0.0).astype(out_ref.dtype)
+    out_ref[...] += scale * row_ref[...]
+
+
+def embedding_bag_pallas(table, indices, *, interpret: bool = False):
+    """table: f32[V, E]; indices: int32[B, L] (-1 pad) -> f32[B, E] (sum)."""
+    B, L = indices.shape
+    V, E = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, L),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda b, l, idx: (jnp.maximum(idx[b, l], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, E), lambda b, l, idx: (b, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, E), table.dtype),
+        interpret=interpret,
+    )(indices, table)

@@ -1,0 +1,220 @@
+"""Pallas TPU kernel: FlashAttention (fwd + bwd) with GQA + sliding window.
+
+The LM-family hillclimb (EXPERIMENTS.md §Perf) showed that pure-XLA
+blockwise attention still pays ~8 HBM passes over every (qc, kc) f32 score
+tile — fusion boundaries around the two dots force tile materialization.
+The kernel keeps tiles in VMEM: HBM traffic collapses to Q/K/V/O (+ dQ/dK/dV
+and recomputed reads in the backward), which is the FlashAttention
+[arXiv:2205.14135] contract.
+
+Layout: q/o are (B, S, H, hd); k/v are (B, S, KV, hd) with G = H // KV
+query heads per KV head (GQA).  Causal always; ``window > 0`` adds a
+sliding-window mask unless the (runtime) ``is_global`` flag is set —
+matching gemma3's interleaved local/global layers with one compiled kernel.
+
+Backward follows the standard recompute scheme: lse is saved by the fwd;
+dq and (dk, dv) are two kernels (dk/dv accumulates across the G query heads
+of each KV head via output-block revisiting on the innermost grid dim).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _tile_mask(q0, k0, qc, kc, window, is_global):
+    qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    kj = k0 + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    m = kj <= qi
+    if window > 0:
+        m = m & (is_global | (kj > qi - window))
+    return m
+
+
+def _fwd_kernel(flags_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                *, kc: int, window: int, scale: float):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (qc, hd)
+    qc = q.shape[0]
+    S = k_ref.shape[1]
+    nk = S // kc
+    is_global = flags_ref[0] > 0
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(ki * kc, kc), 0, :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ki * kc, kc), 0, :].astype(jnp.float32)
+        s = (q @ k.T) * scale  # (qc, kc)
+        msk = _tile_mask(qi * qc, ki * kc, qc, kc, window, is_global)
+        s = jnp.where(msk, s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((qc,), NEG, jnp.float32)
+    l0 = jnp.zeros((qc,), jnp.float32)
+    a0 = jnp.zeros((qc, q.shape[1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, :, 0, :] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0, :, 0] = m + jnp.log(l)
+
+
+def _dq_kernel(flags_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, *, kc: int, window: int, scale: float):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    lse = lse_ref[0, :, 0]
+    delta = delta_ref[0, :, 0]
+    qc = q.shape[0]
+    S = k_ref.shape[1]
+    nk = S // kc
+    is_global = flags_ref[0] > 0
+
+    def body(ki, dq):
+        k = k_ref[0, pl.dslice(ki * kc, kc), 0, :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ki * kc, kc), 0, :].astype(jnp.float32)
+        s = (q @ k.T) * scale
+        msk = _tile_mask(qi * qc, ki * kc, qc, kc, window, is_global)
+        p = jnp.where(msk, jnp.exp(s - lse[:, None]), 0.0)
+        dp = do @ v.T  # (qc, kc)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + ds @ k
+
+    dq = jax.lax.fori_loop(0, nk, body, jnp.zeros_like(q))
+    dq_ref[0, :, 0, :] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(flags_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, *, qc: int, window: int, scale: float):
+    ki = pl.program_id(2)
+    g = pl.program_id(3)
+
+    @pl.when(g == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (kc, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    kc = k.shape[0]
+    S = q_ref.shape[1]
+    nq = S // qc
+    is_global = flags_ref[0] > 0
+
+    def body(qi, carry):
+        dk, dv = carry
+        q = q_ref[0, pl.dslice(qi * qc, qc), 0, :].astype(jnp.float32)
+        do = do_ref[0, pl.dslice(qi * qc, qc), 0, :].astype(jnp.float32)
+        lse = lse_ref[0, pl.dslice(qi * qc, qc), 0]
+        delta = delta_ref[0, pl.dslice(qi * qc, qc), 0]
+        s = (q @ k.T) * scale
+        msk = _tile_mask(qi * qc, ki * kc, qc, kc, window, is_global)
+        p = jnp.where(msk, jnp.exp(s - lse[:, None]), 0.0)  # (qc, kc)
+        dv = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None]) * scale
+        dk = dk + ds.T @ q
+        return dk, dv
+
+    z = jnp.zeros((kc, k.shape[1]), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, nq, body, (z, z))
+    dk_ref[0, :, 0, :] += dk.astype(dk_ref.dtype)
+    dv_ref[0, :, 0, :] += dv.astype(dv_ref.dtype)
+
+
+def _specs(B, S, H, KV, hd, qc, kc, G):
+    q_spec = pl.BlockSpec((1, qc, 1, hd), lambda b, h, qi: (b, qi, h, 0))
+    kv_spec = pl.BlockSpec((1, S, 1, hd), lambda b, h, qi: (b, 0, h // G, 0))
+    lse_spec = pl.BlockSpec((1, qc, 1), lambda b, h, qi: (b, qi, h))
+    return q_spec, kv_spec, lse_spec
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def flash_mha(q, k, v, is_global, window: int = 0, qc: int = 512, kc: int = 1024):
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd); is_global: () bool -> (B,S,H,hd)."""
+    o, _ = _flash_fwd(q, k, v, is_global, window, qc, kc)
+    return o
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _flash_fwd(q, k, v, is_global, window, qc, kc):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qc = min(qc, S)
+    kc = min(kc, S)
+    flags = jnp.asarray(is_global, jnp.int32).reshape(1)
+    q_spec, kv_spec, lse_spec = _specs(B, S, H, KV, hd, qc, kc, G)
+    o, lse = pl.pallas_call(
+        partial(_fwd_kernel, kc=kc, window=window, scale=1.0 / np.sqrt(hd)),
+        grid=(B, H, S // qc),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), q_spec, kv_spec, kv_spec],
+        out_specs=[q_spec, lse_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(flags, q, k, v)
+    return o, (q, k, v, o, lse, flags)
+
+
+def _flash_bwd(window, qc, kc, res, do):
+    q, k, v, o, lse, flags = res
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qc = min(qc, S)
+    kc = min(kc, S)
+    scale = 1.0 / np.sqrt(hd)
+    delta = jnp.einsum("bshd,bshd->bsh", do.astype(jnp.float32),
+                       o.astype(jnp.float32))
+    q_spec, kv_spec, lse_spec = _specs(B, S, H, KV, hd, qc, kc, G)
+
+    dq = pl.pallas_call(
+        partial(_dq_kernel, kc=kc, window=window, scale=scale),
+        grid=(B, H, S // qc),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), q_spec, kv_spec,
+                  kv_spec, q_spec, lse_spec, lse_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        interpret=_interpret(),
+    )(flags, q, k, v, do, lse, delta)
+
+    # dk/dv: grid (B, KV, nk, G); q-heads of one group accumulate in-place
+    qh_spec = pl.BlockSpec((1, S, 1, hd), lambda b, kv_, ki, g: (b, 0, kv_ * G + g, 0))
+    kt_spec = pl.BlockSpec((1, kc, 1, hd), lambda b, kv_, ki, g: (b, ki, kv_, 0))
+    ls_spec = pl.BlockSpec((1, S, 1), lambda b, kv_, ki, g: (b, 0, kv_ * G + g))
+    dk, dv = pl.pallas_call(
+        partial(_dkv_kernel, qc=qc, window=window, scale=scale),
+        grid=(B, KV, S // kc, G),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), qh_spec, kt_spec,
+                  kt_spec, qh_spec, ls_spec, ls_spec],
+        out_specs=[kt_spec, kt_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, KV, hd), k.dtype),
+            jax.ShapeDtypeStruct((B, S, KV, hd), v.dtype),
+        ],
+        interpret=_interpret(),
+    )(flags, q, k, v, do, lse, delta)
+    return dq, dk, dv, None
+
+
+flash_mha.defvjp(lambda q, k, v, ig, w, qc, kc: _flash_fwd(q, k, v, ig, w, qc, kc),
+                 _flash_bwd)

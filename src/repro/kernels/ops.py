@@ -1,0 +1,102 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each wrapper pads inputs to kernel block multiples, dispatches to the Pallas
+implementation (interpret mode on CPU — the kernels TARGET TPU; interpret
+executes the same kernel body for validation), slices padding off, and
+matches the corresponding ``ref.py`` oracle exactly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.closure_expand import closure_expand_pallas
+from repro.kernels.ell_spmm import ell_spmm_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.interval_filter import interval_filter_pallas
+from repro.kernels.msc_select import msc_select_pallas
+from repro.kernels.pair_search import pair_search_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad1(x, m, fill):
+    n = x.shape[0]
+    p = (-n) % m
+    if p == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((p, *x.shape[1:]), fill, x.dtype)])
+
+
+@partial(jax.jit, static_argnames=("block",))
+def interval_filter(p, o, params, block: int = 4096):
+    """LiteMat triple filter; params = int32[4] (plo, phi, olo, ohi) -> bool[N]."""
+    n = p.shape[0]
+    pp = _pad1(p, block, np.int32(np.iinfo(np.int32).max))
+    po = _pad1(o, block, np.int32(np.iinfo(np.int32).max))
+    out = interval_filter_pallas(pp, po, params, block=block, interpret=_interpret())
+    return out[:n].astype(bool)
+
+
+@partial(jax.jit, static_argnames=("group_block",))
+def msc_select(conc, bounds, group_block: int = 128):
+    """Grouped MSC keep-mask; conc/bounds int32[G, K] (-1 pad) -> bool[G, K]."""
+    G = conc.shape[0]
+    pc = _pad1(conc, group_block, np.int32(-1))
+    pb = _pad1(bounds, group_block, np.int32(-1))
+    out = msc_select_pallas(pc, pb, group_block=group_block, interpret=_interpret())
+    return out[:G].astype(bool)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def closure_expand(conc, sorted_ids, anc_table, block: int = 1024):
+    """Ancestor-row expansion; conc int32[N] -> int32[N, D]."""
+    n = conc.shape[0]
+    pc = _pad1(conc, block, np.int32(-1))
+    out = closure_expand_pallas(pc, sorted_ids, anc_table, block=block,
+                                interpret=_interpret())
+    return out[:n]
+
+
+@jax.jit
+def embedding_bag(table, indices):
+    """Bag-sum lookup; table f32[V, E], indices int32[B, L] (-1 pad) -> f32[B, E]."""
+    return embedding_bag_pallas(table, indices, interpret=_interpret())
+
+
+@jax.jit
+def embedding_bag_mean(table, indices):
+    s = embedding_bag(table, indices)
+    cnt = jnp.maximum((indices >= 0).sum(axis=1, keepdims=True), 1).astype(table.dtype)
+    return s / cnt
+
+
+@jax.jit
+def ell_spmm(x, neighbors, weights):
+    """Padded-neighbor SpMM; x f32[Ns,F], nbr int32[N,K], w f32[N,K] -> f32[N,F]."""
+    return ell_spmm_pallas(x, neighbors, weights, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block",))
+def pair_search(table_hi, table_lo, qhi, qlo, block: int = 1024):
+    """Lexicographic binary search (left); -> int32 positions."""
+    n = qhi.shape[0]
+    mx = np.int32(np.iinfo(np.int32).max)
+    ph = _pad1(qhi, block, mx)
+    pl_ = _pad1(qlo, block, mx)
+    out = pair_search_pallas(table_hi, table_lo, ph, pl_, block=block,
+                             interpret=_interpret())
+    return out[:n]
+
+
+__all__ = [
+    "interval_filter", "msc_select", "closure_expand",
+    "embedding_bag", "embedding_bag_mean", "ell_spmm", "pair_search", "ref",
+]

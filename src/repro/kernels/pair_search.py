@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: binary search over lexicographic (hi, lo) pair tables.
+
+The dictionary hot op (paper §III.B locate): TPUs have no fast int64, so
+62-bit fingerprints live as two int32 planes and every lookup is a
+lexicographic binary search.  The sorted table planes are VMEM-resident
+(constant index map); queries stream in blocks; ~log2(T) vector-gather steps
+per block.  Contract: ref_pair_search (= pair64.searchsorted_pair 'left').
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _kernel(thi_ref, tlo_ref, qhi_ref, qlo_ref, out_ref):
+    qhi = qhi_ref[...]
+    qlo = qlo_ref[...]
+    T = thi_ref.shape[0]
+    steps = max(1, int(np.ceil(np.log2(max(T, 2)))) + 1)
+
+    def body(_, carry):
+        lo_b, hi_b = carry
+        mid = (lo_b + hi_b) >> 1
+        mh = thi_ref[mid]
+        ml = tlo_ref[mid]
+        go = (mh < qhi) | ((mh == qhi) & (ml < qlo))
+        lo_n = jnp.where(go & (lo_b < hi_b), mid + 1, lo_b)
+        hi_n = jnp.where((~go) & (lo_b < hi_b), mid, hi_b)
+        return lo_n, hi_n
+
+    lo0 = jnp.zeros(qhi.shape, jnp.int32)
+    hi0 = jnp.full(qhi.shape, T, jnp.int32)
+    pos, _ = lax.fori_loop(0, steps, body, (lo0, hi0))
+    out_ref[...] = pos
+
+
+def pair_search_pallas(table_hi, table_lo, qhi, qlo, *, block: int = DEFAULT_BLOCK,
+                       interpret: bool = False):
+    """Lex-sorted table planes int32[T]; queries int32[N] -> int32[N]."""
+    T = table_hi.shape[0]
+    n = qhi.shape[0]
+    grid = (pl.cdiv(n, block),)
+    tbl = pl.BlockSpec((T,), lambda i: (0,))
+    q = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[tbl, tbl, q, q],
+        out_specs=q,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(table_hi, table_lo, qhi, qlo)

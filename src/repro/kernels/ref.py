@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each ``ref_*`` function defines the exact semantics its kernel must match;
+tests sweep shapes/dtypes and ``assert_allclose`` kernel-vs-ref (interpret
+mode on CPU, compiled on real TPUs).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(np.iinfo(np.int32).max)
+
+
+def ref_interval_filter(s, p, o, plo, phi, olo, ohi, type_id):
+    """LiteMat triple-pattern mask: p in [plo, phi) AND (o-interval applies
+    only when the pattern is an rdf:type pattern, signalled by plo==type_id
+    and phi==type_id+1; otherwise o in [olo, ohi) with olo=INT_MIN meaning
+    'unconstrained')."""
+    m = (p >= plo) & (p < phi)
+    m = m & ((o >= olo) & (o < ohi))
+    return m
+
+
+def ref_msc_select(conc, bounds):
+    """Grouped MSC: conc/bounds are (G, K) candidate concept ids (-1 pad).
+
+    keep[g, j] = candidate j is valid and no other candidate of group g lies
+    strictly inside (conc[g, j], bounds[g, j]) and no duplicate with a lower
+    index exists (first occurrence wins).
+    """
+    valid = conc >= 0
+    c1 = conc[:, :, None]  # candidate under test (j)
+    b1 = bounds[:, :, None]
+    c2 = conc[:, None, :]  # the other candidates (k)
+    v2 = valid[:, None, :]
+    strict_desc = v2 & (c2 > c1) & (c2 < b1)
+    K = conc.shape[1]
+    earlier = jnp.arange(K)[None, :, None] > jnp.arange(K)[None, None, :]
+    dup = v2 & (c2 == c1) & earlier
+    drop = (strict_desc | dup).any(axis=2)
+    return valid & ~drop
+
+
+def ref_closure_expand(conc, sorted_ids, anc_table):
+    """For each concept id, its DAG-ancestor id row (-1 where absent/pad)."""
+    pos = jnp.clip(jnp.searchsorted(sorted_ids, conc), 0, sorted_ids.shape[0] - 1)
+    hit = sorted_ids[pos] == conc
+    return jnp.where(hit[:, None], anc_table[pos], -1)
+
+
+def ref_embedding_bag(table, indices, mode: str = "sum"):
+    """Bags of fixed width L with -1 padding: out[b] = reduce(table[idx])."""
+    valid = indices >= 0
+    rows = table[jnp.clip(indices, 0, table.shape[0] - 1)]  # (B, L, E)
+    rows = rows * valid[..., None].astype(table.dtype)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(table.dtype)
+        out = out / cnt
+    return out
+
+
+def ref_ell_spmm(x, neighbors, weights):
+    """Padded-neighbor SpMM: out[n] = sum_k w[n,k] * x[nbr[n,k]] (-1 pad)."""
+    valid = neighbors >= 0
+    rows = x[jnp.clip(neighbors, 0, x.shape[0] - 1)]  # (N, K, F)
+    w = jnp.where(valid, weights, 0.0).astype(x.dtype)
+    return (rows * w[..., None]).sum(axis=1)
+
+
+def ref_pair_search(table_hi, table_lo, qhi, qlo):
+    """Left insertion point of each query pair in a lex-sorted pair table."""
+    from repro.utils import pair64
+
+    return pair64.searchsorted_pair(table_hi, table_lo, qhi, qlo, side="left")

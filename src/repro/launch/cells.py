@@ -1,0 +1,298 @@
+"""Cell builder: (architecture x input-shape) -> lowerable step + shardings.
+
+A *cell* is everything the dry-run needs: the jit-able step function, its
+abstract (ShapeDtypeStruct) arguments — no device allocation — the
+PartitionSpec tree for in_shardings, and analytic MODEL_FLOPS for the
+roofline's useful-compute ratio.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import SHAPE_TABLES, get_arch
+from repro.launch import shardings as shd
+from repro.launch.mesh import all_axes, dp_axes
+from repro.models import lm as lm_lib
+from repro.models.gnn import equiformer as eq_lib
+from repro.models.gnn import gat as gat_lib
+from repro.models.gnn import gatedgcn as ggcn_lib
+from repro.models.gnn import schnet as schnet_lib
+from repro.models.gnn.common import cross_entropy_nodes, seg_sum
+from repro.models.recsys import mind as mind_lib
+from repro.train.optimizer import init_opt_state
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _pad_up(n: int, m: int) -> int:
+    """Row counts of explicitly sharded arrays must divide the mesh size —
+    the data pipeline pads with invalid rows (-1 edges / masked nodes), so
+    the launcher rounds the static shapes up.  Logical sizes stay in meta."""
+    return -(-n // m) * m
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_id: str
+    family: str
+    kind: str  # train | prefill | decode | serve
+    fn: object
+    abstract_args: tuple
+    in_specs: tuple  # PartitionSpec pytree matching abstract_args
+    model_flops: float
+    meta: dict = field(default_factory=dict)
+
+    def shardings(self, mesh):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), self.in_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _apply_overrides(cfg, overrides):
+    if not overrides:
+        return cfg
+    import dataclasses
+
+    return dataclasses.replace(cfg, **overrides)
+
+
+def _lm_cell(mod, shape_id, mesh, overrides=None) -> Cell:
+    from repro.configs.shapes import LM_SHAPES
+
+    cfg = _apply_overrides(mod.full_config(), overrides)
+    shp = LM_SHAPES[shape_id]
+    B, S = shp["global_batch"], shp["seq_len"]
+    kind = shp["kind"]
+    key = jax.random.key(0)
+    params_shape = jax.eval_shape(lambda k: lm_lib.init_params(k, cfg), key)
+    pspecs = shd.lm_param_specs(params_shape, mesh)
+    nparams = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_shape))
+    flops_tok = cfg.model_flops_per_token()  # 6*N_active
+
+    if kind == "train":
+        opt_shape = jax.eval_shape(init_opt_state, params_shape)
+        ospecs = shd.opt_state_specs(pspecs)
+        batch = {
+            "tokens": sds((B, S), I32),
+            "targets": sds((B, S), I32),
+            "mask": sds((B, S), F32),
+        }
+        bspecs = shd.lm_batch_spec(mesh)
+        fn = lm_lib.make_train_step(cfg)
+        return Cell(mod.ARCH_ID, shape_id, "lm", kind, fn,
+                    (params_shape, opt_shape, batch), (pspecs, ospecs, bspecs),
+                    model_flops=flops_tok * B * S,
+                    meta=dict(n_params=nparams, tokens=B * S))
+    if kind == "prefill":
+        tokens = sds((B, S), I32)
+        fn = lm_lib.make_prefill_step(cfg)
+        return Cell(mod.ARCH_ID, shape_id, "lm", kind, fn,
+                    (params_shape, tokens), (pspecs, P(dp_axes(mesh), None)),
+                    model_flops=flops_tok / 3.0 * B * S,  # fwd-only = 2N
+                    meta=dict(n_params=nparams, tokens=B * S))
+    # decode
+    cache_shape = jax.eval_shape(lambda: lm_lib.init_cache(cfg, B, S))
+    cspecs = shd.lm_cache_specs(cache_shape, mesh)
+    token = sds((B, 1), I32)
+    pos = sds((), I32)
+    fn = lm_lib.make_decode_step(cfg)
+    return Cell(mod.ARCH_ID, shape_id, "lm", kind, fn,
+                (params_shape, cache_shape, token, pos),
+                (pspecs, cspecs, P(dp_axes(mesh), None) if B > 1 else P(), P()),
+                model_flops=flops_tok / 3.0 * B,
+                meta=dict(n_params=nparams, tokens=B, cache_len=S))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+_GNN_MODELS = {
+    "gat": gat_lib, "gatedgcn": ggcn_lib, "schnet": schnet_lib,
+    "equiformer": eq_lib,
+}
+
+
+def _gnn_graph_spec(shp: dict, pad_to: int = 1):
+    if "batch" in shp:  # molecule: batched small graphs
+        G = shp["batch"]
+        N = G * shp["n_nodes"]
+        E = G * shp["n_edges"]
+    elif "batch_nodes" in shp:  # sampled block
+        from repro.data.graphs import block_shape_for
+
+        N, E = block_shape_for(shp["batch_nodes"], shp["fanouts"])
+        G = 0
+    else:
+        N, E = shp["n_nodes"], shp["n_edges"]
+        G = 0
+    N = _pad_up(N, pad_to)
+    E = _pad_up(E, pad_to)
+    g = {
+        "nodes": sds((N, shp["d_feat"]), F32),
+        "edges": sds((E, 2), I32),
+        "pos": sds((N, 3), F32),
+        "species": sds((N,), I32),
+    }
+    if shp["task"] == "cls":
+        g["labels"] = sds((N,), I32)
+        g["train_mask"] = sds((N,), F32)
+    else:
+        g["energy"] = sds((max(G, 1),), F32)
+        g["batch_seg"] = sds((N,), I32)
+    return g
+
+
+def gnn_unified_loss(model_id: str, params, graph, cfg, task: str):
+    mod = _GNN_MODELS[model_id]
+    if task == "cls":
+        logits = mod.forward(params, graph, cfg)
+        return cross_entropy_nodes(logits, graph["labels"], graph["train_mask"])
+    # regression: per-graph energy = sum of node outputs
+    out = mod.forward(params, graph, cfg)
+    G = graph["energy"].shape[0]
+    if out.ndim == 1:  # schnet already returns per-graph energies
+        e = out
+    else:
+        e = seg_sum(out[:, 0], graph["batch_seg"], G)
+    return jnp.mean((e - graph["energy"]) ** 2)
+
+
+def make_gnn_train_step(model_id: str, cfg, task: str, lr: float = 1e-3):
+    def step(params, graph):
+        loss, grads = jax.value_and_grad(gnn_unified_loss, argnums=1)(
+            model_id, params, graph, cfg, task
+        )
+        params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return params, loss
+
+    return step
+
+
+def _gnn_analytic_flops(model_id, cfg, N, E, d_feat):
+    """Coarse useful-FLOPs estimate (matmul terms only, x3 for fwd+bwd)."""
+    if model_id == "gat":
+        per = 2 * N * d_feat * cfg.n_heads * cfg.d_hidden + 6 * E * cfg.n_heads * cfg.d_hidden
+        f = per * cfg.n_layers
+    elif model_id == "gatedgcn":
+        d = cfg.d_hidden
+        f = cfg.n_layers * (5 * 2 * N * d * d + 4 * E * d) + 2 * N * d_feat * d
+    elif model_id == "schnet":
+        d, r = cfg.d_hidden, cfg.n_rbf
+        f = cfg.n_interactions * (2 * E * (r * d + d * d) + 4 * N * d * d)
+    else:  # equiformer: SO(2) conv + 2 constant-J rotations per edge
+        C = cfg.channels
+        coeff = (cfg.l_max + 1) ** 2
+        so2 = sum(
+            2 * (2 * n_l * C) * (n_l * C)
+            for n_l in [cfg.l_max + 1] + [cfg.l_max + 1 - m for m in range(1, cfg.m_max + 1)]
+        )
+        rot = 4 * 2 * coeff * coeff * C
+        f = cfg.n_layers * E * (so2 + rot)
+    return 3.0 * f  # fwd+bwd
+
+
+def _gnn_cell(mod, shape_id, mesh, overrides=None) -> Cell:
+    from repro.configs.shapes import GNN_SHAPES
+
+    shp = GNN_SHAPES[shape_id]
+    graph = _gnn_graph_spec(shp, pad_to=int(mesh.devices.size))
+    N, E = graph["nodes"].shape[0], graph["edges"].shape[0]
+    cfg = mod.full_config(
+        d_feat=shp["d_feat"],
+        n_classes=(shp["n_classes"] if shp["task"] == "cls" else 1),
+        edge_chunks=shp["edge_chunks"],
+    )
+    ov = dict(overrides or {})
+    if not hasattr(cfg, "rotate_restrict"):
+        ov.pop("rotate_restrict", None)  # equiformer-only knobs
+        ov.pop("edge_dtype", None)
+    cfg = _apply_overrides(cfg, ov)
+    model_id = mod.MODEL
+    key = jax.random.key(0)
+    params_shape = jax.eval_shape(
+        lambda k: _GNN_MODELS[model_id].init_params(k, cfg), key
+    )
+    pspecs = jax.tree.map(lambda _: P(), params_shape)
+    gspecs = shd.gnn_graph_specs(graph, mesh, shard_nodes=shp["shard_nodes"])
+    fn = make_gnn_train_step(model_id, cfg, shp["task"])
+    return Cell(mod.ARCH_ID, shape_id, "gnn", "train", fn,
+                (params_shape, graph), (pspecs, gspecs),
+                model_flops=_gnn_analytic_flops(model_id, cfg, N, E, shp["d_feat"]),
+                meta=dict(n_nodes=N, n_edges=E))
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_cell(mod, shape_id, mesh, overrides=None) -> Cell:
+    from repro.configs.shapes import RECSYS_SHAPES
+
+    shp = RECSYS_SHAPES[shape_id]
+    cfg = _apply_overrides(mod.full_config(), overrides)
+    key = jax.random.key(0)
+    params_shape = jax.eval_shape(lambda k: mind_lib.init_params(k, cfg), key)
+    pspecs = shd.recsys_param_specs(params_shape, mesh)
+    B = shp["batch"]
+    K, D, L = cfg.n_interests, cfg.embed_dim, cfg.hist_len
+    route_flops = 2 * B * L * D * D + cfg.capsule_iters * 4 * B * L * K * D
+
+    if shp["kind"] == "train":
+        batch = {"hist": sds((B, L), I32), "target": sds((B,), I32)}
+        bspecs = {"hist": P(dp_axes(mesh), None), "target": P(dp_axes(mesh))}
+        fn = mind_lib.make_train_step(cfg)
+        flops = 3.0 * (route_flops + 2 * B * B * D)  # + in-batch softmax
+        return Cell(mod.ARCH_ID, shape_id, "recsys", "train", fn,
+                    (params_shape, batch), (pspecs, bspecs),
+                    model_flops=flops, meta=dict(batch=B))
+    C = _pad_up(shp["n_candidates"], int(mesh.devices.size))
+    args = (
+        params_shape,
+        sds((B, L), I32),  # hist
+        sds((C,), I32),  # candidate ids
+        sds((C,), I32),  # candidate LiteMat category ids
+        sds((), I32), sds((), I32),  # category interval
+    )
+    hist_spec = P(dp_axes(mesh), None) if B >= 32 else P()
+    specs = (pspecs, hist_spec, P(all_axes(mesh)), P(all_axes(mesh)), P(), P())
+    if getattr(cfg, "serve_impl", "gather") == "sharded_topk":
+        fn = mind_lib.make_serve_step_sharded(cfg, mesh)
+    else:
+        fn = mind_lib.make_serve_step(cfg)
+    flops = route_flops + 2 * B * C * K * D
+    return Cell(mod.ARCH_ID, shape_id, "recsys", "serve", fn, args, specs,
+                model_flops=flops, meta=dict(batch=B, candidates=C))
+
+
+def build_cell(arch_id: str, shape_id: str, mesh, variant: str | None = None) -> Cell:
+    mod = get_arch(arch_id)
+    overrides = None
+    if variant:
+        from repro.configs.registry import variant_overrides
+
+        overrides = variant_overrides(variant, mod.FAMILY)
+    if mod.FAMILY == "lm":
+        return _lm_cell(mod, shape_id, mesh, overrides)
+    if mod.FAMILY == "gnn":
+        return _gnn_cell(mod, shape_id, mesh, overrides)
+    return _recsys_cell(mod, shape_id, mesh, overrides)

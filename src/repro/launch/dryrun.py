@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract roofline terms from the compiled artifact.
+
+The two lines above MUST stay the first statements of this module: jax
+locks the device count at first initialization, and only the dry-run wants
+512 placeholder devices (smoke tests and benches see the real single CPU).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Results are cached as JSON under reports/dryrun/ (one file per
+arch x shape x mesh) so long sweeps are resumable.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.registry import SKIPS, all_cells  # noqa: E402
+from repro.launch.cells import build_cell  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+# TPU v5e hardware model (targets; this host only compiles)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool, outdir: Path,
+             force: bool = False, variant: str | None = None) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch_id}@{variant}" if variant else arch_id
+    out_path = outdir / f"{tag}__{shape_id}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    rec = dict(arch=tag, shape=shape_id, mesh=mesh_name, status="error",
+               variant=variant)
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch_id, shape_id, mesh, variant=variant)
+        jfn = jax.jit(cell.fn, in_shardings=cell.shardings(mesh))
+        with mesh:
+            lowered = jfn.lower(*cell.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = {}
+            try:
+                ma = compiled.memory_analysis()
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes"):
+                    v = getattr(ma, k, None)
+                    if v is not None:
+                        mem[k] = int(v)
+            except Exception as e:  # noqa: BLE001
+                mem["error"] = str(e)
+
+            cost = {}
+            try:
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0]
+                cost = {k: float(v) for k, v in ca.items()
+                        if isinstance(v, (int, float))}
+            except Exception as e:  # noqa: BLE001
+                cost["error"] = str(e)
+
+            # loop-aware HLO analysis (scan bodies x trip counts) — see
+            # hlo_analysis.py; cost_analysis counts loop bodies once.
+            hlo = analyze_hlo(compiled.as_text())
+
+        chips = mesh.devices.size
+        flops = hlo["flops"]  # per device
+        bytes_acc = hlo["hbm_bytes"]
+        coll = hlo["collectives"]
+        terms = dict(
+            t_compute=flops / PEAK_FLOPS,
+            t_memory=bytes_acc / HBM_BW,
+            t_collective=coll.get("total", 0.0) / ICI_BW,
+        )
+        dom = max(terms, key=terms.get)
+        rec.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem,
+            cost=cost,
+            hlo_flops_per_chip=flops,
+            hlo_bytes_per_chip=bytes_acc,
+            collective_bytes=coll,
+            roofline=terms,
+            dominant=dom,
+            model_flops=cell.model_flops,
+            model_flops_per_chip=cell.model_flops / chips,
+            useful_ratio=(cell.model_flops / chips) / flops if flops else None,
+            meta=cell.meta,
+        )
+    except Exception:  # noqa: BLE001
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    outdir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="optimization variant from configs.registry.VARIANTS")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = (
+        [(a, s, None) for a, s, _ in all_cells()]
+        if args.all
+        else [(args.arch, args.shape, SKIPS.get((args.arch, args.shape)))]
+    )
+    for arch_id, shape_id, skip in cells:
+        if skip:
+            print(f"SKIP {arch_id} x {shape_id}: {skip}")
+            continue
+        for mp in meshes:
+            rec = run_cell(arch_id, shape_id, mp, outdir, force=args.force,
+                           variant=args.variant)
+            vtag = f"@{args.variant}" if args.variant else ""
+            tag = f"{arch_id}{vtag} x {shape_id} x {'multi' if mp else 'single'}"
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(
+                    f"OK   {tag}: compile={rec['compile_s']}s "
+                    f"compute={r['t_compute']:.3e}s mem={r['t_memory']:.3e}s "
+                    f"coll={r['t_collective']:.3e}s dom={rec['dominant']}"
+                )
+            else:
+                print(f"FAIL {tag}\n{rec.get('traceback', '')[-1500:]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Post-SPMD HLO analysis: loop-aware FLOPs, HBM bytes, collective bytes.
+
+``compiled.cost_analysis()`` counts each op ONCE, but layer stacks are
+``lax.scan`` while-loops — a 60-layer body would be under-counted 60x.  This
+module re-derives the three roofline inputs from the partitioned HLO text
+with loop multipliers:
+
+  * computations are split and a call graph built (while bodies/conditions,
+    fusion callees, reducers);
+  * while trip counts come from the loop-condition constants;
+  * FLOPs: every ``dot`` contributes 2 * prod(out_shape) * K (K = product of
+    the lhs contracting dims), times its computation's loop multiplier;
+  * HBM bytes: per *top-level* op (fusion callees excluded — the callsite
+    already carries operand/output shapes), operands + outputs, times
+    multiplier — the standard post-fusion traffic model.  Windowed accesses
+    are charged what they actually touch: dynamic-slice/slice/gather count
+    their OUTPUT bytes, dynamic-update-slice/scatter 2x their update bytes
+    (read-modify-write of the window, the array itself aliases in place).
+    Fusion callsites get a parameter-usage analysis: a fusion parameter
+    consumed ONLY by slicing ops inside the callee is charged those ops'
+    output bytes instead of the full array — otherwise a KV-cache scan would
+    be billed the whole cache every iteration;
+  * collective bytes: operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute, times multiplier.
+
+All byte counts are PER DEVICE (the module is the per-device program), so
+``T = bytes / bw`` directly; global figures are x chips.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_WHILE = re.compile(r"condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|branch_computations)=\{?%?([\w\.\-, %]+)\}?")
+_CONST = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPREF = re.compile(r"%[\w\.\-]+")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes_of(type_str: str):
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        out.append((dt, d))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    # --- split into computations --------------------------------------------
+    comps: dict = {}
+    order = []
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        if "->" in line and line.rstrip().endswith("{"):
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                order.append(cur)
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    if entry is None:
+        entry = order[-1] if order else None
+
+    # --- per computation: defs, dots, op bytes, collectives, calls ----------
+    defs = {}  # comp -> var -> shapes list
+    flops_c = defaultdict(float)
+    bytes_c = defaultdict(float)
+    coll_c = {c: defaultdict(float) for c in comps}
+    calls = defaultdict(list)  # comp -> [(callee, trip_comp_or_None)]
+    fusion_callees = set()
+    fusion_calls = []  # (caller, callee, operand_refs, out_bytes)
+    cond_consts = {}
+    # param-usage: comp -> param_index -> ("sliced", window_bytes) | "full"
+    param_use = defaultdict(dict)
+    param_order = defaultdict(list)  # comp -> [param var names]
+
+    WINDOWED_READ = ("dynamic-slice", "slice", "gather")
+    WINDOWED_WRITE = ("dynamic-update-slice", "scatter")
+    NOBYTES = ("parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "iota")
+
+    for c, lines in comps.items():
+        dd = {}
+        defs[c] = dd
+        for line in lines:
+            m = _DEF.match(line)
+            if not m:
+                continue
+            var, rhs = m.group(1), m.group(2)
+            # strip metadata (shapes inside metadata strings would pollute)
+            body = rhs.split(", metadata=")[0]
+            # output type = everything before the opcode's '('; first shapes
+            paren = body.find("(")
+            head = body[:paren] if paren > 0 else body
+            out_shapes = _shapes_of(head)
+            dd[var] = out_shapes
+
+            opm = re.match(r"^[^=]*?\s([a-z][a-z0-9\-]*)\(", " " + body)
+            opcode = opm.group(1) if opm else ""
+            operand_str = body[paren:] if paren > 0 else ""
+            oprefs = _OPREF.findall(operand_str.split("),")[0]) if paren > 0 else []
+
+            if opcode == "dot":
+                cm = _CONTRACT.search(body)
+                k = 1
+                if cm and oprefs:
+                    lhs_shapes = dd.get(oprefs[0], [])
+                    if lhs_shapes:
+                        dims = lhs_shapes[0][1]
+                        for i in [int(x) for x in cm.group(1).split(",") if x]:
+                            if i < len(dims):
+                                k *= dims[i]
+                n_out = 1
+                for dt, dims2 in out_shapes[:1]:
+                    for d in dims2:
+                        n_out *= d
+                flops_c[c] += 2.0 * n_out * k
+
+            # track parameters + their uses (for fusion-callee analysis)
+            if opcode == "parameter":
+                param_order[c].append(var)
+                param_use[c][var] = None  # unseen yet
+            else:
+                for r in oprefs:
+                    if r in param_use[c]:
+                        cur = param_use[c][r]
+                        if opcode in WINDOWED_READ and cur != "full":
+                            w = _bytes_of(out_shapes)
+                            param_use[c][r] = ("sliced", (cur[1] if cur else 0) + w)
+                        else:
+                            param_use[c][r] = "full"
+
+            # bytes: post-fusion HBM traffic model (see module docstring)
+            if opcode == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", body)
+                fusion_calls.append(
+                    (c, fm.group(1) if fm else None, list(oprefs), _bytes_of(out_shapes))
+                )
+            elif opcode in WINDOWED_READ:
+                bytes_c[c] += 2 * _bytes_of(out_shapes)  # window read + write
+            elif opcode in WINDOWED_WRITE:
+                upd = _bytes_of(dd.get(oprefs[1], [])) if len(oprefs) > 1 else 0
+                bytes_c[c] += 2 * upd
+            elif opcode not in NOBYTES:
+                ob = sum(_bytes_of(dd.get(r, [])) for r in oprefs)
+                bytes_c[c] += ob + _bytes_of(out_shapes)
+
+            wm = _WHILE.search(body)
+            if wm:
+                calls[c].append((wm.group(2), wm.group(1)))
+                calls[c].append((wm.group(1), wm.group(1)))
+            elif "calls=" in body or "to_apply=" in body or "branch_computations=" in body:
+                for cm2 in _CALLS.finditer(body):
+                    for callee in cm2.group(1).split(","):
+                        callee = callee.strip().lstrip("%")
+                        if callee in comps:
+                            calls[c].append((callee, None))
+                            if opcode == "fusion":
+                                fusion_callees.add(callee)
+
+            for op in COLLECTIVES:
+                if opcode in (op, op + "-start"):
+                    b = sum(_bytes_of(dd.get(r, [])) for r in oprefs)
+                    if b == 0:
+                        b = _bytes_of(out_shapes)
+                    coll_c[c][op] += b
+                    break
+
+    # resolve fusion callsite bytes with the callee's parameter usage
+    for caller, callee, oprefs, out_b in fusion_calls:
+        b = float(out_b)
+        params = param_order.get(callee, [])
+        dd = defs.get(caller, {})
+        for i, opr in enumerate(oprefs):
+            full_b = _bytes_of(dd.get(opr, []))
+            usage = param_use.get(callee, {}).get(params[i]) if i < len(params) else "full"
+            if usage is None:
+                continue  # dead parameter
+            if isinstance(usage, tuple):  # consumed only via slicing ops
+                b += min(full_b, usage[1])
+            else:
+                b += full_b
+        bytes_c[caller] += b
+
+    for c, lines in comps.items():
+        consts = [int(x) for line in lines for x in _CONST.findall(line)]
+        cond_consts[c] = max(consts) if consts else 1
+
+    # --- multiplier propagation ---------------------------------------------
+    mult = defaultdict(float)
+
+    def walk(c, m, depth=0):
+        if c not in comps or depth > 32:
+            return
+        if mult[c] >= m:
+            return
+        mult[c] = m
+        for callee, trip_comp in calls[c]:
+            k = m * max(1, cond_consts.get(trip_comp, 1)) if trip_comp else m
+            walk(callee, k, depth + 1)
+
+    if entry:
+        walk(entry, 1.0)
+
+    flops = sum(f * (mult.get(c, 1.0) or 1.0) for c, f in flops_c.items())
+    hbm = sum(
+        b * (mult.get(c, 1.0) or 1.0)
+        for c, b in bytes_c.items()
+        if c not in fusion_callees
+    )
+    coll = defaultdict(float)
+    for c, d in coll_c.items():
+        for op, b in d.items():
+            coll[op] += b * (mult.get(c, 1.0) or 1.0)
+    coll["total"] = sum(v for k, v in coll.items() if k != "total")
+    return dict(
+        flops=flops,
+        hbm_bytes=hbm,
+        collectives=dict(coll),
+        n_computations=len(comps),
+    )
+
+
+def analyze_collectives(hlo_text: str) -> dict:
+    """Back-compat helper: collective byte totals only."""
+    return analyze_hlo(hlo_text)["collectives"]

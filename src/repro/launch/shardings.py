@@ -1,0 +1,161 @@
+"""Sharding rules per model family (GSPMD PartitionSpecs).
+
+LM: FSDP over the data-parallel axes + tensor/expert parallel over 'model'.
+GNN: edge/node row sharding.  recsys: row-sharded embedding tables.
+Every rule guards divisibility — a dimension is only sharded when the axis
+size divides it, so one rule set covers gemma-2b (kv=1) and dsv2 (kv=128)
+alike.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import all_axes, axis_sizes, dp_axes
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _axes_size(sizes, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def lm_param_specs(params_shape, mesh):
+    """Path-based PartitionSpec assignment for the LM family."""
+    sizes = axis_sizes(mesh)
+    fsdp = dp_axes(mesh)
+    fs = _axes_size(sizes, fsdp)
+    ms = sizes.get("model", 1)
+
+    def rule(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        name = keys[-1]
+        shp = leaf.shape
+        scanned = "layers" in keys
+
+        def m(dim):  # 'model' if divisible
+            return "model" if _div(shp[dim], ms) else None
+
+        def f(dim):  # fsdp axes if divisible
+            return fsdp if _div(shp[dim], fs) else None
+
+        if name == "embed":
+            return P(m(0), f(1))
+        if name in ("wq", "wk", "wv"):  # (L,) d, H, hd
+            o = 1 if scanned else 0
+            return P(*([None] * o), f(o), m(o + 1), None)
+        if name == "wo" and len(shp) == (4 if scanned else 3):  # attn out
+            o = 1 if scanned else 0
+            return P(*([None] * o), m(o), None, f(o + 2))
+        if name in ("wuq", "wuk", "wuv"):  # (L,) lora, H, hd
+            o = 1 if scanned else 0
+            return P(*([None] * o), None, m(o + 1), None)
+        if name in ("wdq", "wdkv", "wkr"):  # (L,) d, r
+            o = 1 if scanned else 0
+            return P(*([None] * o), f(o), None)
+        if name in ("wi", "wg") and len(shp) == (4 if scanned else 3):  # MoE (L,)E,d,ff
+            o = 1 if scanned else 0
+            return P(*([None] * o), m(o), f(o + 1), None)
+        if name in ("wi", "wg"):  # dense (L,) d, ff
+            o = 1 if scanned else 0
+            return P(*([None] * o), f(o), m(o + 1))
+        if name == "wo":  # dense (L,) ff, d  OR MoE (L,) E, ff, d
+            o = 1 if scanned else 0
+            if len(shp) - o == 3:  # MoE
+                return P(*([None] * o), m(o), None, f(o + 2))
+            return P(*([None] * o), m(o), f(o + 1))
+        if name == "router":  # (L,) d, E
+            o = 1 if scanned else 0
+            return P(*([None] * o), f(o), None)
+        return P()  # norms & misc: replicated
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def lm_batch_spec(mesh):
+    return {k: P(dp_axes(mesh), None) for k in ("tokens", "targets", "mask")}
+
+
+def lm_cache_specs(cache_shape, mesh):
+    """KV caches: batch over dp axes when divisible, else seq over axes."""
+    sizes = axis_sizes(mesh)
+    fsdp = dp_axes(mesh)
+    fs = _axes_size(sizes, fsdp)
+    ms = sizes.get("model", 1)
+
+    def rule(path, leaf):
+        shp = leaf.shape  # (L, B, S, ...rest)
+        B, S = shp[1], shp[2]
+        rest = len(shp) - 3
+        if _div(B, fs) and B >= fs:
+            if rest >= 1 and _div(shp[3], ms):  # shard KV heads / latent dim
+                return P(None, fsdp, None, "model", *([None] * (rest - 1)))
+            if _div(S, ms):
+                return P(None, fsdp, "model", *([None] * rest))
+            return P(None, fsdp, *([None] * (rest + 1)))
+        # tiny batch (long-context): shard the sequence over everything
+        ax = all_axes(mesh)
+        if _div(S, _axes_size(sizes, ax)):
+            return P(None, None, ax, *([None] * rest))
+        if _div(S, ms):
+            return P(None, None, "model", *([None] * rest))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def replicated(tree_shape, mesh):
+    return jax.tree.map(lambda _: P(), tree_shape)
+
+
+def rows_over(axes):
+    def rule(leaf_shape):
+        return P(axes, *([None] * (len(leaf_shape.shape) - 1)))
+
+    return rule
+
+
+def gnn_graph_specs(graph_shape, mesh, shard_nodes: bool):
+    """Edges always row-sharded; nodes row-sharded on the big graphs."""
+    ax = all_axes(mesh)
+
+    def rule(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        name = keys[-1]
+        if name in ("edges", "edge_feat"):
+            return P(ax, *([None] * (leaf.ndim - 1)))
+        if name in ("nodes", "pos", "species", "labels", "train_mask", "batch_seg"):
+            if shard_nodes:
+                return P(ax, *([None] * (leaf.ndim - 1)))
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, graph_shape)
+
+
+def recsys_param_specs(params_shape, mesh):
+    ax = all_axes(mesh)
+
+    def rule(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "embed":
+            return P(ax, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_state_specs(param_specs):
+    """AdamW mu/nu mirror the parameter shardings; step is replicated."""
+    return {
+        "mu": param_specs,
+        "nu": param_specs,
+        "step": P(),
+    }

@@ -1,0 +1,264 @@
+"""Attention variants: GQA/MQA (+sliding window) and DeepSeek-V2 MLA.
+
+All functions are shape-explicit and shard-friendly: head dims are the
+tensor-parallel axis, batch the data axis, and decode paths take
+sequence-shardable KV caches (the long-context cells shard S over mesh
+axes).  Softmax runs in f32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def _causal_mask(Sq, Skv, offset=0):
+    # query position i (global offset+i) attends kv position j <= offset+i
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Skv)[None, :]
+    return kj <= qi
+
+
+def _window_mask(Sq, Skv, window, offset=0):
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Skv)[None, :]
+    return (kj <= qi) & (kj > qi - window)
+
+
+def gqa_init(key, cfg, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "wq": (jax.random.normal(ks[0], (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, KV, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, KV, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, d)) * (1.0 / np.sqrt(H * hd))).astype(dtype),
+    }
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Sq,H,hd) k/v: (B,Skv,KV,hd); grouped heads; f32 softmax."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _sdpa_blockwise(q, k, v, positions, window: int, is_global,
+                    q_chunk: int = 512, kv_chunk: int = 1024):
+    """FlashAttention-style blockwise SDPA (beyond-paper optimization).
+
+    Never materializes (Sq, Skv) scores or boolean masks: scans KV chunks
+    with a running (max, sum, accumulator) online softmax, computing the
+    causal/sliding-window predicate from indices inside each tile.  Peak
+    attention memory drops from O(B·H·Sq·Skv) f32 to
+    O(B·H·q_chunk·kv_chunk), which converts the LM cells from
+    score-traffic-bound to parameter/activation-bound.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    nq = max(1, Sq // q_chunk)
+    nk = max(1, Skv // kv_chunk)
+    qc = Sq // nq
+    kc = Skv // nk
+    qr = q.reshape(B, nq, qc, KV, G, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    def q_step(qi):
+        q_i = qr[:, qi]  # (B, qc, KV, G, hd)
+        # train/prefill positions are always 0..S-1 (batch-uniform)
+        q_pos = qi * qc + jnp.arange(qc)  # (qc,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_j = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)
+            v_j = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_i, k_j).astype(jnp.float32)
+            s = s * scale
+            kv_pos = ki * kc + jnp.arange(kc)
+            ok = kv_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                ok = ok & (is_global | (kv_pos[None, :] > q_pos[:, None] - window))
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(v.dtype), v_j
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
+        # checkpoint the tile body: the backward pass recomputes the (qc, kc)
+        # score tile instead of stacking nk copies of it as scan residuals —
+        # this IS FlashAttention's backward, expressed in XLA.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)  # (B, qc, KV, G, hd)
+
+    outs = jax.lax.map(q_step, jnp.arange(nq))  # (nq, B, qc, KV, G, hd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def gqa_forward(params, x, positions, window: int = 0):
+    """Training/prefill attention; window>0 => sliding-window causal."""
+    return gqa_forward_flagged(params, x, positions, window, jnp.bool_(window <= 0))
+
+
+def gqa_forward_flagged(params, x, positions, window: int, is_global,
+                        impl: str = "naive"):
+    """Like gqa_forward but the local/global choice is a *traced* flag so a
+    single scanned layer stack can interleave window patterns (gemma3)."""
+    S = x.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions)
+    k = apply_rope(k, positions)
+    if impl == "blockwise":
+        out = _sdpa_blockwise(q, k, v, positions, window, is_global)
+    elif impl == "pallas":
+        from repro.kernels.flash_attention import flash_mha
+
+        out = flash_mha(q, k, v, is_global, window)
+    elif impl == "stub":
+        # measurement surrogate: one pass over v with the attention output's
+        # shape/sharding — used to isolate attention-tile HBM traffic in the
+        # dry-run (EXPERIMENTS.md §Perf methodology), NOT a real model.
+        G = q.shape[2] // k.shape[2]
+        out = jnp.repeat(v, G, axis=2) + 0.0 * q
+    else:
+        mask = _causal_mask(S, S)
+        if window > 0:
+            qi = jnp.arange(S)[:, None]
+            kj = jnp.arange(S)[None, :]
+            mask = mask & (is_global | (kj > qi - window))
+        out = _sdpa(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+def gqa_decode(params, x, cache_k, cache_v, pos, window: int = 0):
+    """One-token decode: x (B,1,d); cache (B,Smax,KV,hd); pos scalar."""
+    return gqa_decode_flagged(
+        params, x, cache_k, cache_v, pos, window, jnp.bool_(window <= 0)
+    )
+
+
+def gqa_decode_flagged(params, x, cache_k, cache_v, pos, window: int, is_global):
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    posv = jnp.full((B, 1), pos)
+    q = apply_rope(q, posv)
+    k = apply_rope(k, posv)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    Smax = cache_k.shape[1]
+    kj = jnp.arange(Smax)
+    mask = kj <= pos
+    if window > 0:
+        mask = mask & (is_global | (kj > pos - window))
+    out = _sdpa(q, cache_k, cache_v, mask[None, :])
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2): low-rank compressed KV cache
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    hd, rd = cfg.head_dim, cfg.rope_dim
+    ql, kvl = cfg.q_lora, cfg.kv_lora
+    ks = jax.random.split(key, 8)
+
+    def mat(k, shape, fan_in):
+        return (jax.random.normal(k, shape) * (1.0 / np.sqrt(fan_in))).astype(dtype)
+
+    return {
+        "wdq": mat(ks[0], (d, ql), d),  # q down-projection
+        "wuq": mat(ks[1], (ql, H, hd + rd), ql),  # q up (nope + rope parts)
+        "wdkv": mat(ks[2], (d, kvl), d),  # shared latent KV down-projection
+        "wkr": mat(ks[3], (d, rd), d),  # decoupled rope key (shared)
+        "wuk": mat(ks[4], (kvl, H, hd), kvl),  # k up (nope)
+        "wuv": mat(ks[5], (kvl, H, hd), kvl),  # v up
+        "wo": mat(ks[6], (H, hd, d), H * hd),
+    }
+
+
+def mla_forward(params, x, positions, cfg):
+    """Training/prefill MLA; returns compressed cache (c_kv, k_rope)."""
+    hd, rd = cfg.head_dim, cfg.rope_dim
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dq->bsq", x, params["wdq"])
+    q = jnp.einsum("bsq,qhk->bshk", q, params["wuq"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions)
+
+    c_kv = jnp.einsum("bsd,dc->bsc", x, params["wdkv"])  # (B,S,kv_lora)
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["wkr"])[:, :, None, :], positions
+    )[:, :, 0]  # (B,S,rd) shared across heads
+    k_nope = jnp.einsum("bsc,chk->bshk", c_kv, params["wuk"])
+    v = jnp.einsum("bsc,chk->bshk", c_kv, params["wuv"])
+
+    scale = 1.0 / np.sqrt(hd + rd)
+    scores = (
+        jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope)
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    mask = _causal_mask(S, S)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", w, v)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (c_kv, k_rope)
+
+
+def mla_decode(params, x, cache_c, cache_kr, pos, cfg):
+    """One-token decode against the compressed (c_kv, k_rope) cache."""
+    hd, rd = cfg.head_dim, cfg.rope_dim
+    B = x.shape[0]
+    posv = jnp.full((B, 1), pos)
+    q = jnp.einsum("bsd,dq->bsq", x, params["wdq"])
+    q = jnp.einsum("bsq,qhk->bshk", q, params["wuq"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, posv)
+
+    c_new = jnp.einsum("bsd,dc->bsc", x, params["wdkv"])
+    kr_new = apply_rope(jnp.einsum("bsd,dr->bsr", x, params["wkr"])[:, :, None, :], posv)[:, :, 0]
+    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_new, pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(cache_kr, kr_new, pos, axis=1)
+
+    # absorb wuk into q (the MLA trick): score = (q_nope @ wuk^T) . c_kv
+    q_lat = jnp.einsum("bqhk,chk->bqhc", q_nope, params["wuk"])  # (B,1,H,kvl)
+    scores = (
+        jnp.einsum("bqhc,bsc->bhqs", q_lat, cache_c)
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_kr)
+    ).astype(jnp.float32) / np.sqrt(hd + rd)
+    Smax = cache_c.shape[1]
+    mask = jnp.arange(Smax)[None, :] <= pos
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhqs,bsc->bqhc", w, cache_c)  # attend in latent space
+    out = jnp.einsum("bqhc,chk->bqhk", out_lat, params["wuv"])  # then up-project
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (cache_c, cache_kr)

@@ -1,0 +1,63 @@
+"""Shared GNN machinery: edge-index message passing via segment ops.
+
+JAX sparse is BCOO-only, so message passing is implemented the idiomatic
+way: gather source features by edge index, transform, ``segment_sum`` /
+``segment_max`` into destinations.  All ops take ``num_nodes`` statically so
+they jit/shard cleanly (edges row-sharded, nodes replicated or psum-reduced;
+see launch/dryrun shardings).
+
+Graphs are plain dicts:
+  nodes: f32[N, F]   edges: int32[E, 2] (src, dst)   plus optional fields
+  (edge_feat, pos, labels, train_mask, -1-padded edges allowed).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def seg_sum(data, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def seg_max(data, segment_ids, num_segments: int):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def seg_softmax(scores, segment_ids, num_segments: int, valid=None):
+    """Numerically-stable softmax over edges grouped by destination."""
+    if valid is not None:
+        scores = jnp.where(valid, scores, -1e30)
+    mx = seg_max(scores, segment_ids, num_segments)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(scores - mx[segment_ids])
+    if valid is not None:
+        ex = jnp.where(valid, ex, 0.0)
+    den = seg_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(den[segment_ids], 1e-16)
+
+
+def edge_endpoints(edges):
+    """(src, dst, valid) with -1 padding mapped to node 0 + invalid mask."""
+    src, dst = edges[:, 0], edges[:, 1]
+    valid = (src >= 0) & (dst >= 0)
+    return jnp.maximum(src, 0), jnp.maximum(dst, 0), valid
+
+
+def degree(edges, num_nodes: int):
+    src, dst, valid = edge_endpoints(edges)
+    return seg_sum(valid.astype(jnp.float32), dst, num_nodes)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)
+
+
+def cross_entropy_nodes(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    m = mask.astype(jnp.float32)
+    return -(gold * m).sum() / jnp.maximum(m.sum(), 1.0)

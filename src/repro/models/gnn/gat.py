@@ -1,0 +1,78 @@
+"""GAT [arXiv:1710.10903] — graph attention via SDDMM + edge softmax + SpMM.
+
+Cora config: 2 layers, 8 hidden per head, 8 heads (concat) -> 1 head out.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (
+    cross_entropy_nodes, dense_init, edge_endpoints, seg_softmax, seg_sum,
+)
+
+
+@dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    dropout: float = 0.0  # inference/dry-run default
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: GATConfig):
+    ks = jax.random.split(key, cfg.n_layers * 3 + 1)
+    params = {"layers": []}
+    d_in = cfg.d_in
+    dt = jnp.dtype(cfg.dtype)
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        params["layers"].append(
+            {
+                "w": dense_init(ks[3 * i], d_in, heads * d_out, dt),
+                "a_src": (jax.random.normal(ks[3 * i + 1], (heads, d_out)) * 0.1).astype(dt),
+                "a_dst": (jax.random.normal(ks[3 * i + 2], (heads, d_out)) * 0.1).astype(dt),
+            }
+        )
+        d_in = heads * d_out if not last else d_out
+    return params
+
+
+def layer_apply(p, x, edges, num_nodes: int, heads: int, d_out: int, concat: bool):
+    src, dst, valid = edge_endpoints(edges)
+    h = (x @ p["w"]).reshape(-1, heads, d_out)  # (N, H, F)
+    e_src = (h * p["a_src"][None]).sum(-1)  # (N, H)
+    e_dst = (h * p["a_dst"][None]).sum(-1)
+    scores = jax.nn.leaky_relu(e_src[src] + e_dst[dst], 0.2)  # (E, H)
+    alpha = seg_softmax(scores, dst, num_nodes, valid[:, None])
+    msg = h[src] * alpha[..., None]  # (E, H, F)
+    out = seg_sum(jnp.where(valid[:, None, None], msg, 0), dst, num_nodes)
+    return out.reshape(-1, heads * d_out) if concat else out.mean(axis=1)
+
+
+def forward(params, graph, cfg: GATConfig):
+    x = graph["nodes"]
+    n = x.shape[0]
+    for i, p in enumerate(params["layers"]):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        x = layer_apply(p, x, graph["edges"], n, heads, d_out, concat=not last)
+        if not last:
+            x = jax.nn.elu(x)
+    return x  # (N, n_classes) logits
+
+
+def loss_fn(params, graph, cfg: GATConfig):
+    logits = forward(params, graph, cfg)
+    return cross_entropy_nodes(logits, graph["labels"], graph["train_mask"])

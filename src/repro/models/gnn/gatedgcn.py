@@ -1,0 +1,85 @@
+"""GatedGCN [arXiv:1711.07553 / benchmarking-gnns arXiv:2003.00982].
+
+16 layers, d=70, explicit edge features with gated aggregation:
+
+    e'_ij = A h_i + B h_j + C e_ij
+    h'_i  = U h_i + sum_j sigma(e'_ij) / (sum_j sigma(e'_ij) + eps) ⊙ V h_j
+
+LayerNorm replaces the paper's BatchNorm (jit/shard-friendlier; noted in
+DESIGN.md) + residuals, as in the benchmarking-gnns reference code.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (
+    cross_entropy_nodes, dense_init, edge_endpoints, seg_sum,
+)
+
+
+@dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 1433
+    d_edge_in: int = 1
+    n_classes: int = 7
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: GatedGCNConfig):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers * 5 + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        k = ks[5 * i:5 * i + 5]
+        layers.append(
+            {
+                "A": dense_init(k[0], d, d), "B": dense_init(k[1], d, d),
+                "C": dense_init(k[2], d, d), "U": dense_init(k[3], d, d),
+                "V": dense_init(k[4], d, d),
+            }
+        )
+    return {
+        "embed_h": dense_init(ks[-3], cfg.d_in, d),
+        "embed_e": dense_init(ks[-2], cfg.d_edge_in, d),
+        "head": dense_init(ks[-1], d, cfg.n_classes),
+        "layers": layers,
+    }
+
+
+def _ln(x, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def forward(params, graph, cfg: GatedGCNConfig):
+    src, dst, valid = edge_endpoints(graph["edges"])
+    n = graph["nodes"].shape[0]
+    h = graph["nodes"] @ params["embed_h"]
+    e = graph.get("edge_feat")
+    if e is None:
+        e = jnp.ones((graph["edges"].shape[0], cfg.d_edge_in), h.dtype)
+    e = e @ params["embed_e"]
+
+    for p in params["layers"]:
+        e_new = h[src] @ p["A"] + h[dst] @ p["B"] + e @ p["C"]
+        gate = jax.nn.sigmoid(e_new)
+        gate = jnp.where(valid[:, None], gate, 0.0)
+        msg = gate * (h[src] @ p["V"])
+        num = seg_sum(msg, dst, n)
+        den = seg_sum(gate, dst, n)
+        h_new = h @ p["U"] + num / (den + 1e-6)
+        h = h + jax.nn.relu(_ln(h_new))  # residual
+        e = e + jax.nn.relu(_ln(e_new))
+    return h @ params["head"]
+
+
+def loss_fn(params, graph, cfg: GatedGCNConfig):
+    logits = forward(params, graph, cfg)
+    return cross_entropy_nodes(logits, graph["labels"], graph["train_mask"])

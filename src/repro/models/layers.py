@@ -1,0 +1,107 @@
+"""Shared neural layers: norms, rotary embedding, MLPs, chunked loss."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale=None, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layer_norm_nonparam(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm (no scale, no bias)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x, scale=None):
+    if kind == "rmsnorm":
+        return rms_norm(x, scale)
+    if kind == "layernorm_nonparam":
+        return layer_norm_nonparam(x)
+    raise ValueError(kind)
+
+
+def rope_freqs(head_dim: int, max_pos: int, theta: float = 10_000.0):
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    t = np.arange(max_pos)
+    f = np.outer(t, inv)
+    return jnp.asarray(np.cos(f), jnp.float32), jnp.asarray(np.sin(f), jnp.float32)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D) with D even; positions: broadcastable (..., S)."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def mlp_apply(params, x, act: str):
+    """Gated (SwiGLU/GeGLU) or plain MLP; params: wi/(wg)/wo."""
+    h = x @ params["wi"]
+    if act in ("swiglu", "geglu"):
+        g = x @ params["wg"]
+        gate = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = h * gate
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return h @ params["wo"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "wi": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["wg"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def cross_entropy_chunked(logits_fn, x_final, embed, targets, mask, n_chunks: int = 8):
+    """Next-token CE with the vocab projection chunked over the time axis.
+
+    Avoids materializing (B, S, V) logits at once — at 256K vocabs and 1M
+    tokens that array alone would be hundreds of GB.  ``logits_fn`` maps a
+    (B, C, d) slice to (B, C, V) (usually x @ embed.T).
+    """
+    B, S, _ = x_final.shape
+    C = S // n_chunks
+    assert C * n_chunks == S, "sequence must divide the chunk count"
+
+    def body(carry, idx):
+        tot, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(x_final, idx * C, C, axis=1)
+        ts = jax.lax.dynamic_slice_in_dim(targets, idx * C, C, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(mask, idx * C, C, axis=1)
+        logits = logits_fn(xs, embed).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ms
+        return (tot + nll.sum(), cnt + ms.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), jnp.arange(n_chunks)
+    )
+    return tot / jnp.maximum(cnt, 1.0)

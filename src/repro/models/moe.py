@@ -1,0 +1,94 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k, EP-shardable.
+
+Dispatch uses the sort/gather formulation rather than GShard one-hot
+einsums: at the assigned scales (1M tokens x 160 experts) a (T, E, C)
+dispatch tensor is infeasible, while (E, C) gather indices are tiny.
+
+  1. router logits -> top-k (expert, weight) per token,
+  2. flatten (T*k) assignments, rank each within its expert via the
+     sort-free cumsum-of-one-hot... no — via argsort by expert id (XLA sort,
+     near-roofline) + segment ranks,
+  3. scatter token ids into an (E, C) slot table (capacity-dropped),
+  4. gather tokens -> (E, C, d), per-expert einsum (E-sharded = expert
+     parallelism over 'model'), weighted scatter-add back.
+
+Capacity factor guards the static shapes; dropped tokens fall back to the
+shared experts (dsv2) or identity (pure-MoE), matching standard practice.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp_apply, mlp_init
+
+
+def moe_init(key, cfg, dtype):
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.moe_dff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(ff)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E)) * s_in).astype(jnp.float32),
+        "wi": (jax.random.normal(ks[1], (E, d, ff)) * s_in).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, d, ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, ff, d)) * s_out).astype(dtype),
+    }
+    if cfg.n_shared > 0:
+        p["shared"] = mlp_init(ks[4], d, cfg.moe_dff * cfg.n_shared, "swiglu", dtype)
+    return p
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, S, d) -> (B, S, d). Routed top-k + optional shared experts."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    C = int(np.ceil(T * k / E * cfg.capacity_factor))
+
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)  # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # rank each (token, slot) within its expert
+    flat_e = tope.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(T * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted)
+
+    keep = rank < C
+    slot = jnp.clip(flat_e, 0, E - 1) * C + jnp.clip(rank, 0, C - 1)
+    tok_of_flat = jnp.arange(T * k, dtype=jnp.int32) // k
+    # (E*C,) token id feeding each expert slot; T = empty sentinel.  Dropped
+    # assignments scatter to index E*C which mode="drop" discards.
+    slot_tok = jnp.full((E * C,), T, jnp.int32).at[
+        jnp.where(keep, slot, E * C)
+    ].set(tok_of_flat, mode="drop")
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    expert_in = xt_pad[slot_tok].reshape(E, C, d)  # gather (EP-sharded on E)
+    h = jnp.einsum("ecd,edf->ecf", expert_in, params["wi"])
+    g = jnp.einsum("ecd,edf->ecf", expert_in, params["wg"])
+    h = h * jax.nn.silu(g)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["wo"])  # (E, C, d)
+
+    # combine: weighted scatter-add back to tokens
+    w_flat = topw.reshape(-1)
+    slot_w = jnp.zeros((E * C,), jnp.float32).at[
+        jnp.where(keep, slot, E * C)
+    ].set(w_flat, mode="drop")
+    contrib = expert_out.reshape(E * C, d) * slot_w[:, None].astype(expert_out.dtype)
+    out = jnp.zeros((T + 1, d), x.dtype).at[slot_tok].add(contrib)[:T]
+
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], xt, "swiglu")
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0 / (T * k))
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux

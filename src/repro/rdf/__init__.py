@@ -1,0 +1,2 @@
+from repro.rdf.vocab import lubm_ontology
+from repro.rdf.generator import generate_lubm, generate_deep_ontology, RawDataset

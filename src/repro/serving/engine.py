@@ -1,0 +1,131 @@
+"""Batched query serving — LiteMat as an online inference service.
+
+The paper's query processor evaluates one SPARQL query per Spark job.  A
+serving deployment instead sees *streams* of parameterized queries ("all
+members of class C", "all x with x:C and (x p y)") that share a plan and
+differ only in constants.  Because LiteMat turns inference into interval
+compares, a parameterized plan is a pure tensor function of (lo, hi) pairs —
+a whole batch executes as ONE vmapped XLA call over the store.
+
+Answer semantics are DISTINCT subjects (SPARQL set semantics, matching the
+QueryEngine oracle): an instance can legitimately carry several MSC types
+inside the queried interval (e.g. Chair + FullProfessor under Professor), so
+each request deduplicates its hits.  The type-triple subset is pre-extracted
+once so the per-request sort runs over ~#type-rows, not the whole store.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from repro.core.engine import KnowledgeBase
+
+INVALID = jnp.int32(np.iinfo(np.int32).max)
+
+
+def _distinct_count_topk(hits, topk: int):
+    """Sorted-dedup count + first-k distinct values of INVALID-padded hits."""
+    h = jnp.sort(hits)
+    first = jnp.concatenate([jnp.ones((1,), bool), h[1:] != h[:-1]])
+    uniq = first & (h != INVALID)
+    count = uniq.astype(jnp.int32).sum()
+    vals = jnp.where(uniq, h, INVALID)
+    top = -jax.lax.top_k(-vals, topk)[0]
+    return count, jnp.where(top == INVALID, -1, top)
+
+
+@partial(jax.jit, static_argnames=("topk",))
+def _serve_class_members(ty_s, ty_o, clo, chi, topk: int):
+    """vmapped Q1 plan: (B,) class intervals -> distinct counts + members."""
+
+    def one(lo, hi):
+        mask = (ty_o >= lo) & (ty_o < hi)
+        return _distinct_count_topk(jnp.where(mask, ty_s, INVALID), topk)
+
+    return jax.vmap(one)(clo, chi)
+
+
+@partial(jax.jit, static_argnames=("topk",))
+def _serve_class_prop_join(ty_s, ty_o, ps_sorted, p_sorted, clo, chi, plo, phi, topk: int):
+    """vmapped Q3 plan: x:C ⋈ (x p y) -> distinct-x counts + bindings.
+
+    ``ps_sorted`` are property-triple subjects pre-sorted by (p, s) once per
+    store, so each request semi-joins with two binary searches per type row.
+    """
+
+    from repro.utils import pair64
+
+    def one(lo, hi, plo_, phi_):
+        tmask = (ty_o >= lo) & (ty_o < hi)
+        # rows are sorted by the (subject, predicate) composite, so the first
+        # row >= (s, plo) decides the semi-join: it matches iff its subject
+        # is s and its predicate is still < phi (contiguous interval run).
+        X = pair64.searchsorted_pair(
+            ps_sorted, p_sorted, ty_s, jnp.full(ty_s.shape, plo_, jnp.int32), side="left"
+        )
+        Xc = jnp.clip(X, 0, ps_sorted.shape[0] - 1)
+        hit = (ps_sorted[Xc] == ty_s) & (p_sorted[Xc] < phi_)
+        semi = tmask & hit
+        return _distinct_count_topk(jnp.where(semi, ty_s, INVALID), topk)
+
+    return jax.vmap(one)(clo, chi, plo, phi)
+
+
+@dataclass
+class QueryServer:
+    """Compile-once, serve-batches facade over a KnowledgeBase."""
+
+    K: KnowledgeBase
+    topk: int = 32
+    _views: dict = field(default_factory=dict)
+
+    def _type_view(self):
+        if "type" not in self._views:
+            spo = self.K.lite_spo
+            m = np.asarray(spo[:, 1] == self.K.dtb.rdf_type_id)
+            self._views["type"] = (
+                jnp.asarray(np.asarray(spo[:, 0])[m]),
+                jnp.asarray(np.asarray(spo[:, 2])[m]),
+            )
+        return self._views["type"]
+
+    def _prop_view(self):
+        """Property triples sorted by (subject, predicate)."""
+        if "prop" not in self._views:
+            spo = np.asarray(self.K.lite_spo)
+            m = spo[:, 1] != self.K.dtb.rdf_type_id
+            s, p = spo[m, 0], spo[m, 1]
+            order = np.lexsort((p, s))
+            self._views["prop"] = (jnp.asarray(s[order]), jnp.asarray(p[order]))
+        return self._views["prop"]
+
+    def _intervals(self, names, enc):
+        lo = np.empty(len(names), np.int32)
+        hi = np.empty(len(names), np.int32)
+        for i, n in enumerate(names):
+            (l, h), _ = enc.interval_of(n)
+            lo[i], hi[i] = l, h
+        return jnp.asarray(lo), jnp.asarray(hi)
+
+    def class_members(self, class_names):
+        """Batch of Q1-style requests -> (distinct counts, member ids)."""
+        ty_s, ty_o = self._type_view()
+        clo, chi = self._intervals(class_names, self.K.kb.tbox.concepts)
+        counts, members = _serve_class_members(ty_s, ty_o, clo, chi, self.topk)
+        return np.asarray(counts), np.asarray(members)
+
+    def class_prop_join(self, class_names, prop_names):
+        """Batch of Q3-style requests -> (distinct-x counts, x bindings)."""
+        ty_s, ty_o = self._type_view()
+        ps, pp = self._prop_view()
+        clo, chi = self._intervals(class_names, self.K.kb.tbox.concepts)
+        plo, phi = self._intervals(prop_names, self.K.kb.tbox.properties)
+        counts, subs = _serve_class_prop_join(
+            ty_s, ty_o, ps, pp, clo, chi, plo, phi, self.topk
+        )
+        return np.asarray(counts), np.asarray(subs)

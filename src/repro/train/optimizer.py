@@ -1,0 +1,55 @@
+"""AdamW + global-norm clipping, pure-pytree (no optax dependency)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    step = opt_state["step"] + 1
+    lr = cfg.lr * jnp.minimum(1.0, step / max(cfg.warmup_steps, 1))
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, opt_state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, opt_state["nu"], grads)
+
+    def upd(p, m, v):
+        mhat = m / b1t
+        vhat = v / b2t
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, gnorm

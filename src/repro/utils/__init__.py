@@ -1,0 +1,1 @@
+from repro.utils.hashing import fingerprint_string, mix64, splitmix64

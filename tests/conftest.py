@@ -1,0 +1,19 @@
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def lubm_kb():
+    """One shared small LUBM KnowledgeBase for the system-level tests."""
+    from repro.core.engine import KnowledgeBase
+    from repro.rdf.generator import generate_lubm
+
+    raw = generate_lubm(n_universities=1, seed=7)
+    return KnowledgeBase.build(raw), raw
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

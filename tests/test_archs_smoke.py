@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: reduced configs, one real step on CPU,
+asserting output shapes and finiteness (the full configs are exercised via
+the dry-run's abstract lowering only)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS, get_arch
+
+LM_ARCHS = [a for a, m in ARCHS.items() if m.FAMILY == "lm"]
+GNN_ARCHS = [a for a, m in ARCHS.items() if m.FAMILY == "gnn"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_reduced_train_and_decode(arch):
+    from repro.models import lm as lm_lib
+    from repro.train.optimizer import init_opt_state
+
+    cfg = get_arch(arch).reduced_config()
+    key = jax.random.key(0)
+    params = lm_lib.init_params(key, cfg)
+    B, S = 2, 32
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tok, "targets": jnp.roll(tok, -1, 1),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    step = jax.jit(lm_lib.make_train_step(cfg))
+    params2, opt2, metrics = step(params, init_opt_state(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # decode one token against a prefilled cache
+    prefill = jax.jit(lm_lib.make_prefill_step(cfg, max_seq=S + 4))
+    logits, cache = prefill(params, tok)
+    assert logits.shape == (B, 1, cfg.vocab)
+    decode = jax.jit(lm_lib.make_decode_step(cfg))
+    lg, cache2 = decode(params, cache, tok[:, :1], jnp.int32(S))
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_lm_prefill_decode_consistency():
+    """Decoding the next position after prefill must match a fresh forward."""
+    from repro.models import lm as lm_lib
+
+    cfg = get_arch("olmo-1b").reduced_config()
+    key = jax.random.key(1)
+    params = lm_lib.init_params(key, cfg)
+    B, S = 2, 16
+    tok = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
+    prefill = jax.jit(lm_lib.make_prefill_step(cfg, max_seq=S + 4))
+    _, cache = prefill(params, tok[:, :S])
+    decode = jax.jit(lm_lib.make_decode_step(cfg))
+    lg_dec, _ = decode(params, cache, tok[:, S:S + 1], jnp.int32(S))
+    _, full_cache = prefill(params, tok)  # includes position S
+    x_full, _ = lm_lib.forward(params, tok, cfg)
+    lg_full = lm_lib.logits_fn(x_full[:, S:S + 1], params["embed"])
+    np.testing.assert_allclose(
+        np.asarray(lg_dec), np.asarray(lg_full), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_reduced_step(arch):
+    from repro.data.graphs import make_cora_like, make_molecules
+    from repro.launch.cells import make_gnn_train_step, _GNN_MODELS
+
+    mod = get_arch(arch)
+    model = _GNN_MODELS[mod.MODEL]
+    if mod.MODEL in ("schnet", "equiformer"):
+        g = make_molecules(n_graphs=4, nodes_per=8, edges_per=16)
+        task = "reg"
+        cfg = mod.reduced_config()
+    else:
+        g = make_cora_like(n_nodes=120, n_edges=480, d_feat=64, seed=2)
+        task = "cls"
+        cfg = mod.reduced_config(d_feat=64, n_classes=7)
+    gj = {k: jnp.asarray(v) for k, v in g.items() if k != "n_graphs"}
+    params = model.init_params(jax.random.key(0), cfg)
+    step = jax.jit(make_gnn_train_step(mod.MODEL, cfg, task))
+    params2, loss = step(params, gj)
+    assert np.isfinite(float(loss))
+    # a second step must change the loss (gradients flow)
+    _, loss2 = step(params2, gj)
+    assert float(loss2) != float(loss)
+
+
+def test_gnn_training_learns():
+    """gat on a learnable synthetic cora: loss decreases materially."""
+    from repro.data.graphs import make_cora_like
+    from repro.launch.cells import make_gnn_train_step
+    from repro.models.gnn import gat
+
+    g = make_cora_like(n_nodes=150, n_edges=600, d_feat=32, seed=3)
+    gj = {k: jnp.asarray(v) for k, v in g.items()}
+    cfg = gat.GATConfig(d_in=32, d_hidden=8, n_heads=4)
+    params = gat.init_params(jax.random.key(0), cfg)
+    step = jax.jit(make_gnn_train_step("gat", cfg, "cls", lr=0.5))
+    losses = []
+    for _ in range(100):
+        params, loss = step(params, gj)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[::20]
+
+
+def test_mind_reduced_train_and_serve():
+    from repro.models.recsys import mind
+
+    cfg = get_arch("mind").reduced_config()
+    params = mind.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    hist = jnp.asarray(rng.integers(-1, cfg.n_items, (16, cfg.hist_len)), jnp.int32)
+    batch = {"hist": hist,
+             "target": jnp.asarray(rng.integers(0, cfg.n_items, 16), jnp.int32)}
+    # squash() scales cubically at small norms, so reduced configs need an
+    # aggressive LR for the smoke check to show movement
+    step = jax.jit(mind.make_train_step(cfg, lr=20.0))
+    losses = []
+    for _ in range(60):
+        params, loss = step(params, batch)
+        losses.append(float(loss))
+    assert np.isfinite(losses).all() and losses[-1] < losses[0] * 0.8
+    serve = jax.jit(mind.make_serve_step(cfg, topk=8))
+    cand = jnp.asarray(rng.choice(cfg.n_items, 64, replace=False), jnp.int32)
+    cat = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
+    vals, ids = serve(params, hist, cand, cat, jnp.int32(0), jnp.int32(128))
+    assert vals.shape == (16, 8) and ids.shape == (16, 8)
+    # LiteMat category filter: everything returned is inside the interval
+    cat_of = dict(zip(cand.tolist(), cat.tolist()))
+    for row_v, row_i in zip(np.asarray(vals), np.asarray(ids)):
+        for v, i in zip(row_v, row_i):
+            if np.isfinite(v):
+                assert 0 <= cat_of[int(i)] < 128
+
+
+def test_mind_interests_shape():
+    from repro.models.recsys import mind
+
+    cfg = get_arch("mind").reduced_config()
+    params = mind.init_params(jax.random.key(0), cfg)
+    hist = jnp.zeros((4, cfg.hist_len), jnp.int32)
+    v = mind.user_interests(params, hist, cfg)
+    assert v.shape == (4, cfg.n_interests, cfg.embed_dim)

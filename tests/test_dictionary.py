@@ -1,0 +1,71 @@
+"""Dictionary encoding invariants (paper §III.B) + locate/extract."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import dictionary as dct
+from repro.core.abox import encode_obe, encode_sae
+from repro.core.tbox import build_tbox
+from repro.rdf.generator import generate_lubm
+from repro.utils import pair64
+from repro.utils.hashing import mix64
+
+
+@given(st.integers(0, 5000), st.integers(1, 400), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_local_dictionary_bijective_dense(seed, n_occ, dup):
+    rng = np.random.default_rng(seed)
+    distinct = rng.choice(1 << 50, max(1, n_occ // dup), replace=False)
+    occ = rng.choice(distinct, n_occ)
+    hi, lo = pair64.split_np(occ)
+    table = dct.build_local_dictionary(
+        jnp.asarray(hi), jnp.asarray(lo), jnp.ones(occ.shape, bool), base=100
+    )
+    ids, hit = table.locate(jnp.asarray(hi), jnp.asarray(lo))
+    ids = np.asarray(ids)
+    assert np.asarray(hit).all()
+    # same fp -> same id, distinct -> distinct, dense from base
+    m = {}
+    for f, i in zip(occ.tolist(), ids.tolist()):
+        assert m.setdefault(f, i) == i
+    vals = sorted(set(m.values()))
+    assert vals == list(range(100, 100 + len(m)))
+    # extract inverts locate
+    ehi, elo, ehit = table.extract_fp(jnp.asarray(ids))
+    assert np.asarray(ehit).all()
+    back = pair64.combine_np(np.asarray(ehi), np.asarray(elo))
+    np.testing.assert_array_equal(back, occ)
+
+
+def test_obe_vs_sae_consistency():
+    """Both encodings are valid bijections; OBE embeds TBox semantics."""
+    raw = generate_lubm(1, seed=3)
+    tbox = build_tbox(raw.onto)
+    obe = encode_obe(raw, tbox)
+    sae = encode_sae(raw)
+    assert obe.n == sae.n == raw.n_triples
+    # every original duplicate triple stays a duplicate (encoding is a
+    # per-term function) and the number of distinct triples matches
+    o_rows = {tuple(r) for r in np.asarray(obe.spo).tolist()}
+    s_rows = {tuple(r) for r in np.asarray(sae.spo).tolist()}
+    assert len(o_rows) == len(s_rows)
+    # OBE type-triple objects are concept ids (< instance base)
+    spo = np.asarray(obe.spo)
+    tmask = spo[:, 1] == tbox.rdf_type_id
+    assert (spo[tmask, 2] < tbox.instance_base).all()
+    assert (spo[~tmask, 1] < tbox.instance_base).all()
+
+
+def test_locate_extract_strings():
+    raw = generate_lubm(1, seed=5, keep_strings=True)
+    tbox = build_tbox(raw.onto)
+    kb = encode_obe(raw, tbox)
+    ids = kb.locate(["Professor", "memberOf", "rdf:type"])
+    assert ids[0] == tbox.concept_id("Professor")
+    assert ids[1] == tbox.property_id("memberOf")
+    assert ids[2] == tbox.rdf_type_id
+    out = kb.extract([int(i) for i in ids])
+    assert out[0] == "ub:Professor" and out[1] == "ub:memberOf"
+    # unknown term
+    assert kb.locate(["no-such-term"])[0] == -1

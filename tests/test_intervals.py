@@ -1,0 +1,57 @@
+"""Unit + property tests for the id interval arithmetic."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import intervals as iv
+
+
+def test_bound_basic():
+    # the paper's example: id 20 = 00010100, 8 bits total, used = 6 bits
+    assert int(iv.bound_of(np.int64(20), 6, 8)) == 24
+
+
+def test_ancestor_masking():
+    # stripping back to 4 used bits recovers the 0001 prefix
+    assert int(iv.ancestor_at(np.int64(0b00010110), 4, 8)) == 0b00010000
+
+
+@given(st.integers(1, 60), st.data())
+@settings(max_examples=50, deadline=None)
+def test_interval_consistency(total_bits, data):
+    used = data.draw(st.integers(0, total_bits))
+    prefix = data.draw(st.integers(0, (1 << used) - 1 if used else 0))
+    ident = prefix << (total_bits - used)
+    bound = int(iv.bound_of(np.int64(ident), used, total_bits))
+    # every value with this prefix lies in [id, bound)
+    suffix = data.draw(st.integers(0, (1 << (total_bits - used)) - 1))
+    v = ident | suffix
+    assert iv.is_subsumed_by(v, ident, bound)
+    # and the first value outside does not
+    assert not iv.is_subsumed_by(bound, ident, bound)
+
+
+def test_lookup_index():
+    tbl = np.array([3, 7, 9, 200], dtype=np.int64)
+    q = np.array([7, 8, 3, 200, -1], dtype=np.int64)
+    out = iv.lookup_index(tbl, q)
+    assert out.tolist() == [1, -1, 0, 3, -1]
+
+
+@given(st.lists(st.integers(0, 2**120), min_size=2, max_size=8, unique=True))
+@settings(max_examples=50, deadline=None)
+def test_wide_lex_order_matches_int_order(values):
+    W = iv.words_needed(121)
+    packed = np.stack([iv.pack_wide(v, W) for v in values])
+    a = jnp.asarray(packed[:-1])
+    b = jnp.asarray(packed[1:])
+    want = np.array([x < y for x, y in zip(values[:-1], values[1:])])
+    got = np.asarray(iv.lex_lt(a, b))
+    assert (got == want).all()
+
+
+def test_wide_pack_roundtrip():
+    v = (1 << 101) | 12345
+    W = iv.words_needed(102)
+    assert iv.unpack_wide(iv.pack_wide(v, W)) == v

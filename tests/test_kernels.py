@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests.
+
+Kernels run in interpret mode on CPU (the kernel bodies execute verbatim);
+on a real TPU the same wrappers compile the Mosaic path.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 100, 4096, 5000])
+@pytest.mark.parametrize("block", [1024, 4096])
+def test_interval_filter_sweep(n, block, rng):
+    p = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+    o = jnp.asarray(rng.integers(0, 1 << 20, n), jnp.int32)
+    params = jnp.asarray([100, 300, 0, 1 << 19], jnp.int32)
+    got = ops.interval_filter(p, o, params, block=block)
+    want = ref.ref_interval_filter(None, p, o, 100, 300, 0, 1 << 19, 0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("G,K", [(1, 4), (37, 16), (130, 8), (64, 33)])
+def test_msc_select_sweep(G, K, rng):
+    conc = rng.integers(-1, 500, (G, K)).astype(np.int32)
+    bounds = conc + rng.integers(1, 64, (G, K)).astype(np.int32)
+    got = ops.msc_select(jnp.asarray(conc), jnp.asarray(bounds))
+    want = ref.ref_msc_select(jnp.asarray(conc), jnp.asarray(bounds))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 12), st.integers(2, 24), st.integers(0, 2**31 - 2))
+@settings(max_examples=25, deadline=None)
+def test_msc_select_property(g, k, seed):
+    rng = np.random.default_rng(seed)
+    conc = rng.integers(-1, 100, (g, k)).astype(np.int32)
+    bounds = conc + rng.integers(1, 32, (g, k)).astype(np.int32)
+    got = np.asarray(ops.msc_select(jnp.asarray(conc), jnp.asarray(bounds)))
+    want = np.asarray(ref.ref_msc_select(jnp.asarray(conc), jnp.asarray(bounds)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("C,D,n", [(5, 3, 10), (64, 8, 2048), (513, 5, 100)])
+def test_closure_expand_sweep(C, D, n, rng):
+    sorted_ids = jnp.asarray(
+        np.sort(rng.choice(1 << 20, C, replace=False)).astype(np.int32))
+    anc = jnp.asarray(rng.integers(-1, 1 << 20, (C, D)).astype(np.int32))
+    q = jnp.asarray(rng.integers(0, 1 << 20, n).astype(np.int32))
+    got = ops.closure_expand(q, sorted_ids, anc)
+    want = ref.ref_closure_expand(q, sorted_ids, anc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+@pytest.mark.parametrize("V,E,B,L", [(50, 8, 4, 3), (200, 32, 16, 7)])
+def test_embedding_bag_sweep(V, E, B, L, dtype, rng):
+    table = jnp.asarray(rng.normal(size=(V, E)).astype(dtype))
+    idx = jnp.asarray(rng.integers(-1, V, (B, L)).astype(np.int32))
+    np.testing.assert_allclose(
+        np.asarray(ops.embedding_bag(table, idx)),
+        np.asarray(ref.ref_embedding_bag(table, idx)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.embedding_bag_mean(table, idx)),
+        np.asarray(ref.ref_embedding_bag(table, idx, "mean")), rtol=1e-6)
+
+
+@pytest.mark.parametrize("Ns,F,N,K", [(30, 4, 8, 3), (100, 16, 32, 8)])
+def test_ell_spmm_sweep(Ns, F, N, K, rng):
+    x = jnp.asarray(rng.normal(size=(Ns, F)).astype(np.float32))
+    nbr = jnp.asarray(rng.integers(-1, Ns, (N, K)).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=(N, K)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(ops.ell_spmm(x, nbr, w)),
+        np.asarray(ref.ref_ell_spmm(x, nbr, w)), rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 200), st.integers(1, 300), st.integers(0, 2**31 - 2))
+@settings(max_examples=25, deadline=None)
+def test_pair_search_property(T, n, seed):
+    rng = np.random.default_rng(seed)
+    fps = np.sort(rng.choice(1 << 50, T, replace=False))
+    thi = jnp.asarray((fps >> 31).astype(np.int32))
+    tlo = jnp.asarray((fps & ((1 << 31) - 1)).astype(np.int32))
+    qs = rng.choice(1 << 50, n)
+    qhi = jnp.asarray((qs >> 31).astype(np.int32))
+    qlo = jnp.asarray((qs & ((1 << 31) - 1)).astype(np.int32))
+    got = np.asarray(ops.pair_search(thi, tlo, qhi, qlo))
+    want = np.searchsorted(fps, qs, side="left")
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,60 @@
+"""End-to-end behaviour: pipeline -> engine -> serving, against oracles."""
+import numpy as np
+
+from repro.core.engine import PAPER_QUERIES, KnowledgeBase
+from repro.core.query import Pattern
+from repro.serving.engine import QueryServer
+
+
+def test_end_to_end_sizes_and_stats(lubm_kb):
+    K, raw = lubm_kb
+    sizes = K.sizes()
+    # lite stays ~= original (paper Table IV), full blows up ~38% (Table V)
+    assert abs(sizes["lite"] - sizes["original"]) / sizes["original"] < 0.02
+    assert 1.30 < sizes["full"] / sizes["original"] < 1.50
+    assert K.lite_stats["n_deleted_explicit"] == 0
+
+
+def test_server_matches_engine_oracle(lubm_kb):
+    K, _ = lubm_kb
+    srv = QueryServer(K, topk=16)
+    classes = ["Professor", "Student", "Course", "Organization", "Chair"]
+    counts, members = srv.class_members(classes)
+    for name, cnt, mem in zip(classes, counts, members):
+        oracle = K.answers([Pattern("?x", "rdf:type", name)])
+        assert cnt == len(oracle), name
+        got = {int(v) for v in mem if v >= 0}
+        assert got <= {x[0] for x in oracle}
+
+    c2, _ = srv.class_prop_join(["Professor"], ["memberOf"])
+    oracle = K.answers(
+        [Pattern("?x", "rdf:type", "Professor"), Pattern("?x", "memberOf", "?y")],
+        select=("?x",),
+    )
+    assert c2[0] == len(oracle)
+
+
+def test_interval_query_equals_union_of_subclass_queries(lubm_kb):
+    """The paper's core claim: ONE interval compare == the UNION rewriting."""
+    K, _ = lubm_kb
+    union = set()
+    for sub in ("Professor", "AssistantProfessor", "AssociateProfessor",
+                "Chair", "Dean", "FullProfessor", "VisitingProfessor"):
+        union |= K.answers([Pattern("?x", "rdf:type", sub)], mode="full")
+    interval = K.answers([Pattern("?x", "rdf:type", "Professor")], mode="litemat")
+    assert interval == union
+
+
+def test_semantic_edge_selection(lubm_kb):
+    """LiteMat ids as a *graph* feature: selecting edges by property
+    subsumption with one interval compare (the GNN-family tie-in)."""
+    K, _ = lubm_kb
+    spo = np.asarray(K.kb.spo)
+    enc = K.kb.tbox.properties
+    (lo, hi), _ = enc.interval_of("memberOf")
+    sel = spo[(spo[:, 1] >= lo) & (spo[:, 1] < hi)]
+    # equals the union over explicit subproperty scans
+    ids = {enc.id_of(p) for p in ("memberOf", "worksFor", "headOf")}
+    want = spo[np.isin(spo[:, 1], list(ids))]
+    assert {tuple(r) for r in sel.tolist()} == {tuple(r) for r in want.tolist()}
+    assert len(sel) > 0

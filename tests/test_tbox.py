@@ -1,0 +1,109 @@
+"""TBox encoder properties: the heart of the paper.
+
+The invariant (paper §III.A): for any two entities A, B in the classified
+hierarchy, B is a (DAG-)descendant-or-self of A  <=>  idB falls in A's
+primary interval or one of A's spill intervals.  Hypothesis generates random
+DAG taxonomies (including multiple inheritance and equivalence cycles).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hierarchy import build_taxonomy
+from repro.core.tbox import (
+    Ontology, build_tbox, encode_hierarchy, encode_hierarchy_parallel,
+)
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(2, 40))
+    names = [f"N{i}" for i in range(n)]
+    edges = []
+    for i in range(1, n):
+        n_par = draw(st.integers(1, min(3, i)))
+        parents = draw(
+            st.lists(st.integers(0, i - 1), min_size=n_par, max_size=n_par, unique=True)
+        )
+        for p in parents:
+            edges.append((names[i], names[p]))
+    # occasionally add an equivalence cycle
+    if n > 4 and draw(st.booleans()):
+        edges.append((names[1], names[2]))
+        edges.append((names[2], names[1]))
+    return names, edges
+
+
+@given(random_dag())
+@settings(max_examples=40, deadline=None)
+def test_interval_subsumption_matches_dag(dag):
+    names, edges = dag
+    tax = build_taxonomy(names, edges)
+    enc = encode_hierarchy(tax)
+
+    for a in range(tax.n):
+        truth = tax.dag_descendants(a) | {a}
+        got_ids = set(enc.subsumees(tax.names[a]))
+        got = {enc._id_to_node[i] for i in got_ids}
+        assert got == truth, (
+            f"node {tax.names[a]}: interval gives {sorted(got)}, DAG says {sorted(truth)}"
+        )
+
+
+@given(random_dag())
+@settings(max_examples=20, deadline=None)
+def test_parallel_encoder_matches_host(dag):
+    names, edges = dag
+    tax = build_taxonomy(names, edges)
+    e1 = encode_hierarchy(tax)
+    e2 = encode_hierarchy_parallel(tax)
+    assert e1.total_bits == e2.total_bits
+    assert np.array_equal(e1.ids, e2.ids)
+    assert np.array_equal(e1.used_bits, e2.used_bits)
+
+
+def test_equivalence_cycle_merges():
+    tax = build_taxonomy(["A", "B", "C"], [("A", "B"), ("B", "A"), ("C", "A")])
+    enc = encode_hierarchy(tax)
+    assert enc.id_of("A") == enc.id_of("B")  # merged class
+    assert enc.id_of("C") in set(enc.subsumees("B"))
+
+
+def test_prefix_property_paper_example():
+    """LUBM-style: AssociateProfessor shares Person's prefix (paper Table I)."""
+    from repro.rdf.vocab import lubm_ontology
+
+    tb = build_tbox(lubm_ontology())
+    enc = tb.concepts
+    person = enc.id_of("Person")
+    assoc = enc.id_of("AssociateProfessor")
+    (lo, hi), _ = enc.interval_of("Person")
+    assert lo <= assoc < hi
+    # siblings at the top level do not overlap
+    (olo, ohi), _ = enc.interval_of("Organization")
+    assert ohi <= lo or hi <= olo
+
+
+def test_deep_hierarchy_goes_wide():
+    names = [f"C{i}" for i in range(75)]
+    edges = [(f"C{i+1}", f"C{i}") for i in range(74)]
+    # give every node several children so each level needs >= 2 bits
+    extra = [(f"C{i}_x{j}", f"C{i}") for i in range(74) for j in range(2)]
+    tax = build_taxonomy(names + [e[0] for e in extra], edges + extra)
+    enc = encode_hierarchy(tax)
+    assert enc.total_bits > 62
+    assert enc.wide_words >= 3
+    # wide interval check still works via bigints
+    subs = enc.subsumees("C70")
+    assert enc.id_of("C71") in subs
+
+
+def test_domain_range_tables():
+    onto = Ontology(
+        concepts=["A", "B"], properties=["p", "q"],
+        subclass=[("B", "A")], subprop=[("q", "p")],
+        domain={"p": ["A"]}, range_={"p": ["B"]},
+    )
+    tb = build_tbox(onto)
+    i = list(tb.dr_prop_ids).index(tb.property_id("p"))
+    assert tb.domain_table[i, 0] == tb.concept_id("A")
+    assert tb.range_table[i, 0] == tb.concept_id("B")
