@@ -38,6 +38,17 @@ def main():
     t, _ = timeit(reff, repeats=3)
     emit("kernels/msc_select_ref", t, groups=G)
 
+    N2 = 200_000
+    mask = jnp.asarray(rng.random(N2) < 0.1)
+    cap = 1 << 15
+    t, _ = timeit(ops.compact_indices, mask, cap, repeats=3)
+    emit("kernels/stream_compact_pallas", t, n=N2, cap=cap)
+    t, _ = timeit(ops.interval_compact, p, o, params, cap, repeats=3)
+    emit("kernels/interval_compact_fused_pallas", t, n=N, cap=cap)
+    argsort_ref = jax.jit(lambda: jnp.argsort(~mask, stable=True)[:cap])
+    t, _ = timeit(argsort_ref, repeats=3)
+    emit("kernels/compact_argsort_ref", t, n=N2, cap=cap)
+
     V, E, B, L = 10_000, 64, 512, 16
     table = jnp.asarray(rng.normal(size=(V, E)).astype(np.float32))
     idx = jnp.asarray(rng.integers(-1, V, (B, L)).astype(np.int32))

@@ -34,6 +34,7 @@ def _block(r):
 
 
 _rows = []
+_records = []
 
 
 def emit(name: str, seconds: float, **derived):
@@ -41,8 +42,14 @@ def emit(name: str, seconds: float, **derived):
     extra = ",".join(f"{k}={v}" for k, v in derived.items())
     line = f"{name},{us:.1f},{extra}"
     _rows.append(line)
+    _records.append({"name": name, "us_per_call": round(us, 1), **derived})
     print(line, flush=True)
 
 
 def all_rows():
     return list(_rows)
+
+
+def all_records():
+    """Structured copies of every emitted row (for the JSON artifact)."""
+    return list(_records)

@@ -16,6 +16,7 @@ Scale via env: REPRO_BENCH_UNIV (default 4 universities ~ 0.5M triples).
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -24,6 +25,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. table3,table6")
+    ap.add_argument("--json", default="BENCH_queries.json",
+                    help="machine-readable artifact path ('' disables)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -54,6 +57,19 @@ def main() -> None:
             print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
             raise
     print(f"# total bench wall: {time.time() - t0:.1f}s")
+
+    if args.json:
+        from benchmarks.common import BENCH_UNIVERSITIES, all_records
+
+        artifact = {
+            "bench_universities": BENCH_UNIVERSITIES,
+            "sections": sorted(chosen & set(sections)),
+            "wall_seconds": round(time.time() - t0, 1),
+            "rows": all_records(),
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"# wrote {args.json} ({len(artifact['rows'])} rows)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification on CPU. Pallas kernels run in interpret=True mode
+# (selected automatically off-TPU), so kernel code is exercised end-to-end.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -59,22 +59,32 @@ class KnowledgeBase:
             full_stats=fstats,
         )
 
-    def engine(self, mode: str = "litemat") -> QueryEngine:
-        if mode not in self._engines:
+    def engine(self, mode: str = "litemat", use_index: bool = True) -> QueryEngine:
+        """Cached QueryEngine per (mode, use_index).
+
+        ``use_index=False`` forces the scan-only path — the oracle the
+        indexed executables are validated against (tests/benchmarks).
+        """
+        key = (mode, use_index)
+        if key not in self._engines:
             store = {
                 "litemat": self.lite_spo,
                 "full": self.full_spo,
                 "rewrite": self.kb.spo,
             }[mode]
-            self._engines[mode] = QueryEngine(kb=self.kb, spo=store, mode=mode, dtb=self.dtb)
-        return self._engines[mode]
+            self._engines[key] = QueryEngine(kb=self.kb, spo=store, mode=mode,
+                                             dtb=self.dtb, use_index=use_index)
+        return self._engines[key]
 
-    def query(self, patterns, select=None, mode: str = "litemat"):
-        rows, sel = self.engine(mode).run(patterns, select=select)
+    def query(self, patterns, select=None, mode: str = "litemat",
+              use_index: bool = True):
+        rows, sel = self.engine(mode, use_index).run(patterns, select=select)
         return rows, sel
 
-    def answers(self, patterns, select=None, mode: str = "litemat") -> set:
-        rows, _ = self.query(patterns, select=select, mode=mode)
+    def answers(self, patterns, select=None, mode: str = "litemat",
+                use_index: bool = True) -> set:
+        rows, _ = self.query(patterns, select=select, mode=mode,
+                             use_index=use_index)
         return {tuple(r) for r in rows.tolist()}
 
     def sizes(self) -> dict:

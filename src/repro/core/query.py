@@ -15,14 +15,32 @@ discipline: every operator carries a static capacity + validity mask +
 overflow counter, and the engine re-executes with doubled capacities if an
 overflow is reported (power-of-two buckets keep recompiles bounded).
 
-Beyond the paper (it declares join ordering out of scope): the planner runs
-each pattern's filter *count* first — one cheap reduction pass — and joins
+Execution strategy per pattern (chosen host-side during planning):
+
+  * ``slice`` — any litemat/full pattern whose constants are pure intervals
+    with a constant predicate resolves against the sorted store indexes
+    (core/index.py): O(log N) host binary searches yield contiguous row
+    ranges (one per spill interval), and the device work is a single
+    contiguous gather.  The range lengths give the planner *exact*
+    cardinalities with zero device passes.
+  * ``scan``  — residual patterns (rewrite mode, member sets, variable
+    predicates) stream the store once through the Pallas compaction kernel
+    (kernels/stream_compact.py).  Simple interval predicates fuse the
+    filter into the same kernel pass; the compaction's total doubles as the
+    match count, so there is no separate counting pass at execution time.
+
+Every (mode, pattern-signature, capacity-bucket) combination is lowered to
+ONE jitted executable and memoized in ``QueryEngine._exec_cache``: repeated
+queries — and *parameterized* queries that differ only in constants, which
+enter the trace as device scalars — reuse the compiled plan instead of
+retracing XLA.
+
+Beyond the paper (it declares join ordering out of scope): the planner joins
 in ascending-cardinality order, which also gives capacity estimates.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import numpy as np
 
@@ -30,11 +48,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.abox import EncodedKB
+from repro.core.index import StoreIndex
 from repro.core.materialize import DeviceTBox
-from repro.utils.hashing import fingerprint_string
-from repro.utils import pair64
+from repro.kernels import ops
 
 INVALID = jnp.int32(np.iinfo(np.int32).max)
+_I32_MIN = int(np.iinfo(np.int32).min)
+_I32_MAX = int(np.iinfo(np.int32).max)
 
 
 def is_var(t) -> bool:
@@ -59,6 +79,114 @@ class Term:
 
 
 # ---------------------------------------------------------------------------
+# Static plan signatures vs dynamic (traced) constants
+#
+# A query plan is split into a hashable *signature* — everything that shapes
+# the XLA computation — and a pytree of device scalars/arrays that enter the
+# trace as arguments.  Two queries with the same signature share one
+# compiled executable regardless of their constants.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TermSig:
+    kind: str  # 'interval' | 'members'
+    n_spills: int = 0
+    mem_cap: int = 0  # padded power-of-two member-set length
+
+
+@dataclass(frozen=True)
+class PatternSig:
+    pvars: tuple  # per-position var name or None
+    strategy: str  # 'slice' | 'scan'
+    s_sig: TermSig | None = None
+    p_sig: TermSig | None = None
+    o_sig: TermSig | None = None
+    store: str = "pos"  # slice: which sorted permutation
+    k: int = 1  # slice: number of contiguous ranges
+    residual: tuple = ()  # slice: positions re-checked after the gather
+    extra_caps: tuple | None = None  # rewrite type pattern: (dom_cap, rng_cap)
+    fused: bool = False  # scan: predicate fused into the compaction kernel
+
+
+def _pow2(n: int, floor: int = 8) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), int(np.log2(floor)))
+
+
+def _clip32(v) -> int:
+    return int(np.clip(int(v), _I32_MIN, _I32_MAX))
+
+
+def _pad_set(ids: np.ndarray):
+    """Sorted id set -> (pow2 bucket, INT32_MAX-padded device array)."""
+    cap = _pow2(len(ids))
+    out = np.full(cap, _I32_MAX, np.int32)
+    out[: len(ids)] = ids
+    return cap, jnp.asarray(out)
+
+
+def _lower_term(t: Term | None):
+    """Host Term -> (static TermSig, traced int32 array) or (None, None)."""
+    if t is None:
+        return None, None
+    if t.members is not None:
+        cap, mem = _pad_set(t.members)
+        return TermSig("members", mem_cap=cap), mem
+    vals = [_clip32(t.lo), _clip32(t.hi)]
+    for lo, hi in t.spills:
+        vals += [_clip32(lo), _clip32(hi)]
+    return (TermSig("interval", n_spills=len(t.spills)),
+            jnp.asarray(np.asarray(vals, np.int32)))
+
+
+def _term_mask_dyn(col, sig: TermSig, vals):
+    """Per-column membership mask with traced bounds (spill count static)."""
+    if sig.kind == "members":
+        pos = jnp.clip(jnp.searchsorted(vals, col), 0, vals.shape[0] - 1)
+        return (vals[pos] == col) & (col != INVALID)
+    m = (col >= vals[0]) & (col < vals[1])
+    for i in range(sig.n_spills):
+        m = m | ((col >= vals[2 + 2 * i]) & (col < vals[3 + 2 * i]))
+    return m
+
+
+def _in_set(col, arr):
+    """Sorted-membership test; arr is INT32_MAX-padded (possibly all-pad)."""
+    pos = jnp.clip(jnp.searchsorted(arr, col), 0, arr.shape[0] - 1)
+    return (arr[pos] == col) & (col != INVALID)
+
+
+def _type_rewrite_masks_dyn(spo, mem, tid, dom, rng):
+    """Rewrite-mode (?x rdf:type C): explicit ∪ domain ∪ range branches.
+
+    Returns (mask, xcol): which triples contribute and which column binds ?x
+    (subjects for explicit/domain branches, objects for range branches) —
+    the full RDFS reformulation the paper's Q4' illustrates.
+    """
+    s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
+    m_expl = (p == tid) & _in_set(o, mem)
+    m_dom = _in_set(p, dom)
+    m_rng = _in_set(p, rng)
+    mask = (m_expl | m_dom | m_rng) & (s != INVALID)
+    xcol = jnp.where(m_rng & ~(m_expl | m_dom), o, s)
+    return mask, xcol
+
+
+def _scan_mask(sig: PatternSig, spo, dyn):
+    """Full-store boolean mask for a scan pattern (non-fused path)."""
+    if sig.extra_caps is not None:
+        return _type_rewrite_masks_dyn(spo, dyn["o"], dyn["tid"],
+                                       dyn["dom"], dyn["rng"])
+    s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
+    mask = s != INVALID
+    for tsig, col, key in ((sig.s_sig, s, "s"), (sig.p_sig, p, "p"),
+                           (sig.o_sig, o, "o")):
+        if tsig is not None:
+            mask = mask & _term_mask_dyn(col, tsig, dyn[key])
+    return mask, None
+
+
+# ---------------------------------------------------------------------------
 # Relations: struct-of-arrays with validity + overflow accounting
 # ---------------------------------------------------------------------------
 
@@ -78,103 +206,118 @@ class Relation:
         return self.cols[self.vars.index(v)]
 
 
-def _filter_matches(spo, pat_terms, mode: str):
-    """Boolean mask over the triple store for one pattern's constants."""
-    s_t, p_t, o_t = pat_terms
-    s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
-    mask = spo[:, 0] != INVALID
+def _build_relation(pvars, s, p, o, ok, total, cap: int) -> Relation:
+    """Assemble a Relation from gathered columns + validity.
 
-    def term_mask(col, term: Term, use_intervals: bool):
-        if term.members is not None:  # rewrite mode: OR over id set
-            mem = jnp.asarray(term.members, dtype=jnp.int32)
-            pos = jnp.clip(jnp.searchsorted(mem, col), 0, mem.shape[0] - 1)
-            return mem[pos] == col
-        if not use_intervals or term.hi == term.lo + 1:
-            return col == term.lo
-        m = (col >= term.lo) & (col < term.hi)
-        for lo, hi in term.spills:
-            m = m | ((col >= lo) & (col < hi))
-        return m
-
-    inference = mode == "litemat"
-    if s_t is not None:
-        mask &= term_mask(s, s_t, False)
-    if p_t is not None:
-        mask &= term_mask(p, p_t, inference)
-    if o_t is not None:
-        mask &= term_mask(o, o_t, inference)
-    return mask
-
-
-def _type_rewrite_masks(spo, o_term: Term, extra):
-    """Rewrite-mode (?x rdf:type C): explicit ∪ domain ∪ range branches.
-
-    Returns (mask, xcol): which triples contribute and which column binds ?x
-    (subjects for explicit/domain branches, objects for range branches) —
-    the full RDFS reformulation the paper's Q4' illustrates.
+    Handles repeated variables within one pattern (equality constraint) the
+    same way for both strategies.
     """
-    type_id, dom_set, rng_set = extra
-    s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
-
-    def in_set(col, ids):
-        if ids.size == 0:
-            return jnp.zeros(col.shape, bool)
-        arr = jnp.asarray(ids, dtype=jnp.int32)
-        pos = jnp.clip(jnp.searchsorted(arr, col), 0, arr.shape[0] - 1)
-        return arr[pos] == col
-
-    mem = jnp.asarray(o_term.members, dtype=jnp.int32)
-    pos = jnp.clip(jnp.searchsorted(mem, o), 0, mem.shape[0] - 1)
-    m_expl = (p == type_id) & (mem[pos] == o)
-    m_dom = in_set(p, dom_set)
-    m_rng = in_set(p, rng_set)
-    mask = (m_expl | m_dom | m_rng) & (s != INVALID)
-    xcol = jnp.where(m_rng & ~(m_expl | m_dom), o, s)
-    return mask, xcol
-
-
-def scan_relation(spo, pattern_vars, pat_terms, mode: str, cap: int, extra=None):
-    """Filter the store and compact matching rows into a Relation."""
-    if extra is not None:  # rewrite-mode type pattern (?x rdf:type C)
-        mask, xcol = _type_rewrite_masks(spo, pat_terms[2], extra)
-        n_match = mask.astype(jnp.int32).sum()
-        order = jnp.argsort(~mask, stable=True)
-        take = order[:cap]
-        ok = mask[take]
-        var = next(v for v in pattern_vars if v is not None)
-        cols = [jnp.where(ok, xcol[take], INVALID)]
-        return Relation(
-            vars=(var,), cols=jnp.stack(cols), valid=ok,
-            overflow=jnp.maximum(n_match - cap, 0),
-        ), n_match
-    mask = _filter_matches(spo, pat_terms, mode)
-    n_match = mask.astype(jnp.int32).sum()
-    order = jnp.argsort(~mask, stable=True)  # matches first, original order
-    take = order[:cap]
-    ok = mask[take]
     cols = []
     seen = {}
-    s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
-    eq_extra = None
-    for v, colv in zip(pattern_vars, (s, p, o)):
+    eq = None
+    for v, colv in zip(pvars, (s, p, o)):
         if v is None:
             continue
         if v in seen:  # repeated var in one pattern: equality constraint
-            eq_extra = (seen[v], colv)
+            eq = (seen[v], colv)
             continue
         seen[v] = colv
-        cols.append(jnp.where(ok, colv[take], INVALID))
-    if eq_extra is not None:
-        same = eq_extra[0][take] == eq_extra[1][take]
-        ok = ok & same
-        cols = [jnp.where(ok, c, INVALID) for c in cols]
-    overflow = jnp.maximum(n_match - cap, 0)
+        cols.append(colv)
+    if eq is not None:
+        ok = ok & (eq[0] == eq[1])
+    cols = [jnp.where(ok, c, INVALID) for c in cols]
     return Relation(
-        vars=tuple(v for v in dict.fromkeys(v for v in pattern_vars if v is not None)),
+        vars=tuple(seen),
         cols=jnp.stack(cols) if cols else jnp.zeros((0, cap), jnp.int32),
         valid=ok,
-        overflow=overflow,
-    ), n_match
+        overflow=jnp.maximum(total - cap, 0),
+    )
+
+
+def _gather_ranges(rows, starts, lens, cap: int):
+    """Concatenate k contiguous row ranges of a sorted store into [cap] rows."""
+    src, ok, total = ops.segment_positions(starts, lens, cap)
+    g = rows[jnp.clip(src, 0, rows.shape[0] - 1)]
+    return g, ok, total
+
+
+def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
+    """One pattern -> (Relation, match count), inside the jitted executable."""
+    if sig.strategy == "slice":
+        rows = stores[sig.store]
+        g, ok, total = _gather_ranges(rows, dyn["starts"], dyn["lens"], cap)
+        s, p, o = g[:, 0], g[:, 1], g[:, 2]
+        for posi in sig.residual:
+            tsig = (sig.s_sig, sig.p_sig, sig.o_sig)[posi]
+            key = ("s", "p", "o")[posi]
+            ok = ok & _term_mask_dyn((s, p, o)[posi], tsig, dyn[key])
+        return _build_relation(sig.pvars, s, p, o, ok, total, cap), total
+
+    spo = stores["spo"]
+    if sig.extra_caps is not None:  # rewrite-mode type pattern (?x rdf:type C)
+        mask, xcol = _scan_mask(sig, spo, dyn)
+        take, ok, total = ops.compact_indices(mask, cap)
+        var = next(v for v in sig.pvars if v is not None)
+        cols = [jnp.where(ok, xcol[take], INVALID)]
+        rel = Relation(vars=(var,), cols=jnp.stack(cols), valid=ok,
+                       overflow=jnp.maximum(total - cap, 0))
+        return rel, total
+    if sig.fused:
+        pv, ov = dyn.get("p"), dyn.get("o")
+        plo = pv[0] if pv is not None else jnp.int32(_I32_MIN)
+        phi = pv[1] if pv is not None else jnp.int32(_I32_MAX)
+        olo = ov[0] if ov is not None else jnp.int32(_I32_MIN)
+        ohi = ov[1] if ov is not None else jnp.int32(_I32_MAX)
+        params = jnp.stack([plo, phi, olo, ohi]).astype(jnp.int32)
+        take, ok, total = ops.interval_compact(spo[:, 1], spo[:, 2], params, cap)
+    else:
+        mask, _ = _scan_mask(sig, spo, dyn)
+        take, ok, total = ops.compact_indices(mask, cap)
+    g = spo[take]
+    return _build_relation(sig.pvars, g[:, 0], g[:, 1], g[:, 2], ok, total,
+                           cap), total
+
+
+def scan_relation(spo, pattern_vars, pat_terms, mode: str, cap: int, extra=None):
+    """Filter the store and compact matching rows into a Relation.
+
+    Standalone oracle entry point (the engine lowers patterns once and runs
+    them through cached executables instead).
+    """
+    sig, dyn = _lower_scan(pattern_vars, pat_terms, extra, mode)
+    rel, total = _eval_pattern(sig, cap, {"spo": spo}, dyn)
+    return rel, total
+
+
+def _lower_scan(pvars, terms, extra, mode: str):
+    """Lower one pattern to a scan signature + traced constants."""
+    s_sig, s_dyn = _lower_term(terms[0])
+    p_sig, p_dyn = _lower_term(terms[1])
+    o_sig, o_dyn = _lower_term(terms[2])
+    dyn = {}
+    if s_dyn is not None:
+        dyn["s"] = s_dyn
+    if p_dyn is not None:
+        dyn["p"] = p_dyn
+    if o_dyn is not None:
+        dyn["o"] = o_dyn
+    if extra is not None:
+        tid, dom, rng = extra
+        dom_cap, dom_arr = _pad_set(dom)
+        rng_cap, rng_arr = _pad_set(rng)
+        dyn.update(tid=jnp.int32(tid), dom=dom_arr, rng=rng_arr)
+        return PatternSig(pvars=pvars, strategy="scan", o_sig=o_sig,
+                          extra_caps=(dom_cap, rng_cap)), dyn
+    # litemat/full stores are compacted (no INVALID rows), so pure-interval
+    # predicates on p/o can fuse into the compaction kernel's one pass
+    fused = (
+        mode in ("litemat", "full")
+        and s_sig is None
+        and (p_sig is None or (p_sig.kind == "interval" and p_sig.n_spills == 0))
+        and (o_sig is None or (o_sig.kind == "interval" and o_sig.n_spills == 0))
+    )
+    return PatternSig(pvars=pvars, strategy="scan", s_sig=s_sig, p_sig=p_sig,
+                      o_sig=o_sig, fused=fused), dyn
 
 
 def join(a: Relation, b: Relation, cap: int) -> Relation:
@@ -232,10 +375,8 @@ def distinct(rel: Relation, select: tuple, cap: int) -> Relation:
         neq = neq | (c[1:] != c[:-1])
     first = jnp.concatenate([jnp.ones((1,), bool), neq])
     keep = first & valid
-    n = keep.astype(jnp.int32).sum()
-    order = jnp.argsort(~keep, stable=True)[:cap]
-    ok = keep[order]
-    out = jnp.stack([jnp.where(ok, c[order], INVALID) for c in cols])
+    take, ok, n = ops.compact_indices(keep, cap)
+    out = jnp.stack([jnp.where(ok, c[take], INVALID) for c in cols])
     return Relation(
         vars=select, cols=out, valid=ok,
         overflow=rel.overflow + jnp.maximum(n - cap, 0),
@@ -254,11 +395,22 @@ class QueryEngine:
     mode: str = "litemat"  # litemat | full | rewrite
     dtb: DeviceTBox | None = None
     slack: float = 1.5
-    _exec_cache: dict = field(default_factory=dict)
+    use_index: bool = True  # resolve eligible patterns via sorted indexes
+    _exec_cache: dict = field(default_factory=dict, repr=False)
+    _index: StoreIndex | None = field(default=None, repr=False)
+    cache_stats: dict = field(default_factory=lambda: {"hits": 0, "misses": 0},
+                              repr=False)
 
     def __post_init__(self):
         if self.dtb is None and self.kb.tbox is not None:
             self.dtb = DeviceTBox.build(self.kb.tbox)
+
+    @property
+    def index(self) -> StoreIndex:
+        """Sorted permutations of this engine's store (built on first use)."""
+        if self._index is None:
+            self._index = StoreIndex.build(self.spo)
+        return self._index
 
     # -- constant resolution (context-aware, paper §III intro) --------------
     def _resolve(self, term, position: str, type_pattern: bool) -> Term:
@@ -330,9 +482,102 @@ class QueryEngine:
             np.sort(np.unique(np.array(rng_set, dtype=np.int32))),
         )
 
+    # -- pattern lowering: strategy choice + cardinality ---------------------
+    def _lower(self, pvars, terms, extra):
+        """-> (PatternSig, dyn pytree, host count or None).
+
+        ``count`` is exact and free (range lengths) for slice patterns;
+        scan patterns report None and are counted by one cached device pass.
+        """
+        s_t, p_t, o_t = terms
+        indexable = (
+            self.use_index
+            and extra is None
+            and self.mode in ("litemat", "full")
+            and p_t is not None and p_t.members is None
+            and (s_t is None or s_t.members is None)
+            and (o_t is None or o_t.members is None)
+        )
+        if indexable:
+            idx = self.index
+            # effective predicate id: exact single-width interval, or a wide
+            # interval whose store run holds only one distinct predicate
+            # (the common rdf:type case) — both collapse to composite ranges
+            pid = p_t.lo if (p_t.hi == p_t.lo + 1 and not p_t.spills) else None
+            if pid is None and not p_t.spills:
+                pid = idx.single_p_run(*idx.p_range(p_t.lo, p_t.hi))
+            ranges = None
+            store = "pos"
+            residual = ()
+            o_sig = o_dyn = None
+            if s_t is None and o_t is None:
+                ivs = [(p_t.lo, p_t.hi)] + list(p_t.spills)
+                ranges = [idx.p_range(a, b) for a, b in ivs]
+            elif s_t is None and o_t is not None:
+                if pid is not None:
+                    ivs = [(o_t.lo, o_t.hi)] + list(o_t.spills)
+                    ranges = [idx.po_range(pid, a, b) for a, b in ivs]
+                else:  # mixed p run sliced, o re-checked on the gathered rows
+                    ivs = [(p_t.lo, p_t.hi)] + list(p_t.spills)
+                    ranges = [idx.p_range(a, b) for a, b in ivs]
+                    residual = (2,)
+                    o_sig, o_dyn = _lower_term(o_t)
+            elif s_t is not None and pid is not None:
+                ivs = [(s_t.lo, s_t.hi)] + list(s_t.spills)
+                ranges = [idx.ps_range(pid, a, b) for a, b in ivs]
+                store = "pso"
+                if o_t is not None:  # o re-checked on the gathered rows
+                    residual = (2,)
+                    o_sig, o_dyn = _lower_term(o_t)
+            if ranges is not None:
+                lens = [max(r1 - r0, 0) for r0, r1 in ranges]
+                sig = PatternSig(pvars=pvars, strategy="slice", store=store,
+                                 k=len(ranges), o_sig=o_sig, residual=residual)
+                dyn = {
+                    "starts": jnp.asarray([r0 for r0, _ in ranges], jnp.int32),
+                    "lens": jnp.asarray(lens, jnp.int32),
+                }
+                if o_dyn is not None:
+                    dyn["o"] = o_dyn
+                return sig, dyn, sum(lens)
+        sig, dyn = _lower_scan(pvars, terms, extra, self.mode)
+        return sig, dyn, None
+
+    def _pattern_count(self, sig: PatternSig, dyn) -> int:
+        """Planning cardinality of a scan pattern (cached jitted reduction)."""
+        key = ("count", sig)
+        fn = self._exec_cache.get(key)
+        if fn is None:
+            def count_device(spo, d, _sig=sig):
+                mask, _ = _scan_mask(_sig, spo, d)
+                return mask.astype(jnp.int32).sum()
+            fn = jax.jit(count_device)
+            self._exec_cache[key] = fn
+        return int(fn(self.spo, dyn))
+
+    def _executable(self, key, sigs, caps, join_cap: int, select):
+        """Memoized jitted plan: signature + buckets -> compiled function."""
+        fn = self._exec_cache.get(key)
+        if fn is None:
+            self.cache_stats["misses"] += 1
+
+            def run_device(stores, dyns):
+                rel = None
+                for sig, cap, dyn in zip(sigs, caps, dyns):
+                    r, _ = _eval_pattern(sig, cap, stores, dyn)
+                    rel = r if rel is None else join(rel, r, join_cap)
+                out = distinct(rel, select, join_cap)
+                return out.cols, out.valid, out.overflow
+
+            fn = jax.jit(run_device)
+            self._exec_cache[key] = fn
+        else:
+            self.cache_stats["hits"] += 1
+        return fn
+
     @staticmethod
     def _bucket(n: int) -> int:
-        return 1 << max(8, int(np.ceil(np.log2(max(n, 1)))))
+        return _pow2(n, floor=256)
 
     @staticmethod
     def _plan_order(prepared, counts):
@@ -352,34 +597,33 @@ class QueryEngine:
     def run(self, patterns, select=None, max_retries: int = 6):
         """Execute; returns (rows int32[k, n_select], select var names)."""
         prepared = self._prepare(patterns)
+        lowered = [self._lower(*pre) for pre in prepared]
         counts = [
-            int(_count_matches(self.spo, terms, self.mode, extra))
-            for _, terms, extra in prepared
+            c if c is not None else self._pattern_count(sig, dyn)
+            for sig, dyn, c in lowered
         ]
         order = self._plan_order(prepared, counts)
         caps = [self._bucket(int(c * self.slack) + 16) for c in counts]
         join_cap = self._bucket(int(max(counts) * self.slack) + 16)
 
+        sigs = tuple(lowered[i][0] for i in order)
+        dyns = tuple(lowered[i][1] for i in order)
+        all_vars = tuple(dict.fromkeys(
+            v for sig in sigs for v in sig.pvars if v is not None))
+        sel = tuple(select) if select else all_vars
+        stores = {"spo": self.spo}
+        for perm in {sig.store for sig in sigs if sig.strategy == "slice"}:
+            stores[perm] = getattr(self.index, f"{perm}_rows")
+
         for _ in range(max_retries):
-            rel = None
-            for oi in order:
-                pvars, terms, extra = prepared[oi]
-                r, _ = scan_relation(self.spo, pvars, terms, self.mode, caps[oi], extra)
-                rel = r if rel is None else join(rel, r, join_cap)
-            sel = tuple(select) if select else rel.vars
-            out = distinct(rel, sel, join_cap)
-            if int(out.overflow) == 0:
-                n = int(out.valid.sum())
-                rows = np.asarray(out.cols)[:, :n].T
+            ordered_caps = tuple(caps[i] for i in order)
+            key = ("exec", self.mode, sigs, ordered_caps, join_cap, sel)
+            fn = self._executable(key, sigs, ordered_caps, join_cap, sel)
+            cols, valid, overflow = fn(stores, dyns)
+            if int(overflow) == 0:
+                n = int(valid.sum())
+                rows = np.asarray(cols)[:, :n].T
                 return rows, sel
             join_cap *= 2
             caps = [c * 2 for c in caps]
         raise RuntimeError("query kept overflowing its capacity buckets")
-
-
-def _count_matches(spo, terms, mode: str, extra=None) -> jnp.ndarray:
-    if extra is not None:
-        mask, _ = _type_rewrite_masks(spo, terms[2], extra)
-    else:
-        mask = _filter_matches(spo, terms, mode)
-    return mask.astype(jnp.int32).sum()

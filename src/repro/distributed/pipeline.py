@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.utils.jaxcompat import shard_map
 
 
 def gpipe_forward(apply_fn, axis_name: str, n_stages: int, n_micro: int):

@@ -21,6 +21,11 @@ from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.interval_filter import interval_filter_pallas
 from repro.kernels.msc_select import msc_select_pallas
 from repro.kernels.pair_search import pair_search_pallas
+from repro.kernels.stream_compact import (
+    interval_compact_pallas, stream_compact_pallas,
+)
+
+INVALID = np.int32(np.iinfo(np.int32).max)
 
 
 def _interpret() -> bool:
@@ -96,7 +101,68 @@ def pair_search(table_hi, table_lo, qhi, qlo, block: int = 1024):
     return out[:n]
 
 
+def segment_positions(starts, lens, cap: int):
+    """Map output slots [0, cap) onto k variable-length segments.
+
+    One exclusive prefix sum over ``lens`` assigns every output slot j a
+    (segment, rank-in-segment); returns (src = starts[seg] + rank,
+    ok = j < total, total).  Shared by the kernel-tile stitch below and the
+    sorted-index range gather in core/query.py — the searchsorted(side=
+    "right") addressing lives in exactly one place.
+    """
+    offsets = jnp.cumsum(lens)
+    total = offsets[-1]
+    begin = offsets - lens
+    j = jnp.arange(cap, dtype=jnp.int32)
+    seg = jnp.clip(jnp.searchsorted(offsets, j, side="right"),
+                   0, lens.shape[0] - 1)
+    src = starts[seg] + (j - begin[seg])
+    return src, j < total, total
+
+
+def _assemble_compact(local, counts, cap: int, block: int):
+    """Stitch tile-compacted indices into one front-compacted [cap] gather.
+
+    The per-tile counts are the segment lengths (tile t's matches start at
+    t*block); the total match count rides along for free — callers use it
+    for overflow accounting instead of a second full counting pass.
+    """
+    tile_starts = jnp.arange(counts.shape[0], dtype=jnp.int32) * block
+    src, ok, total = segment_positions(tile_starts, counts, cap)
+    take = jnp.where(ok, local[jnp.clip(src, 0, local.shape[0] - 1)], 0)
+    return take, ok, total
+
+
+@partial(jax.jit, static_argnames=("cap", "block"))
+def compact_indices(mask, cap: int, block: int = 512):
+    """Stable compaction of an arbitrary bool mask.
+
+    Returns (take int32[cap] — indices of the first cap True positions,
+    0-filled past the end; ok bool[cap]; total int32 match count).  Replaces
+    the ``jnp.argsort(~mask, stable=True)[:cap]`` idiom in O(N).
+    """
+    m = _pad1(mask.astype(jnp.int32), block, np.int32(0))
+    local, counts = stream_compact_pallas(m, block=block, interpret=_interpret())
+    return _assemble_compact(local, counts, cap, block)
+
+
+@partial(jax.jit, static_argnames=("cap", "block"))
+def interval_compact(p, o, params, cap: int, block: int = 512):
+    """Fused LiteMat interval predicate + compaction in one pass.
+
+    params = int32[4] (plo, phi, olo, ohi); padding uses INT32_MAX which can
+    never satisfy ``p < phi`` for any real predicate bound.  Same returns as
+    ``compact_indices``.
+    """
+    pp = _pad1(p, block, INVALID)
+    po = _pad1(o, block, INVALID)
+    local, counts = interval_compact_pallas(pp, po, params, block=block,
+                                            interpret=_interpret())
+    return _assemble_compact(local, counts, cap, block)
+
+
 __all__ = [
     "interval_filter", "msc_select", "closure_expand",
-    "embedding_bag", "embedding_bag_mean", "ell_spmm", "pair_search", "ref",
+    "embedding_bag", "embedding_bag_mean", "ell_spmm", "pair_search",
+    "compact_indices", "interval_compact", "segment_positions", "ref",
 ]

@@ -71,6 +71,25 @@ def ref_ell_spmm(x, neighbors, weights):
     return (rows * w[..., None]).sum(axis=1)
 
 
+def ref_stream_compact(mask, block: int):
+    """Tile-local stable compaction: (global match indices, per-tile counts).
+
+    mask length must be a multiple of ``block``.  Tile t's output slice
+    ``[t*block:(t+1)*block]`` holds the global indices of its set mask bits
+    in ascending order, INVALID-padded — the contract of
+    ``stream_compact_pallas`` / ``interval_compact_pallas``.
+    """
+    n = mask.shape[0]
+    nb = n // block
+    m = jnp.asarray(mask).astype(jnp.int32).reshape(nb, block)
+    cnt = m.sum(axis=1)
+    order = jnp.argsort(1 - m, axis=1, stable=True)  # matches first, in order
+    gidx = jnp.arange(nb, dtype=jnp.int32)[:, None] * block + order.astype(jnp.int32)
+    slot = jnp.arange(block, dtype=jnp.int32)[None, :]
+    local = jnp.where(slot < cnt[:, None], gidx, INVALID)
+    return local.reshape(-1), cnt.astype(jnp.int32)
+
+
 def ref_pair_search(table_hi, table_lo, qhi, qlo):
     """Left insertion point of each query pair in a lex-sorted pair table."""
     from repro.utils import pair64

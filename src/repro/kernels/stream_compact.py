@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: stable stream compaction (count -> prefix-sum -> scatter).
+
+The query engine's hot idiom was ``jnp.argsort(~mask, stable=True)[:cap]`` —
+an O(N log N) sort just to move matching rows to the front.  Compaction is
+the right primitive: each ``block``-sized tile counts its matches, computes
+per-match target slots with an intra-tile prefix sum, and scatters its
+*global row indices* to the front of its output tile (INVALID padding
+behind).  The host wrapper (kernels/ops.py) stitches tiles together with one
+exclusive prefix sum over the per-tile counts plus a single gather — O(N)
+total, and the per-tile counts double as the match count, so the engine no
+longer needs a separate counting pass over the store.
+
+The intra-tile scatter is expressed as a one-hot select-and-reduce — a
+(block, block) compare cube — because TPU has no vector scatter; at the
+default block of 512 the cube is 1 MB of VMEM and pure VPU work.
+
+Two entry points share the body:
+
+  * ``stream_compact_pallas``   — compacts an arbitrary precomputed mask
+    (spill intervals, member sets, rewrite-mode type masks),
+  * ``interval_compact_pallas`` — fuses the LiteMat interval predicate
+    (kernels/interval_filter.py) with compaction in ONE pass over the
+    store: p in [plo, phi) AND o in [olo, ohi), constants in SMEM.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 512
+INVALID = np.int32(np.iinfo(np.int32).max)
+
+
+def _compact_body(m, idx_ref, cnt_ref):
+    """m: int32[block] 0/1 -> front-compacted global indices + tile count."""
+    block = m.shape[0]
+    m2 = m.reshape(1, block)
+    pos = jnp.cumsum(m2, axis=1) - 1  # target slot of each match
+    cnt = jnp.sum(m2)
+    out_slot = lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    src_idx = lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    sel = (pos == out_slot) & (m2 != 0)  # one-hot: slot j <- source i
+    local = jnp.sum(jnp.where(sel, src_idx, 0), axis=1)  # int32[block]
+    slot = lax.broadcasted_iota(jnp.int32, (1, block), 1).reshape(block)
+    base = pl.program_id(0) * block
+    idx_ref[...] = jnp.where(slot < cnt, local + base, INVALID)
+    cnt_ref[0] = cnt
+
+
+def _mask_kernel(mask_ref, idx_ref, cnt_ref):
+    _compact_body(mask_ref[...].astype(jnp.int32), idx_ref, cnt_ref)
+
+
+def _fused_kernel(params_ref, p_ref, o_ref, idx_ref, cnt_ref):
+    plo, phi = params_ref[0], params_ref[1]
+    olo, ohi = params_ref[2], params_ref[3]
+    p = p_ref[...]
+    o = o_ref[...]
+    m = (p >= plo) & (p < phi) & (o >= olo) & (o < ohi)
+    _compact_body(m.astype(jnp.int32), idx_ref, cnt_ref)
+
+
+def stream_compact_pallas(mask, *, block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """mask: int32[N] (N a multiple of block) ->
+    (tile-compacted global indices int32[N], per-tile counts int32[N/block])."""
+    n = mask.shape[0]
+    nb = n // block
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mask)
+
+
+def interval_compact_pallas(p, o, params, *, block: int = DEFAULT_BLOCK,
+                            interpret: bool = False):
+    """p, o: int32[N]; params: int32[4] = (plo, phi, olo, ohi) ->
+    (tile-compacted match indices, per-tile counts) — predicate fused."""
+    n = p.shape[0]
+    nb = n // block
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(params, p, o)

@@ -142,7 +142,7 @@ def make_serve_step_sharded(cfg: MINDConfig, mesh, topk: int = 64,
     B is expected tiny (retrieval_cand has B=1); interests are computed
     outside and replicated.
     """
-    from jax import shard_map
+    from repro.utils.jaxcompat import shard_map
     from jax.sharding import PartitionSpec as P
 
     axes = tuple(mesh.axis_names)

@@ -7,11 +7,18 @@ differ only in constants.  Because LiteMat turns inference into interval
 compares, a parameterized plan is a pure tensor function of (lo, hi) pairs —
 a whole batch executes as ONE vmapped XLA call over the store.
 
+Request resolution rides the (object, subject)-sorted type index
+(core/index.py): a class interval [lo, hi) is two host binary searches +
+one contiguous device slice, so per-request work is bounded by the *largest
+class in the batch* (bucketed to a power of two), not the type view.
 Answer semantics are DISTINCT subjects (SPARQL set semantics, matching the
 QueryEngine oracle): an instance can legitimately carry several MSC types
-inside the queried interval (e.g. Chair + FullProfessor under Professor), so
-each request deduplicates its hits.  The type-triple subset is pre-extracted
-once so the per-request sort runs over ~#type-rows, not the whole store.
+inside the queried interval (e.g. Chair + FullProfessor under Professor),
+so each request still deduplicates its own slice — a sort over the slice,
+never over the view.
+
+``invalidate()`` drops every derived view; call it after swapping or
+mutating the underlying store (the views are snapshots, not live).
 """
 from __future__ import annotations
 
@@ -24,6 +31,8 @@ import jax.numpy as jnp
 from functools import partial
 
 from repro.core.engine import KnowledgeBase
+from repro.core.index import TypeIndex
+from repro.kernels import ops
 
 INVALID = jnp.int32(np.iinfo(np.int32).max)
 
@@ -39,41 +48,53 @@ def _distinct_count_topk(hits, topk: int):
     return count, jnp.where(top == INVALID, -1, top)
 
 
-@partial(jax.jit, static_argnames=("topk",))
-def _serve_class_members(ty_s, ty_o, clo, chi, topk: int):
-    """vmapped Q1 plan: (B,) class intervals -> distinct counts + members."""
-
-    def one(lo, hi):
-        mask = (ty_o >= lo) & (ty_o < hi)
-        return _distinct_count_topk(jnp.where(mask, ty_s, INVALID), topk)
-
-    return jax.vmap(one)(clo, chi)
+def _slice_hits(subj_os, start_row, len_row, cap: int):
+    """Gather one request's type-index segments (primary + spill intervals)."""
+    src, ok, _ = ops.segment_positions(start_row, len_row, cap)
+    return jnp.where(ok, subj_os[jnp.clip(src, 0, subj_os.shape[0] - 1)],
+                     INVALID)
 
 
-@partial(jax.jit, static_argnames=("topk",))
-def _serve_class_prop_join(ty_s, ty_o, ps_sorted, p_sorted, clo, chi, plo, phi, topk: int):
+@partial(jax.jit, static_argnames=("cap", "topk"))
+def _serve_class_members(subj_os, starts, lens, cap: int, topk: int):
+    """vmapped Q1 plan over index slices: (B, k) ranges -> counts + members."""
+
+    def one(start_row, len_row):
+        return _distinct_count_topk(
+            _slice_hits(subj_os, start_row, len_row, cap), topk)
+
+    return jax.vmap(one)(starts, lens)
+
+
+@partial(jax.jit, static_argnames=("cap", "topk", "kp"))
+def _serve_class_prop_join(subj_os, ps_sorted, p_sorted, starts, lens,
+                           plo, phi, cap: int, topk: int, kp: int):
     """vmapped Q3 plan: x:C ⋈ (x p y) -> distinct-x counts + bindings.
 
-    ``ps_sorted`` are property-triple subjects pre-sorted by (p, s) once per
-    store, so each request semi-joins with two binary searches per type row.
+    The type side is an index slice; ``ps_sorted`` are property-triple
+    subjects pre-sorted by (s, p) once per store, so each sliced subject
+    semi-joins with one binary search per property interval (kp of them:
+    primary + spills, usually 1).
     """
 
     from repro.utils import pair64
 
-    def one(lo, hi, plo_, phi_):
-        tmask = (ty_o >= lo) & (ty_o < hi)
+    def one(start_row, len_row, plo_row, phi_row):
+        hits = _slice_hits(subj_os, start_row, len_row, cap)
         # rows are sorted by the (subject, predicate) composite, so the first
         # row >= (s, plo) decides the semi-join: it matches iff its subject
         # is s and its predicate is still < phi (contiguous interval run).
-        X = pair64.searchsorted_pair(
-            ps_sorted, p_sorted, ty_s, jnp.full(ty_s.shape, plo_, jnp.int32), side="left"
-        )
-        Xc = jnp.clip(X, 0, ps_sorted.shape[0] - 1)
-        hit = (ps_sorted[Xc] == ty_s) & (p_sorted[Xc] < phi_)
-        semi = tmask & hit
-        return _distinct_count_topk(jnp.where(semi, ty_s, INVALID), topk)
+        hit = jnp.zeros(hits.shape, bool)
+        for i in range(kp):
+            X = pair64.searchsorted_pair(
+                ps_sorted, p_sorted, hits,
+                jnp.full(hits.shape, plo_row[i], jnp.int32), side="left",
+            )
+            Xc = jnp.clip(X, 0, ps_sorted.shape[0] - 1)
+            hit = hit | ((ps_sorted[Xc] == hits) & (p_sorted[Xc] < phi_row[i]))
+        return _distinct_count_topk(jnp.where(hit, hits, INVALID), topk)
 
-    return jax.vmap(one)(clo, chi, plo, phi)
+    return jax.vmap(one)(starts, lens, plo, phi)
 
 
 @dataclass
@@ -84,15 +105,19 @@ class QueryServer:
     topk: int = 32
     _views: dict = field(default_factory=dict)
 
-    def _type_view(self):
-        if "type" not in self._views:
-            spo = self.K.lite_spo
-            m = np.asarray(spo[:, 1] == self.K.dtb.rdf_type_id)
-            self._views["type"] = (
-                jnp.asarray(np.asarray(spo[:, 0])[m]),
-                jnp.asarray(np.asarray(spo[:, 2])[m]),
-            )
-        return self._views["type"]
+    def invalidate(self):
+        """Drop derived views/indexes after the underlying store changed.
+
+        The server snapshots (sorted copies of) ``K.lite_spo`` on first use;
+        mutating or swapping the store does NOT propagate automatically.
+        """
+        self._views.clear()
+
+    def _type_index(self) -> TypeIndex:
+        if "type_os" not in self._views:
+            self._views["type_os"] = TypeIndex.build(
+                self.K.lite_spo, int(self.K.dtb.rdf_type_id))
+        return self._views["type_os"]
 
     def _prop_view(self):
         """Property triples sorted by (subject, predicate)."""
@@ -105,27 +130,56 @@ class QueryServer:
         return self._views["prop"]
 
     def _intervals(self, names, enc):
-        lo = np.empty(len(names), np.int32)
-        hi = np.empty(len(names), np.int32)
-        for i, n in enumerate(names):
-            (l, h), _ = enc.interval_of(n)
-            lo[i], hi[i] = l, h
-        return jnp.asarray(lo), jnp.asarray(hi)
+        """Per name: primary + spill [lo, hi) intervals, 0-padded to (B, k).
+
+        Spill intervals carry the secondary-edge subsumees under multiple
+        inheritance; dropping them would silently undercount (the
+        QueryEngine oracle honors them, so the server must too).
+        """
+        per = []
+        for n in names:
+            (lo, hi), spills = enc.interval_of(n)
+            per.append([(int(lo), int(hi))] + [(int(a), int(b))
+                                               for a, b in spills])
+        k = max(len(p) for p in per) if per else 1
+        lo = np.zeros((len(names), k), np.int32)
+        hi = np.zeros((len(names), k), np.int32)
+        for i, p in enumerate(per):
+            for j, (a, b) in enumerate(p):
+                lo[i, j], hi[i, j] = a, b
+        return lo, hi
+
+    def _ranges(self, class_names):
+        """Host-side index lookups: (starts, lens (B, k), capacity bucket)."""
+        ti = self._type_index()
+        clo, chi = self._intervals(class_names, self.K.kb.tbox.concepts)
+        starts = np.zeros(clo.shape, np.int32)
+        lens = np.zeros(clo.shape, np.int32)
+        for i in range(clo.shape[0]):
+            for j in range(clo.shape[1]):
+                starts[i, j], lens[i, j] = ti.range_of(int(clo[i, j]),
+                                                       int(chi[i, j]))
+        from repro.core.query import _pow2
+
+        longest = max(int(lens.sum(axis=1).max()) if lens.size else 1,
+                      self.topk, 1)
+        cap = _pow2(longest, floor=1)
+        return ti, jnp.asarray(starts), jnp.asarray(lens), cap
 
     def class_members(self, class_names):
         """Batch of Q1-style requests -> (distinct counts, member ids)."""
-        ty_s, ty_o = self._type_view()
-        clo, chi = self._intervals(class_names, self.K.kb.tbox.concepts)
-        counts, members = _serve_class_members(ty_s, ty_o, clo, chi, self.topk)
+        ti, starts, lens, cap = self._ranges(class_names)
+        counts, members = _serve_class_members(ti.subj, starts, lens, cap,
+                                               self.topk)
         return np.asarray(counts), np.asarray(members)
 
     def class_prop_join(self, class_names, prop_names):
         """Batch of Q3-style requests -> (distinct-x counts, x bindings)."""
-        ty_s, ty_o = self._type_view()
+        ti, starts, lens, cap = self._ranges(class_names)
         ps, pp = self._prop_view()
-        clo, chi = self._intervals(class_names, self.K.kb.tbox.concepts)
         plo, phi = self._intervals(prop_names, self.K.kb.tbox.properties)
         counts, subs = _serve_class_prop_join(
-            ty_s, ty_o, ps, pp, clo, chi, plo, phi, self.topk
+            ti.subj, ps, pp, starts, lens, jnp.asarray(plo), jnp.asarray(phi),
+            cap, self.topk, kp=int(plo.shape[1]),
         )
         return np.asarray(counts), np.asarray(subs)

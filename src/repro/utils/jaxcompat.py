@@ -1,0 +1,47 @@
+"""Version-compat shims over the moving jax sharding API surface.
+
+The codebase targets the current API (top-level ``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``check_vma=``); CI containers may
+pin jax 0.4.x where shard_map still lives in ``jax.experimental`` under the
+``check_rep=`` spelling and meshes take no axis_types.  Route every use
+through this module so version skew stays in one file.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the replication-check flag name bridged."""
+    kw = {}
+    if check_vma is not None:
+        kw["check_vma"] = check_vma
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+    except TypeError:
+        if check_vma is not None:
+            kw = {"check_rep": check_vma}
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with explicit-Auto axis_types where supported."""
+    try:
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=tuple(jax.sharding.AxisType.Auto for _ in axis_names),
+        )
+    except (AttributeError, TypeError):
+        pass
+    if hasattr(jax, "make_mesh"):  # jax >= 0.4.35, no axis_types
+        return jax.make_mesh(shape, axis_names)
+    from jax.experimental import mesh_utils  # older still
+
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axis_names)

@@ -1,0 +1,128 @@
+"""Indexed execution vs the scan-based oracle + plan-cache behaviour.
+
+The sorted-index path (core/index.py + 'slice' strategy in core/query.py)
+must be answer-identical to the scan path on arbitrary stores, across all
+three execution modes, including under capacity overflow/retry.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import KnowledgeBase, PAPER_QUERIES
+from repro.core.index import StoreIndex
+from repro.core.query import Pattern, QueryEngine
+from repro.core.tbox import Ontology
+from repro.rdf.generator import generate_random_abox
+
+MODES = ("litemat", "full", "rewrite")
+
+
+def _random_kb(seed: int) -> tuple:
+    rng = np.random.default_rng(seed)
+    nc, npr = int(rng.integers(4, 10)), int(rng.integers(2, 5))
+    concepts = [f"C{i}" for i in range(nc)]
+    props = [f"p{i}" for i in range(npr)]
+    subclass = [(concepts[i], concepts[int(rng.integers(0, i))])
+                for i in range(1, nc)]
+    subprop = [(props[i], props[int(rng.integers(0, i))])
+               for i in range(1, npr)]
+    domain = {props[0]: [concepts[0]]} if rng.random() < 0.5 else {}
+    onto = Ontology(concepts=concepts, properties=props, subclass=subclass,
+                    subprop=subprop, domain=domain, range_={})
+    raw = generate_random_abox(onto, n_instances=50, n_type_triples=80,
+                               n_prop_triples=60, seed=seed)
+    return onto, KnowledgeBase.build(raw)
+
+
+def _queries(onto):
+    qs = [
+        [Pattern("?x", "rdf:type", onto.concepts[0])],
+        [Pattern("?x", onto.properties[0], "?y")],
+        [Pattern("?x", "rdf:type", onto.concepts[0]),
+         Pattern("?x", onto.properties[0], "?y")],
+    ]
+    if len(onto.concepts) > 2:
+        qs.append([Pattern("?x", "rdf:type", onto.concepts[2])])
+    return qs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_indexed_equals_scan_on_random_stores(seed):
+    onto, K = _random_kb(seed)
+    for pats in _queries(onto):
+        for mode in MODES:
+            idx = K.answers(pats, mode=mode, use_index=True)
+            scan = K.answers(pats, mode=mode, use_index=False)
+            assert idx == scan, (seed, mode, pats)
+
+
+def test_indexed_equals_scan_on_lubm(lubm_kb):
+    K, _ = lubm_kb
+    for qn, pats in PAPER_QUERIES.items():
+        for mode in MODES:
+            assert (K.answers(pats, mode=mode, use_index=True)
+                    == K.answers(pats, mode=mode, use_index=False)), (qn, mode)
+
+
+def test_indexed_constant_subject_and_object(lubm_kb):
+    """PSO path (constant subject) + residual path (wide p, constant o)."""
+    K, _ = lubm_kb
+    rows, _ = K.query([Pattern("?x", "memberOf", "?y")])
+    s_id, o_id = int(rows[0][0]), int(rows[0][1])
+    for pats in (
+        [Pattern(s_id, "memberOf", "?y")],  # PSO slice
+        [Pattern("?x", "memberOf", o_id)],  # POS p-run + residual o check
+        [Pattern(s_id, "memberOf", "?y"), Pattern("?x", "memberOf", "?y")],
+    ):
+        for mode in ("litemat", "full"):
+            assert (K.answers(pats, mode=mode, use_index=True)
+                    == K.answers(pats, mode=mode, use_index=False)), pats
+
+
+def test_store_index_ranges(lubm_kb):
+    """Range lookups agree with brute-force boolean selection."""
+    K, _ = lubm_kb
+    idx = StoreIndex.build(K.lite_spo)
+    h = np.asarray(K.lite_spo)
+    enc = K.kb.tbox.properties
+    (plo, phi), _ = enc.interval_of("memberOf")
+    r0, r1 = idx.p_range(plo, phi)
+    assert r1 - r0 == int(((h[:, 1] >= plo) & (h[:, 1] < phi)).sum())
+    got = np.asarray(idx.pos_rows)[r0:r1]
+    want = h[(h[:, 1] >= plo) & (h[:, 1] < phi)]
+    assert {tuple(r) for r in got.tolist()} == {tuple(r) for r in want.tolist()}
+
+    tid = int(K.dtb.rdf_type_id)
+    (clo, chi), _ = K.kb.tbox.concepts.interval_of("Professor")
+    r0, r1 = idx.po_range(tid, clo, chi)
+    want_n = int(((h[:, 1] == tid) & (h[:, 2] >= clo) & (h[:, 2] < chi)).sum())
+    assert r1 - r0 == want_n
+
+
+def test_capacity_overflow_retry(lubm_kb, monkeypatch):
+    """Tiny initial buckets force the overflow/double/retry path; answers
+    must be unchanged and at least one extra executable must be compiled."""
+    K, _ = lubm_kb
+    want = K.answers(PAPER_QUERIES["Q1"])
+    eng = QueryEngine(kb=K.kb, spo=K.lite_spo, mode="litemat", dtb=K.dtb)
+    monkeypatch.setattr(QueryEngine, "_bucket", staticmethod(lambda n: 32))
+    rows, sel = eng.run(PAPER_QUERIES["Q1"], max_retries=10)
+    got = {tuple(r) for r in rows.tolist()}
+    assert got == want
+    n_exec = sum(1 for k in eng._exec_cache if k[0] == "exec")
+    assert n_exec >= 2  # first bucket overflowed, retry compiled a bigger one
+
+
+def test_plan_cache_reuse(lubm_kb):
+    """Same query twice -> cache hit; same signature with a different
+    constant (parameterized query) -> cache hit, no retrace."""
+    K, _ = lubm_kb
+    eng = QueryEngine(kb=K.kb, spo=K.lite_spo, mode="litemat", dtb=K.dtb)
+    eng.run([Pattern("?x", "memberOf", "?y")])
+    misses_after_first = eng.cache_stats["misses"]
+    eng.run([Pattern("?x", "memberOf", "?y")])
+    assert eng.cache_stats["misses"] == misses_after_first
+    assert eng.cache_stats["hits"] >= 1
+    # different property, same signature: hits as long as buckets coincide
+    eng.run([Pattern("?x", "worksFor", "?y")])
+    eng.run([Pattern("?x", "worksFor", "?y")])
+    assert eng.cache_stats["hits"] >= 2

@@ -77,15 +77,19 @@ def test_equiformer_restrict_exact(rng):
 
 def test_mind_sharded_topk_subprocess():
     """Sharded two-stage retrieval == single-device reference (8 devices)."""
-    from tests.test_distributed import _run
+    from tests.test_distributed import _NEW_JAX, _run
+
+    if not _NEW_JAX:
+        pytest.skip("multi-device subprocess test needs jax>=0.6 "
+                    "(0.4.x compat path too slow for tier-1)")
 
     out = _run(
         """
 import numpy as np, jax, jax.numpy as jnp
 from repro.models.recsys import mind
+from repro.utils.jaxcompat import make_mesh
 cfg = mind.MINDConfig(n_items=1024, embed_dim=16, hist_len=10)
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ('data', 'model'))
 params = mind.init_params(jax.random.key(0), cfg)
 rng = np.random.default_rng(0)
 hist = jnp.asarray(rng.integers(-1, 1024, (2, 10)), jnp.int32)
