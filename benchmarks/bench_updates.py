@@ -1,0 +1,99 @@
+"""Incremental-update throughput: insert/delete/compact vs full rebuild.
+
+The acceptance bar for the update subsystem: inserting a 1% delta into
+LUBM-1 through the delta overlay must beat ``KnowledgeBase.build`` from
+scratch by >= 10x — the difference between re-encoding 130K triples and
+encoding 1.3K against a dictionary that only grows.
+
+Emits (CSV + rows in BENCH_updates.json):
+    updates/build_lubm1           full build wall time (the rebuild baseline)
+    updates/insert_1pct           one 1% insert batch through the overlay
+    updates/insert_1pct_speedup   rebuild / insert ratio (must be >= 10)
+    updates/query_after_insert    Q1 latency on the live (base ∪ delta) store
+    updates/delete_0p1pct         tombstone + re-derivation delete batch
+    updates/compact               sorted-merge fold of the accumulated delta
+"""
+from __future__ import annotations
+
+import json
+import time
+
+
+def _chunks(raw, n_chunks: int, chunk: int):
+    """Disjoint slices of a delta pool as (s, p, o) column tuples."""
+    out = []
+    for i in range(n_chunks):
+        sl = slice(i * chunk, (i + 1) * chunk)
+        out.append((raw.s[sl], raw.p[sl], raw.o[sl]))
+    return out
+
+
+def main(json_path: str = "BENCH_updates.json"):
+    import numpy as np
+
+    from benchmarks.common import all_records, emit, timeit
+    from repro.core.engine import PAPER_QUERIES, KnowledgeBase
+    from repro.rdf.generator import generate_lubm
+
+    records_before = len(all_records())
+
+    base = generate_lubm(1, seed=0)
+    t_build, K = timeit(lambda: KnowledgeBase.build(base), repeats=1)
+    emit("updates/build_lubm1", t_build, n_triples=base.n_triples)
+
+    # 1% delta pool from a disjoint university (every instance term is new)
+    chunk = max(base.n_triples // 100, 1)
+    pool = generate_lubm(1, seed=7, univ_offset=1)
+    chunks = _chunks(pool, 5, chunk)
+
+    K.insert(chunks[0], auto_compact=False)  # warm the encode+materialize path
+    ts = []
+    for c in chunks[1:4]:
+        t0 = time.perf_counter()
+        st = K.insert(c, auto_compact=False)
+        ts.append(time.perf_counter() - t0)
+    t_insert = float(np.median(ts))
+    speedup = t_build / max(t_insert, 1e-9)
+    emit("updates/insert_1pct", t_insert, n_triples=chunk,
+         triples_per_s=int(chunk / max(t_insert, 1e-9)))
+    emit("updates/insert_1pct_speedup", 0.0,
+         speedup_vs_rebuild=round(speedup, 1), target=10.0,
+         passed=bool(speedup >= 10.0))
+
+    # live-store query latency (base ∪ delta via the overlay view)
+    K.query(PAPER_QUERIES["Q1"])  # compile at the current delta bucket
+    t_q, _ = timeit(lambda: K.query(PAPER_QUERIES["Q1"]), repeats=3)
+    emit("updates/query_after_insert", t_q,
+         n_answers=len(K.answers(PAPER_QUERIES["Q1"])))
+
+    # delete 0.1% of the base (tombstones + affected-instance re-derivation)
+    n_del = max(base.n_triples // 1000, 1)
+    idx = np.arange(0, base.n_triples, max(base.n_triples // n_del, 1))[:n_del]
+    t0 = time.perf_counter()
+    st = K.delete((base.s[idx], base.p[idx], base.o[idx]), auto_compact=False)
+    t_del = time.perf_counter() - t0
+    emit("updates/delete_0p1pct", t_del, n_deleted=st["n_deleted"],
+         n_affected=st.get("n_affected_instances", 0))
+
+    # compaction: sorted-merge the overlay back into the base stores
+    t0 = time.perf_counter()
+    st = K.compact()
+    t_c = time.perf_counter() - t0
+    emit("updates/compact", t_c, **{k: v for k, v in st.items()
+                                    if isinstance(v, int)})
+
+    if json_path:
+        rows = all_records()[records_before:]
+        artifact = {
+            "n_base_triples": base.n_triples,
+            "chunk_triples": chunk,
+            "insert_speedup_vs_rebuild": round(speedup, 1),
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"# wrote {json_path} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

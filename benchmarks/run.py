@@ -8,6 +8,8 @@ Sections (paper table -> module):
     table3 -> bench_abox          SAE vs OBE ABox encoding throughput
     table4/5 -> bench_materialize lite vs full materialization
     table6 -> bench_queries       Q1-Q4 across lite/full/rewrite (+serving)
+    updates -> bench_updates      incremental insert/delete/compact vs
+                                  rebuild (writes BENCH_updates.json)
     kernels -> bench_kernels      Pallas kernels vs refs
     roofline -> roofline          dry-run aggregation (reads reports/dryrun)
 
@@ -31,7 +33,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_abox, bench_kernels, bench_materialize, bench_queries,
-        bench_tbox, roofline,
+        bench_tbox, bench_updates, roofline,
     )
 
     sections = {
@@ -39,6 +41,7 @@ def main() -> None:
         "table3": bench_abox.main,
         "table45": bench_materialize.main,
         "table6": bench_queries.main,
+        "updates": bench_updates.main,
         "kernels": bench_kernels.main,
         "roofline": roofline.main,
     }

@@ -1,0 +1,369 @@
+"""Delta overlay: mutable state layered over immutable base triple stores.
+
+LiteMat's interval encoding reserves unused local bits in every concept and
+property id precisely so the KB can grow without re-encoding — this module
+supplies the storage half of that promise.  A ``KnowledgeBase`` keeps its
+base stores (raw / lite-materialized / fully-materialized) immutable and
+routes every mutation through a :class:`DeltaKB`:
+
+  * inserts append *encoded* rows to per-store :class:`DeltaLog` s
+    (append-only, like an LSM memtable),
+  * deletes flip per-row ``alive`` bits — tombstones — on both the base
+    stores and the delta logs; nothing is ever moved until compaction.
+
+Queries see the union through a :class:`StoreView`: host-side range lookups
+run against the base :class:`StoreIndex` *and* a small delta index, and the
+device work gathers from a concatenated ``[base | delta]`` view whose rows
+carry a parallel liveness mask (dead rows are filtered by the stream-
+compaction kernel / gather validity, never branched on).  The delta side of
+the view is padded to power-of-two capacity buckets so repeated insert
+batches reuse compiled executables instead of retracing XLA at every new
+delta length.
+
+``compact()`` (driven by core/engine.py) folds a delta into its base with
+one sorted-merge pass per materialized permutation (index.merge_sorted) —
+the base is never re-sorted, so compaction is O(delta · log base + base)
+rather than a rebuild.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.index import (
+    PERMUTATIONS, StoreIndex, merge_sorted, pow2_bucket as _pow2,
+)
+
+INVALID = np.int32(np.iinfo(np.int32).max)
+
+MODES = ("rewrite", "litemat", "full")  # raw / lite / full store names
+
+
+@dataclass
+class DeltaLog:
+    """Append-only encoded triple log with a tombstone (``alive``) mask."""
+
+    rows: np.ndarray = field(
+        default_factory=lambda: np.zeros((0, 3), dtype=np.int32))
+    alive: np.ndarray = field(default_factory=lambda: np.zeros(0, dtype=bool))
+
+    @property
+    def n(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return int(self.alive.sum())
+
+    def append(self, rows: np.ndarray) -> None:
+        rows = np.asarray(rows, dtype=np.int32).reshape(-1, 3)
+        self.rows = np.concatenate([self.rows, rows])
+        self.alive = np.concatenate(
+            [self.alive, np.ones(rows.shape[0], dtype=bool)])
+
+    def live_rows(self) -> np.ndarray:
+        return self.rows[self.alive]
+
+
+@dataclass
+class DeltaKB:
+    """Mutable overlay for one KnowledgeBase: per-store logs + base tombstones.
+
+    ``base_alive[mode]`` stays ``None`` (meaning all-alive) until the first
+    delete touches that store, so insert-only workloads never materialize or
+    ship O(base) masks.
+    """
+
+    logs: dict = field(default_factory=lambda: {m: DeltaLog() for m in MODES})
+    base_alive: dict = field(
+        default_factory=lambda: {m: None for m in MODES})
+    n_new_terms: int = 0
+
+    def log(self, mode: str) -> DeltaLog:
+        return self.logs[mode]
+
+    def kill_base(self, mode: str, base_n: int, row_idx: np.ndarray) -> int:
+        """Tombstone base rows by index; returns how many were newly killed."""
+        if self.base_alive[mode] is None:
+            self.base_alive[mode] = np.ones(base_n, dtype=bool)
+        mask = self.base_alive[mode]
+        newly = int(mask[row_idx].sum())
+        mask[row_idx] = False
+        return newly
+
+    def n_rows(self, mode: str) -> int:
+        return self.logs[mode].n
+
+    @property
+    def empty(self) -> bool:
+        return (
+            all(log.n == 0 for log in self.logs.values())
+            and all(a is None for a in self.base_alive.values())
+        )
+
+    def ratio(self, base_sizes: dict) -> float:
+        """Overlay pressure: (delta rows + base tombstones) / base rows."""
+        num = den = 0
+        for m in MODES:
+            n_base = int(base_sizes.get(m, 0))
+            den += n_base
+            num += self.logs[m].n
+            if self.base_alive[m] is not None:
+                num += n_base - int(self.base_alive[m].sum())
+        return num / max(den, 1)
+
+
+# ---------------------------------------------------------------------------
+# StoreView: what a QueryEngine executes against
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StoreView:
+    """Union of an immutable base store and a (small) delta overlay.
+
+    Presents the same range-lookup surface as StoreIndex, but every lookup
+    returns a *list* of ranges in combined coordinates: base ranges first,
+    then delta ranges offset by the base row count.  Device consumers gather
+    from ``perm_rows(name)`` / ``perm_alive(name)`` (or ``scan_rows`` /
+    ``scan_alive`` for full scans), which are concatenated ``[base | delta]``
+    arrays with the delta padded to a power-of-two bucket — INVALID rows,
+    ``alive=False`` — so executables compiled for one delta bucket serve
+    every delta length up to it.
+    """
+
+    base_rows: jnp.ndarray  # device [Nb, 3] — the original store array
+    base_h: np.ndarray  # host copy (shared with the base StoreIndex)
+    base_alive_h: np.ndarray | None = None  # None = every base row live
+    delta_h: np.ndarray | None = None  # host [M, 3] delta log rows
+    delta_alive_h: np.ndarray | None = None  # bool[M]
+    base_index: StoreIndex | None = None
+    _delta_index: StoreIndex | None = field(default=None, repr=False)
+    _dev: dict = field(default_factory=dict, repr=False)
+
+    @classmethod
+    def static(cls, spo) -> "StoreView":
+        """A view over a plain store: no delta, no tombstones."""
+        return cls(base_rows=jnp.asarray(spo), base_h=np.asarray(spo))
+
+    @classmethod
+    def overlay(cls, base_rows, base_index: StoreIndex,
+                log: DeltaLog, base_alive: np.ndarray | None) -> "StoreView":
+        # snapshot the liveness masks: deletes flip tombstone bits IN PLACE
+        # on the DeltaKB arrays, and a view must stay a consistent snapshot
+        # of its version even if it is held across later mutations (its
+        # per-permutation device masks materialize lazily).
+        return cls(
+            base_rows=base_rows,
+            base_h=base_index._h,
+            base_alive_h=None if base_alive is None else base_alive.copy(),
+            delta_h=log.rows if log.n else None,
+            delta_alive_h=log.alive.copy() if log.n else None,
+            base_index=base_index,
+        )
+
+    def __post_init__(self):
+        if self.base_index is None:
+            self.base_index = StoreIndex(_h=self.base_h)
+
+    # -- shape bookkeeping ---------------------------------------------------
+    @property
+    def base_n(self) -> int:
+        return int(self.base_h.shape[0])
+
+    @property
+    def delta_n(self) -> int:
+        return 0 if self.delta_h is None else int(self.delta_h.shape[0])
+
+    @property
+    def delta_cap(self) -> int:
+        """Power-of-two bucket the delta side is padded to (0 = no delta)."""
+        return _pow2(self.delta_n) if self.delta_n else 0
+
+    @property
+    def has_delta(self) -> bool:
+        return self.delta_n > 0
+
+    @property
+    def n(self) -> int:
+        """Total addressable rows (planning upper bound, tombstones included)."""
+        return self.base_n + self.delta_n
+
+    @property
+    def n_live(self) -> int:
+        live = self.base_n if self.base_alive_h is None else int(
+            self.base_alive_h.sum())
+        if self.delta_alive_h is not None:
+            live += int(self.delta_alive_h.sum())
+        return live
+
+    def live_rows(self) -> np.ndarray:
+        """Host compaction of the view: all live rows, base-then-delta order."""
+        base = (self.base_h if self.base_alive_h is None
+                else self.base_h[self.base_alive_h])
+        if self.delta_h is None:
+            return base
+        return np.concatenate([base, self.delta_h[self.delta_alive_h]])
+
+    @property
+    def delta_index(self) -> StoreIndex:
+        if self._delta_index is None:
+            self._delta_index = StoreIndex.build(self.delta_h)
+        return self._delta_index
+
+    # -- device views --------------------------------------------------------
+    def _pad_delta_rows(self, rows: np.ndarray) -> np.ndarray:
+        pad = self.delta_cap - rows.shape[0]
+        if pad <= 0:
+            return rows
+        return np.concatenate(
+            [rows, np.full((pad, 3), INVALID, dtype=np.int32)])
+
+    def _pad_delta_alive(self, alive: np.ndarray) -> np.ndarray:
+        pad = self.delta_cap - alive.shape[0]
+        if pad <= 0:
+            return alive
+        return np.concatenate([alive, np.zeros(pad, dtype=bool)])
+
+    @property
+    def scan_rows(self) -> jnp.ndarray:
+        """[Nb + Dcap, 3] device rows for full scans (INVALID-padded delta)."""
+        if "scan_rows" not in self._dev:
+            if self.delta_h is None:
+                self._dev["scan_rows"] = self.base_rows
+            else:
+                self._dev["scan_rows"] = jnp.concatenate(
+                    [self.base_rows,
+                     jnp.asarray(self._pad_delta_rows(self.delta_h))])
+        return self._dev["scan_rows"]
+
+    @property
+    def scan_alive(self) -> jnp.ndarray:
+        """bool[Nb + Dcap] liveness aligned with ``scan_rows``."""
+        if "scan_alive" not in self._dev:
+            base = (np.ones(self.base_n, dtype=bool)
+                    if self.base_alive_h is None else self.base_alive_h)
+            alive = base if self.delta_h is None else np.concatenate(
+                [base, self._pad_delta_alive(self.delta_alive_h)])
+            self._dev["scan_alive"] = jnp.asarray(alive)
+        return self._dev["scan_alive"]
+
+    def perm_rows(self, name: str) -> jnp.ndarray:
+        """[Nb + Dcap, 3] device rows in permutation order: base run | delta run."""
+        key = f"{name}_rows"
+        if key not in self._dev:
+            base = self.base_index.perm(name).rows
+            if self.delta_h is None:
+                self._dev[key] = base
+            else:
+                drows = np.asarray(self.delta_index.perm(name).rows)
+                self._dev[key] = jnp.concatenate(
+                    [base, jnp.asarray(self._pad_delta_rows(drows))])
+        return self._dev[key]
+
+    def perm_alive(self, name: str) -> jnp.ndarray:
+        """bool[Nb + Dcap] liveness aligned with ``perm_rows(name)``."""
+        key = f"{name}_alive"
+        if key not in self._dev:
+            if self.base_alive_h is None:
+                base = np.ones(self.base_n, dtype=bool)
+            else:
+                base = self.base_alive_h[self.base_index.perm(name).perm]
+            if self.delta_h is None:
+                alive = base
+            else:
+                d = self.delta_alive_h[self.delta_index.perm(name).perm]
+                alive = np.concatenate([base, self._pad_delta_alive(d)])
+            self._dev[key] = jnp.asarray(alive)
+        return self._dev[key]
+
+    @property
+    def all_alive(self) -> bool:
+        """True iff no tombstone exists anywhere in the view."""
+        return (
+            self.base_alive_h is None
+            and (self.delta_alive_h is None or bool(self.delta_alive_h.all()))
+        )
+
+    # -- combined range lookups ---------------------------------------------
+    def _combine(self, base_range, delta_range):
+        out = [base_range]
+        if self.has_delta:
+            r0, r1 = delta_range
+            out.append((self.base_n + r0, self.base_n + r1))
+        return out
+
+    def p_ranges(self, plo: int, phi: int):
+        base = self.base_index.p_range(plo, phi)
+        return self._combine(
+            base, self.delta_index.p_range(plo, phi) if self.has_delta else None)
+
+    def po_ranges(self, p_id: int, olo: int, ohi: int):
+        return self._combine(
+            self.base_index.po_range(p_id, olo, ohi),
+            self.delta_index.po_range(p_id, olo, ohi) if self.has_delta else None)
+
+    def ps_ranges(self, p_id: int, slo: int, shi: int):
+        return self._combine(
+            self.base_index.ps_range(p_id, slo, shi),
+            self.delta_index.ps_range(p_id, slo, shi) if self.has_delta else None)
+
+    def s_ranges(self, slo: int, shi: int):
+        return self._combine(
+            self.base_index.s_range(slo, shi),
+            self.delta_index.s_range(slo, shi) if self.has_delta else None)
+
+    def o_ranges(self, olo: int, ohi: int):
+        return self._combine(
+            self.base_index.o_range(olo, ohi),
+            self.delta_index.o_range(olo, ohi) if self.has_delta else None)
+
+    def single_p_run(self, plo: int, phi: int):
+        """Unique predicate id inside [plo, phi) across base AND delta."""
+        b0, b1 = self.base_index.p_range(plo, phi)
+        pid = self.base_index.single_p_run(b0, b1)
+        if not self.has_delta:
+            return pid
+        r0, r1 = self.delta_index.p_range(plo, phi)
+        dpid = self.delta_index.single_p_run(r0, r1)
+        if r1 <= r0:  # delta has no rows in the interval: base decides
+            return pid
+        if b1 <= b0:  # base empty: delta decides
+            return dpid
+        return pid if (pid is not None and pid == dpid) else None
+
+
+# ---------------------------------------------------------------------------
+# Compaction: fold a view into a fresh base store
+# ---------------------------------------------------------------------------
+
+
+def compact_view(view: StoreView) -> tuple[np.ndarray, StoreIndex]:
+    """Merge a view's live rows into one array + pre-sorted StoreIndex.
+
+    The merged array is produced in POS order with one sorted-merge pass
+    (base POS run ⋈ delta POS run), so the returned index gets its POS
+    permutation — the one every predicate/type pattern hits — for free;
+    tombstones are dropped during the merge.  The other permutations stay
+    lazy in the new index and re-sort on first use.
+    """
+    base_idx = view.base_index
+    bp = base_idx.perm("pos")
+    b_keep = (slice(None) if view.base_alive_h is None
+              else view.base_alive_h[bp.perm])
+    b_rows, b_key = np.asarray(bp.rows)[b_keep], bp.key[b_keep]
+    if not view.has_delta:
+        merged, _ = b_rows, b_key
+        return merged, StoreIndex.from_sorted(merged, "pos")
+    dp = view.delta_index.perm("pos")
+    d_keep = view.delta_alive_h[dp.perm]
+    merged, _ = merge_sorted(
+        b_rows, b_key, np.asarray(dp.rows)[d_keep], dp.key[d_keep])
+    return merged, StoreIndex.from_sorted(merged, "pos")
+
+
+__all__ = ["DeltaLog", "DeltaKB", "StoreView", "compact_view", "MODES",
+           "PERMUTATIONS"]

@@ -3,6 +3,28 @@
 One object wires the whole LiteMat pipeline and exposes the three execution
 modes of the paper's evaluation (lite / full / no materialization), plus the
 paper's appendix queries Q1–Q4 as canned pattern lists.
+
+Beyond the paper's batch pipeline, the KnowledgeBase is *live*: LiteMat's
+interval encoding reserves unused id headroom exactly so the dictionary and
+stores can grow without re-encoding, and ``insert`` / ``delete`` exploit
+that:
+
+  * ``insert(raw)``  — new instance terms extend the parallel dictionary in
+    place (ids past ``n_instance_terms``; no existing id moves), the delta
+    rows alone are lite/full-materialized against the existing DeviceTBox,
+    and the encoded rows land in an append-only delta overlay
+    (core/delta.py) that queries union with the base via sorted delta
+    indexes.
+  * ``delete(raw)``  — tombstones the raw rows, then repairs the
+    materialized stores exactly by re-deriving the affected instances from
+    their remaining live triples (core/update.py).
+  * ``compact()``    — folds the overlay into the base stores with one
+    sorted-merge pass per index permutation; triggered automatically once
+    the delta-to-base ratio passes ``compact_threshold``.
+
+Every mutation bumps the monotonic ``version`` counter; query engines and
+the serving layer (serving/engine.py) re-sync their views off it, so there
+is no manual invalidation step.
 """
 from __future__ import annotations
 
@@ -14,9 +36,15 @@ import jax.numpy as jnp
 
 from repro.core.abox import EncodedKB, encode_obe, encode_sae
 from repro.core.closure import full_materialize
+from repro.core.delta import MODES, DeltaKB, StoreView, compact_view
+from repro.core.index import StoreIndex
 from repro.core.materialize import DeviceTBox, compact_rows, lite_materialize
 from repro.core.query import Pattern, QueryEngine
 from repro.core.tbox import TBox, build_tbox
+from repro.core.update import (
+    DynamicDictionary, RowLocator, absorb_new_terms, affected_instances,
+    encode_delta, materialize_delta, mentions_mask,
+)
 from repro.rdf.generator import RawDataset
 
 # The paper's appendix queries (over the LUBM vocabulary).
@@ -32,15 +60,31 @@ PAPER_QUERIES = {
 }
 
 
+def _raw_columns(raw):
+    """RawDataset | (s, p, o) arrays -> (s_fp, p_fp, o_fp, term_strings)."""
+    if isinstance(raw, RawDataset) or hasattr(raw, "s"):
+        return (np.asarray(raw.s), np.asarray(raw.p), np.asarray(raw.o),
+                getattr(raw, "term_strings", None))
+    s, p, o = raw
+    return np.asarray(s), np.asarray(p), np.asarray(o), None
+
+
 @dataclass
 class KnowledgeBase:
     kb: EncodedKB
     dtb: DeviceTBox
-    lite_spo: jnp.ndarray  # compacted lite-materialized store
-    full_spo: jnp.ndarray  # compacted fully-materialized store
+    lite_spo: jnp.ndarray  # compacted lite-materialized base store
+    full_spo: jnp.ndarray  # compacted fully-materialized base store
     lite_stats: dict
     full_stats: dict
-    _engines: dict = field(default_factory=dict)
+    compact_threshold: float = 0.25  # auto-compact past this delta ratio
+    version: int = 0  # bumps on every insert/delete/compact
+    _engines: dict = field(default_factory=dict, repr=False)
+    _delta: DeltaKB | None = field(default=None, repr=False)
+    _dyn: DynamicDictionary | None = field(default=None, repr=False)
+    _base_indexes: dict = field(default_factory=dict, repr=False)
+    _views: dict = field(default_factory=dict, repr=False)
+    _raw_loc: RowLocator | None = field(default=None, repr=False)
 
     @classmethod
     def build(cls, raw: RawDataset, tbox: TBox | None = None,
@@ -59,22 +103,63 @@ class KnowledgeBase:
             full_stats=fstats,
         )
 
+    # -- store plumbing ------------------------------------------------------
+    def _base_store(self, mode: str) -> jnp.ndarray:
+        return {
+            "litemat": self.lite_spo,
+            "full": self.full_spo,
+            "rewrite": self.kb.spo,
+        }[mode]
+
+    def _base_index(self, mode: str) -> StoreIndex:
+        if mode not in self._base_indexes:
+            self._base_indexes[mode] = StoreIndex.build(self._base_store(mode))
+        return self._base_indexes[mode]
+
+    @property
+    def delta(self) -> DeltaKB:
+        if self._delta is None:
+            self._delta = DeltaKB()
+        return self._delta
+
+    def view(self, mode: str) -> StoreView:
+        """The live base+delta StoreView of one store, cached per version."""
+        key = (mode, self.version)
+        if key not in self._views:
+            idx = self._base_index(mode)
+            if self._delta is None or self._delta.empty:
+                v = StoreView(base_rows=self._base_store(mode), base_h=idx._h,
+                              base_index=idx)
+            else:
+                v = StoreView.overlay(self._base_store(mode), idx,
+                                      self._delta.log(mode),
+                                      self._delta.base_alive[mode])
+            self._views[key] = v
+        return self._views[key]
+
+    def store_rows(self, mode: str = "litemat") -> jnp.ndarray:
+        """Effective (live) rows of one store — what serving snapshots."""
+        if self._delta is None or self._delta.empty:
+            return self._base_store(mode)
+        return jnp.asarray(self.view(mode).live_rows())
+
     def engine(self, mode: str = "litemat", use_index: bool = True) -> QueryEngine:
-        """Cached QueryEngine per (mode, use_index).
+        """Cached QueryEngine per (mode, use_index), re-synced to ``version``.
 
         ``use_index=False`` forces the scan-only path — the oracle the
         indexed executables are validated against (tests/benchmarks).
         """
         key = (mode, use_index)
-        if key not in self._engines:
-            store = {
-                "litemat": self.lite_spo,
-                "full": self.full_spo,
-                "rewrite": self.kb.spo,
-            }[mode]
-            self._engines[key] = QueryEngine(kb=self.kb, spo=store, mode=mode,
-                                             dtb=self.dtb, use_index=use_index)
-        return self._engines[key]
+        v = self.view(mode)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = QueryEngine(kb=self.kb, spo=self._base_store(mode),
+                              mode=mode, dtb=self.dtb, use_index=use_index,
+                              view=v)
+            self._engines[key] = eng
+        elif eng.view is not v:
+            eng.set_view(v)
+        return eng
 
     def query(self, patterns, select=None, mode: str = "litemat",
               use_index: bool = True):
@@ -87,9 +172,185 @@ class KnowledgeBase:
                              use_index=use_index)
         return {tuple(r) for r in rows.tolist()}
 
+    def prewarm(self, queries=None, modes=("litemat",), buckets=(),
+                use_index: bool = True) -> int:
+        """Pre-trace executables for ``queries`` (default: Q1–Q4)."""
+        queries = (list(queries) if queries is not None
+                   else list(PAPER_QUERIES.values()))
+        return sum(
+            self.engine(m, use_index).prewarm(queries, buckets=buckets)
+            for m in modes
+        )
+
     def sizes(self) -> dict:
-        return dict(
+        out = dict(
             original=self.kb.n,
             lite=int(self.lite_spo.shape[0]),
             full=int(self.full_spo.shape[0]),
         )
+        if self._delta is not None and not self._delta.empty:
+            out["delta_rows"] = sum(
+                self._delta.n_rows(m) for m in MODES)
+        return out
+
+    # -- incremental updates -------------------------------------------------
+    def _dynamic(self) -> DynamicDictionary:
+        if self._dyn is None:
+            self._dyn = DynamicDictionary.from_kb(self.kb)
+        return self._dyn
+
+    def _raw_locator(self) -> RowLocator:
+        if self._raw_loc is None:
+            self._raw_loc = RowLocator.build(self._base_index("rewrite")._h)
+        return self._raw_loc
+
+    def _bump(self) -> None:
+        self.version += 1
+        self._views.clear()
+
+    @property
+    def delta_ratio(self) -> float:
+        if self._delta is None:
+            return 0.0
+        return self._delta.ratio({
+            "rewrite": self.kb.n,
+            "litemat": int(self.lite_spo.shape[0]),
+            "full": int(self.full_spo.shape[0]),
+        })
+
+    def insert(self, raw, auto_compact: bool = True) -> dict:
+        """Append raw triples without rebuilding: encode + delta-materialize.
+
+        New instance/literal terms extend the dictionary in place (ids past
+        ``n_instance_terms``); predicates must be TBox properties (the TBox
+        is fixed between full re-encodes).  Only the delta rows are
+        materialized; queries see base ∪ delta immediately.
+        """
+        s_fp, p_fp, o_fp, strings = _raw_columns(raw)
+        if s_fp.shape[0] == 0:
+            return dict(n_inserted=0, n_new_terms=0)
+        dyn = self._dynamic()
+        spo, n_new = encode_delta(dyn, s_fp, p_fp, o_fp)
+        absorb_new_terms(self.kb, dyn, strings)
+        lite, full = materialize_delta(spo, self.dtb)
+        d = self.delta
+        d.log("rewrite").append(spo)
+        d.log("litemat").append(lite)
+        d.log("full").append(full)
+        d.n_new_terms += n_new
+        self._bump()
+        stats = dict(
+            n_inserted=int(spo.shape[0]),
+            n_new_terms=n_new,
+            n_lite_delta=int(lite.shape[0]),
+            n_full_delta=int(full.shape[0]),
+            delta_ratio=round(self.delta_ratio, 4),
+            version=self.version,
+        )
+        if auto_compact and self.delta_ratio > self.compact_threshold:
+            stats["compacted"] = self.compact()
+        return stats
+
+    def delete(self, raw, auto_compact: bool = True) -> dict:
+        """Remove raw triples (all copies) and repair the derived stores.
+
+        Tombstones the raw rows, then re-derives every *affected instance*
+        (endpoints of the deleted triples) from its remaining live triples:
+        derived rows only ever mention their source triple's instances, so
+        tombstoning rows that mention an affected instance and re-deriving
+        from the live triples that mention one is an exact repair — no
+        support counting, no full re-materialization.
+        """
+        s_fp, p_fp, o_fp, _ = _raw_columns(raw)
+        if s_fp.shape[0] == 0:
+            return dict(n_deleted=0)
+        dyn = self._dynamic()
+        ids = np.stack([dyn.lookup(s_fp), dyn.lookup(p_fp),
+                        dyn.lookup(o_fp)], axis=1)
+        q = ids[(ids >= 0).all(axis=1)]  # triples with unknown terms: absent
+        d = self.delta
+        deleted = []
+
+        base_h = self._base_index("rewrite")._h
+        hits = self._raw_locator().find(q)
+        if hits.size:
+            alive = d.base_alive["rewrite"]
+            if alive is not None:
+                hits = hits[alive[hits]]
+            if hits.size:
+                deleted.append(base_h[hits])
+                d.kill_base("rewrite", base_h.shape[0], hits)
+        rlog = d.log("rewrite")
+        if rlog.n:
+            dhits = RowLocator.build(rlog.rows).find(q)
+            if dhits.size:
+                dhits = dhits[rlog.alive[dhits]]
+                if dhits.size:
+                    deleted.append(rlog.rows[dhits])
+                    rlog.alive[dhits] = False
+
+        if not deleted:
+            return dict(n_deleted=0)
+        deleted = np.concatenate(deleted)
+        inst = affected_instances(deleted, self.kb.tbox.instance_base)
+
+        # tombstone every derived row mentioning an affected instance
+        for mode in ("litemat", "full"):
+            bh = self._base_index(mode)._h
+            d.kill_base(mode, bh.shape[0],
+                        np.nonzero(mentions_mask(bh, inst))[0])
+            log = d.log(mode)
+            if log.n:
+                log.alive &= ~mentions_mask(log.rows, inst)
+
+        # re-derive the affected instances from their live raw triples
+        raw_alive = d.base_alive["rewrite"]
+        bm = mentions_mask(base_h, inst)
+        if raw_alive is not None:
+            bm &= raw_alive
+        parts = [base_h[bm]]
+        if rlog.n:
+            parts.append(rlog.rows[mentions_mask(rlog.rows, inst) & rlog.alive])
+        frontier = np.concatenate(parts)
+        lite, full = materialize_delta(frontier, self.dtb)
+        d.log("litemat").append(lite[mentions_mask(lite, inst)])
+        d.log("full").append(full[mentions_mask(full, inst)])
+        self._bump()
+        stats = dict(
+            n_deleted=int(deleted.shape[0]),
+            n_affected_instances=int(inst.shape[0]),
+            delta_ratio=round(self.delta_ratio, 4),
+            version=self.version,
+        )
+        if auto_compact and self.delta_ratio > self.compact_threshold:
+            stats["compacted"] = self.compact()
+        return stats
+
+    def compact(self) -> dict:
+        """Fold the delta overlay into fresh base stores (sorted merges).
+
+        Each store's base POS run interleaves with its delta POS run in one
+        merge pass (tombstones dropped on the way); the merged run doubles
+        as the new base array, so the rebuilt StoreIndex starts with its POS
+        permutation already materialized (the other permutations re-sort
+        lazily on first use).  Dictionary growth needs no work: new terms
+        were absorbed into ``kb.tables`` at insert time.
+        """
+        if self._delta is None or self._delta.empty:
+            return dict(compacted=False)
+        sizes = {}
+        for mode in MODES:
+            merged, idx = compact_view(self.view(mode))
+            dev = jnp.asarray(merged)
+            if mode == "rewrite":
+                self.kb.spo = dev
+            elif mode == "litemat":
+                self.lite_spo = dev
+            else:
+                self.full_spo = dev
+            self._base_indexes[mode] = idx
+            sizes[mode] = int(merged.shape[0])
+        self._delta = DeltaKB()
+        self._raw_loc = None
+        self._bump()
+        return dict(compacted=True, version=self.version, **sizes)

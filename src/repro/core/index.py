@@ -4,20 +4,32 @@ LiteMat's encoding turns RDFS inference into interval containment, so a
 triple pattern with a constant predicate (and, for rdf:type patterns, a
 constant concept interval) selects a *contiguous run* of a suitably sorted
 store — the observation behind self-indexed RDF stores (WaterFowl,
-k²-Triples).  This module materializes two permutations of the (N, 3) store
-once per KnowledgeBase:
+k²-Triples).  This module materializes four permutations of the (N, 3)
+store, each lazily on first use:
 
   * POS — rows ordered by (predicate, object, subject): resolves
     ``(?x p ?y)`` and ``(?x rdf:type C)`` patterns,
   * PSO — rows ordered by (predicate, subject, object): resolves
-    ``(s p ?y)`` patterns with a constant subject.
+    ``(s p ?y)`` patterns with a constant subject,
+  * SPO — rows ordered by (subject, predicate, object): resolves
+    ``(s ?p ?y)`` patterns — constant subject, *variable* predicate,
+  * OSP — rows ordered by (object, subject, predicate): resolves
+    ``(?x ?p o)`` patterns — constant object, *variable* predicate.
 
 Range endpoints are found with host-side binary searches over int64
-composite keys (p << 32 | o, resp. p << 32 | s) — O(log N) on a few cached
-numpy arrays, negligible next to device work — while the row gathers happen
-on device from the permuted stores.  A pattern then costs two binary
-searches plus one contiguous gather instead of a full scan + stable sort,
-and the range *length* gives the planner an exact cardinality for free.
+composite keys — O(log N) on a few cached numpy arrays, negligible next to
+device work — while the row gathers happen on device from the permuted
+stores.  A pattern then costs two binary searches plus one contiguous gather
+instead of a full scan + stable sort, and the range *length* gives the
+planner an exact cardinality for free.
+
+Each permutation keeps its source-row permutation vector so that overlay
+machinery (core/delta.py) can align per-row liveness masks with the sorted
+order without re-sorting.
+
+``merge_sorted`` is the compaction primitive: two already-sorted runs of the
+same permutation (the base index and a small delta index) interleave into
+one sorted array by composite-key binary search — no re-sort of the base.
 
 ``TypeIndex`` is the serving-path specialization: the rdf:type subset of
 the store ordered by (object, subject), so a batched "members of class C"
@@ -33,10 +45,37 @@ import jax.numpy as jnp
 
 _SHIFT = np.int64(32)
 
+PERMUTATIONS = ("pos", "pso", "spo", "osp")
+
+
+def pow2_bucket(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= n (>= floor) — THE capacity-bucket helper.
+
+    Shared by query capacities, delta padding, and member-set padding so
+    every layer lands on the same buckets and compiled executables are
+    reused across them.
+    """
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), int(np.log2(floor)))
+
 
 def _composite(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Lexicographic (a, b) order as one sortable int64 key (ids are < 2^31)."""
     return (a.astype(np.int64) << _SHIFT) | b.astype(np.int64)
+
+
+@dataclass
+class _Perm:
+    """One sorted permutation: device rows + host search keys + source perm."""
+
+    rows: jnp.ndarray  # device copy of the permuted store
+    primary: np.ndarray  # host primary-sort column
+    key: np.ndarray  # host (primary << 32 | secondary) composite keys
+    perm: np.ndarray  # source-row index of each sorted row
+
+
+# (primary, secondary, tertiary) column indices per permutation name; the
+# tertiary column breaks ties so exact duplicate rows sort adjacently.
+_ORDERS = {"pos": (1, 2, 0), "pso": (1, 0, 2), "spo": (0, 1, 2), "osp": (2, 0, 1)}
 
 
 @dataclass
@@ -45,67 +84,94 @@ class StoreIndex:
 
     Each permutation is an O(N log N) host lexsort plus a device-resident
     copy of the store, so they materialize lazily on first use: a workload
-    of predicate/type patterns (all of LUBM Q1-Q4) never pays for PSO.
+    of predicate/type patterns (all of LUBM Q1-Q4) never pays for PSO, SPO,
+    or OSP.
     """
 
     _h: np.ndarray = field(repr=False)  # host copy of the store
-    _pos: tuple | None = field(default=None, repr=False)
-    _pso: tuple | None = field(default=None, repr=False)
+    _perms: dict = field(default_factory=dict, repr=False)
 
     @classmethod
     def build(cls, spo) -> "StoreIndex":
         return cls(_h=np.asarray(spo))
 
-    def _pos_parts(self):
-        """(device rows, host p column, host (p<<32|o) keys), (p, o, s) order."""
-        if self._pos is None:
-            h = self._h
-            hp = h[np.lexsort((h[:, 0], h[:, 2], h[:, 1]))]
-            self._pos = (jnp.asarray(hp), np.ascontiguousarray(hp[:, 1]),
-                         _composite(hp[:, 1], hp[:, 2]))
-        return self._pos
+    @classmethod
+    def from_sorted(cls, rows: np.ndarray, name: str) -> "StoreIndex":
+        """Wrap an array already sorted in permutation ``name`` order.
 
-    def _pso_parts(self):
-        """(device rows, host (p<<32|s) keys), (p, s, o) order."""
-        if self._pso is None:
-            h = self._h
-            hs = h[np.lexsort((h[:, 2], h[:, 0], h[:, 1]))]
-            self._pso = (jnp.asarray(hs), _composite(hs[:, 1], hs[:, 0]))
-        return self._pso
+        Used by compaction: the merged POS run doubles as the new store, so
+        the POS permutation is the identity and costs nothing to register.
+        """
+        idx = cls(_h=np.asarray(rows))
+        a, b, _ = _ORDERS[name]
+        h = idx._h
+        idx._perms[name] = _Perm(
+            rows=jnp.asarray(h),
+            primary=np.ascontiguousarray(h[:, a]),
+            key=_composite(h[:, a], h[:, b]),
+            perm=np.arange(h.shape[0], dtype=np.int64),
+        )
+        return idx
 
+    def perm(self, name: str) -> _Perm:
+        if name not in self._perms:
+            a, b, c = _ORDERS[name]
+            h = self._h
+            p = np.lexsort((h[:, c], h[:, b], h[:, a]))
+            hp = h[p]
+            self._perms[name] = _Perm(
+                rows=jnp.asarray(hp),
+                primary=np.ascontiguousarray(hp[:, a]),
+                key=_composite(hp[:, a], hp[:, b]),
+                perm=p,
+            )
+        return self._perms[name]
+
+    # -- legacy aliases (PR 1 API) -------------------------------------------
     @property
     def pos_rows(self) -> jnp.ndarray:
-        return self._pos_parts()[0]
+        return self.perm("pos").rows
 
     @property
     def pso_rows(self) -> jnp.ndarray:
-        return self._pso_parts()[0]
+        return self.perm("pso").rows
 
     @property
     def n(self) -> int:
         return int(self._h.shape[0])
 
     # -- host-side O(log N) range lookups ------------------------------------
+    def primary_range(self, name: str, lo: int, hi: int):
+        """Row range of primary-column interval [lo, hi) in permutation ``name``."""
+        col = self.perm(name).primary
+        r0 = int(np.searchsorted(col, lo, side="left"))
+        r1 = int(np.searchsorted(col, hi, side="left"))
+        return r0, r1
+
+    def composite_range(self, name: str, a_id: int, blo: int, bhi: int):
+        """Row range of (primary == a_id, secondary in [blo, bhi))."""
+        key = self.perm(name).key
+        r0 = int(np.searchsorted(key, _composite_scalar(a_id, blo)))
+        r1 = int(np.searchsorted(key, _composite_scalar(a_id, bhi)))
+        return r0, r1
+
     def p_range(self, plo: int, phi: int):
         """Row range of predicate interval [plo, phi).
 
-        Predicate is the primary sort key of BOTH permutations, so the same
-        (r0, r1) positions are valid in POS and PSO order.
+        Predicate is the primary sort key of BOTH the POS and PSO
+        permutations, so the same (r0, r1) positions are valid in either.
         """
-        pos_p = self._pos_parts()[1]
-        r0 = int(np.searchsorted(pos_p, plo, side="left"))
-        r1 = int(np.searchsorted(pos_p, phi, side="left"))
-        return r0, r1
+        return self.primary_range("pos", plo, phi)
 
     def single_p_run(self, r0: int, r1: int):
-        """The unique predicate id of rows [r0, r1), or None if mixed/empty.
+        """The unique predicate id of POS rows [r0, r1), or None if mixed/empty.
 
         A LiteMat predicate interval is often wide (free suffix bits) while
         the *store* only contains one predicate id inside it — e.g. rdf:type
         patterns.  Detecting that (O(1) after the range search) upgrades the
         pattern from run-slice + re-check to an exact composite-key range.
         """
-        pos_p = self._pos_parts()[1]
+        pos_p = self.perm("pos").primary
         if r1 <= r0:
             return None
         if pos_p[r0] == pos_p[r1 - 1]:
@@ -114,21 +180,51 @@ class StoreIndex:
 
     def po_range(self, p_id: int, olo: int, ohi: int):
         """Row range of (p == p_id, o in [olo, ohi)) in POS order."""
-        key = self._pos_parts()[2]
-        r0 = int(np.searchsorted(key, _composite_scalar(p_id, olo)))
-        r1 = int(np.searchsorted(key, _composite_scalar(p_id, ohi)))
-        return r0, r1
+        return self.composite_range("pos", p_id, olo, ohi)
 
     def ps_range(self, p_id: int, slo: int, shi: int):
         """Row range of (p == p_id, s in [slo, shi)) in PSO order."""
-        key = self._pso_parts()[1]
-        r0 = int(np.searchsorted(key, _composite_scalar(p_id, slo)))
-        r1 = int(np.searchsorted(key, _composite_scalar(p_id, shi)))
-        return r0, r1
+        return self.composite_range("pso", p_id, slo, shi)
+
+    def s_range(self, slo: int, shi: int):
+        """Row range of subject interval [slo, shi) in SPO order."""
+        return self.primary_range("spo", slo, shi)
+
+    def o_range(self, olo: int, ohi: int):
+        """Row range of object interval [olo, ohi) in OSP order."""
+        return self.primary_range("osp", olo, ohi)
 
 
 def _composite_scalar(a: int, b: int) -> np.int64:
     return (np.int64(a) << _SHIFT) | np.int64(b)
+
+
+def merge_sorted(a_rows: np.ndarray, a_key: np.ndarray,
+                 b_rows: np.ndarray, b_key: np.ndarray):
+    """Interleave two runs sorted by the same composite key -> (rows, key).
+
+    One binary search of the small run against the large one assigns every
+    row its merged position — the base run is never re-sorted, so folding a
+    delta of M rows into a base of N costs O(M log N + N) instead of the
+    O((N+M) log (N+M)) full rebuild.  Rows with equal keys keep a-before-b
+    order (stable); intra-key tertiary order is irrelevant to every lookup,
+    which searches composite keys only.
+    """
+    n, m = a_key.shape[0], b_key.shape[0]
+    if m == 0:
+        return a_rows, a_key
+    if n == 0:
+        return b_rows, b_key
+    pos_b = np.searchsorted(a_key, b_key, side="right") + np.arange(m)
+    out_rows = np.empty((n + m, a_rows.shape[1]), dtype=a_rows.dtype)
+    out_key = np.empty(n + m, dtype=np.int64)
+    mask_b = np.zeros(n + m, dtype=bool)
+    mask_b[pos_b] = True
+    out_rows[pos_b] = b_rows
+    out_key[pos_b] = b_key
+    out_rows[~mask_b] = a_rows
+    out_key[~mask_b] = a_key
+    return out_rows, out_key
 
 
 @dataclass

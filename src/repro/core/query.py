@@ -15,25 +15,36 @@ discipline: every operator carries a static capacity + validity mask +
 overflow counter, and the engine re-executes with doubled capacities if an
 overflow is reported (power-of-two buckets keep recompiles bounded).
 
+Stores are *live*: the engine executes against a StoreView (core/delta.py)
+— an immutable base plus a small delta overlay with tombstones — so the
+same compiled plans serve a store that is being mutated between queries.
+Patterns union base-index slices with delta-index slices, and every row
+carries a liveness bit that the gather/compaction paths filter.
+
 Execution strategy per pattern (chosen host-side during planning):
 
-  * ``slice`` — any litemat/full pattern whose constants are pure intervals
-    with a constant predicate resolves against the sorted store indexes
-    (core/index.py): O(log N) host binary searches yield contiguous row
-    ranges (one per spill interval), and the device work is a single
-    contiguous gather.  The range lengths give the planner *exact*
-    cardinalities with zero device passes.
-  * ``scan``  — residual patterns (rewrite mode, member sets, variable
-    predicates) stream the store once through the Pallas compaction kernel
+  * ``slice`` — any litemat/full pattern with at least one pure-interval
+    constant resolves against the sorted store permutations (core/index.py
+    via the view): POS/PSO for constant predicates, SPO/OSP for constant
+    subject/object patterns with a *variable* predicate.  O(log N) host
+    binary searches yield contiguous row ranges (base + delta, one per
+    spill interval), and the device work is a single contiguous gather.
+    The range lengths give the planner cardinalities with zero device
+    passes.
+  * ``scan``  — residual patterns (rewrite mode, member sets) stream the
+    store once through the Pallas compaction kernel
     (kernels/stream_compact.py).  Simple interval predicates fuse the
-    filter into the same kernel pass; the compaction's total doubles as the
-    match count, so there is no separate counting pass at execution time.
+    filter AND the tombstone mask into the same kernel pass; the
+    compaction's total doubles as the match count, so there is no separate
+    counting pass at execution time.
 
 Every (mode, pattern-signature, capacity-bucket) combination is lowered to
 ONE jitted executable and memoized in ``QueryEngine._exec_cache``: repeated
 queries — and *parameterized* queries that differ only in constants, which
 enter the trace as device scalars — reuse the compiled plan instead of
-retracing XLA.
+retracing XLA.  ``prewarm`` pre-traces the executables for a query set at
+its natural capacity buckets (plus caller-chosen growth buckets), removing
+the first-query-per-bucket cold start.
 
 Beyond the paper (it declares join ordering out of scope): the planner joins
 in ascending-cardinality order, which also gives capacity estimates.
@@ -48,7 +59,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.abox import EncodedKB
-from repro.core.index import StoreIndex
+from repro.core.delta import StoreView
+from repro.core.index import StoreIndex, pow2_bucket as _pow2
 from repro.core.materialize import DeviceTBox
 from repro.kernels import ops
 
@@ -76,6 +88,9 @@ class Term:
     hi: int
     spills: tuple = ()  # ((lo, hi), ...)
     members: np.ndarray | None = None  # explicit id set (rewrite mode)
+
+    def intervals(self):
+        return [(self.lo, self.hi)] + list(self.spills)
 
 
 # ---------------------------------------------------------------------------
@@ -107,10 +122,6 @@ class PatternSig:
     residual: tuple = ()  # slice: positions re-checked after the gather
     extra_caps: tuple | None = None  # rewrite type pattern: (dom_cap, rng_cap)
     fused: bool = False  # scan: predicate fused into the compaction kernel
-
-
-def _pow2(n: int, floor: int = 8) -> int:
-    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), int(np.log2(floor)))
 
 
 def _clip32(v) -> int:
@@ -172,13 +183,14 @@ def _type_rewrite_masks_dyn(spo, mem, tid, dom, rng):
     return mask, xcol
 
 
-def _scan_mask(sig: PatternSig, spo, dyn):
+def _scan_mask(sig: PatternSig, spo, alive, dyn):
     """Full-store boolean mask for a scan pattern (non-fused path)."""
     if sig.extra_caps is not None:
-        return _type_rewrite_masks_dyn(spo, dyn["o"], dyn["tid"],
-                                       dyn["dom"], dyn["rng"])
+        mask, xcol = _type_rewrite_masks_dyn(spo, dyn["o"], dyn["tid"],
+                                             dyn["dom"], dyn["rng"])
+        return mask & alive, xcol
     s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
-    mask = s != INVALID
+    mask = (s != INVALID) & alive
     for tsig, col, key in ((sig.s_sig, s, "s"), (sig.p_sig, p, "p"),
                            (sig.o_sig, o, "o")):
         if tsig is not None:
@@ -234,18 +246,25 @@ def _build_relation(pvars, s, p, o, ok, total, cap: int) -> Relation:
     )
 
 
-def _gather_ranges(rows, starts, lens, cap: int):
-    """Concatenate k contiguous row ranges of a sorted store into [cap] rows."""
+def _gather_ranges(rows, alive, starts, lens, cap: int):
+    """Concatenate k contiguous row ranges of a sorted store into [cap] rows.
+
+    ``alive`` filters tombstoned rows out of the gathered slice: dead rows
+    keep their slot (totals stay exact range lengths for overflow
+    accounting) but are invalidated before the relation is built.
+    """
     src, ok, total = ops.segment_positions(starts, lens, cap)
-    g = rows[jnp.clip(src, 0, rows.shape[0] - 1)]
-    return g, ok, total
+    srcc = jnp.clip(src, 0, rows.shape[0] - 1)
+    return rows[srcc], ok & alive[srcc], total
 
 
 def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
     """One pattern -> (Relation, match count), inside the jitted executable."""
     if sig.strategy == "slice":
         rows = stores[sig.store]
-        g, ok, total = _gather_ranges(rows, dyn["starts"], dyn["lens"], cap)
+        alive = stores[sig.store + "_alive"]
+        g, ok, total = _gather_ranges(rows, alive, dyn["starts"], dyn["lens"],
+                                      cap)
         s, p, o = g[:, 0], g[:, 1], g[:, 2]
         for posi in sig.residual:
             tsig = (sig.s_sig, sig.p_sig, sig.o_sig)[posi]
@@ -253,9 +272,10 @@ def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
             ok = ok & _term_mask_dyn((s, p, o)[posi], tsig, dyn[key])
         return _build_relation(sig.pvars, s, p, o, ok, total, cap), total
 
-    spo = stores["spo"]
+    spo = stores["scan"]
+    alive = stores["scan_alive"]
     if sig.extra_caps is not None:  # rewrite-mode type pattern (?x rdf:type C)
-        mask, xcol = _scan_mask(sig, spo, dyn)
+        mask, xcol = _scan_mask(sig, spo, alive, dyn)
         take, ok, total = ops.compact_indices(mask, cap)
         var = next(v for v in sig.pvars if v is not None)
         cols = [jnp.where(ok, xcol[take], INVALID)]
@@ -269,9 +289,10 @@ def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
         olo = ov[0] if ov is not None else jnp.int32(_I32_MIN)
         ohi = ov[1] if ov is not None else jnp.int32(_I32_MAX)
         params = jnp.stack([plo, phi, olo, ohi]).astype(jnp.int32)
-        take, ok, total = ops.interval_compact(spo[:, 1], spo[:, 2], params, cap)
+        take, ok, total = ops.masked_interval_compact(
+            spo[:, 1], spo[:, 2], alive, params, cap)
     else:
-        mask, _ = _scan_mask(sig, spo, dyn)
+        mask, _ = _scan_mask(sig, spo, alive, dyn)
         take, ok, total = ops.compact_indices(mask, cap)
     g = spo[take]
     return _build_relation(sig.pvars, g[:, 0], g[:, 1], g[:, 2], ok, total,
@@ -285,7 +306,8 @@ def scan_relation(spo, pattern_vars, pat_terms, mode: str, cap: int, extra=None)
     them through cached executables instead).
     """
     sig, dyn = _lower_scan(pattern_vars, pat_terms, extra, mode)
-    rel, total = _eval_pattern(sig, cap, {"spo": spo}, dyn)
+    stores = {"scan": spo, "scan_alive": jnp.ones(spo.shape[0], dtype=bool)}
+    rel, total = _eval_pattern(sig, cap, stores, dyn)
     return rel, total
 
 
@@ -396,21 +418,32 @@ class QueryEngine:
     dtb: DeviceTBox | None = None
     slack: float = 1.5
     use_index: bool = True  # resolve eligible patterns via sorted indexes
+    view: StoreView | None = None  # live base+delta view (None: static store)
     _exec_cache: dict = field(default_factory=dict, repr=False)
-    _index: StoreIndex | None = field(default=None, repr=False)
     cache_stats: dict = field(default_factory=lambda: {"hits": 0, "misses": 0},
                               repr=False)
 
     def __post_init__(self):
         if self.dtb is None and self.kb.tbox is not None:
             self.dtb = DeviceTBox.build(self.kb.tbox)
+        if self.view is None:
+            self.view = StoreView.static(self.spo)
+
+    def set_view(self, view: StoreView) -> None:
+        """Swap in a fresh store view after a mutation.
+
+        The plan cache survives: executables are keyed on signatures and
+        capacity buckets, and jit re-specializes on the new store shapes
+        only where they actually changed (delta buckets are powers of two
+        precisely to keep that rare).
+        """
+        self.view = view
+        self.spo = view.base_rows
 
     @property
     def index(self) -> StoreIndex:
-        """Sorted permutations of this engine's store (built on first use)."""
-        if self._index is None:
-            self._index = StoreIndex.build(self.spo)
-        return self._index
+        """Sorted permutations of this engine's base store."""
+        return self.view.base_index
 
     # -- constant resolution (context-aware, paper §III intro) --------------
     def _resolve(self, term, position: str, type_pattern: bool) -> Term:
@@ -486,74 +519,95 @@ class QueryEngine:
     def _lower(self, pvars, terms, extra):
         """-> (PatternSig, dyn pytree, host count or None).
 
-        ``count`` is exact and free (range lengths) for slice patterns;
-        scan patterns report None and are counted by one cached device pass.
+        ``count`` is exact* and free (range lengths) for slice patterns
+        (*an upper bound when tombstones sit inside a range); scan patterns
+        report None and are counted by one cached device pass.
         """
         s_t, p_t, o_t = terms
         indexable = (
             self.use_index
             and extra is None
             and self.mode in ("litemat", "full")
-            and p_t is not None and p_t.members is None
-            and (s_t is None or s_t.members is None)
-            and (o_t is None or o_t.members is None)
+            and all(t is None or t.members is None for t in terms)
         )
-        if indexable:
-            idx = self.index
+        if indexable and p_t is not None:
+            view = self.view
             # effective predicate id: exact single-width interval, or a wide
             # interval whose store run holds only one distinct predicate
             # (the common rdf:type case) — both collapse to composite ranges
             pid = p_t.lo if (p_t.hi == p_t.lo + 1 and not p_t.spills) else None
             if pid is None and not p_t.spills:
-                pid = idx.single_p_run(*idx.p_range(p_t.lo, p_t.hi))
+                pid = view.single_p_run(p_t.lo, p_t.hi)
             ranges = None
             store = "pos"
             residual = ()
             o_sig = o_dyn = None
             if s_t is None and o_t is None:
-                ivs = [(p_t.lo, p_t.hi)] + list(p_t.spills)
-                ranges = [idx.p_range(a, b) for a, b in ivs]
+                ranges = [r for a, b in p_t.intervals()
+                          for r in view.p_ranges(a, b)]
             elif s_t is None and o_t is not None:
                 if pid is not None:
-                    ivs = [(o_t.lo, o_t.hi)] + list(o_t.spills)
-                    ranges = [idx.po_range(pid, a, b) for a, b in ivs]
+                    ranges = [r for a, b in o_t.intervals()
+                              for r in view.po_ranges(pid, a, b)]
                 else:  # mixed p run sliced, o re-checked on the gathered rows
-                    ivs = [(p_t.lo, p_t.hi)] + list(p_t.spills)
-                    ranges = [idx.p_range(a, b) for a, b in ivs]
+                    ranges = [r for a, b in p_t.intervals()
+                              for r in view.p_ranges(a, b)]
                     residual = (2,)
                     o_sig, o_dyn = _lower_term(o_t)
             elif s_t is not None and pid is not None:
-                ivs = [(s_t.lo, s_t.hi)] + list(s_t.spills)
-                ranges = [idx.ps_range(pid, a, b) for a, b in ivs]
+                ranges = [r for a, b in s_t.intervals()
+                          for r in view.ps_ranges(pid, a, b)]
                 store = "pso"
                 if o_t is not None:  # o re-checked on the gathered rows
                     residual = (2,)
                     o_sig, o_dyn = _lower_term(o_t)
             if ranges is not None:
-                lens = [max(r1 - r0, 0) for r0, r1 in ranges]
-                sig = PatternSig(pvars=pvars, strategy="slice", store=store,
-                                 k=len(ranges), o_sig=o_sig, residual=residual)
-                dyn = {
-                    "starts": jnp.asarray([r0 for r0, _ in ranges], jnp.int32),
-                    "lens": jnp.asarray(lens, jnp.int32),
-                }
-                if o_dyn is not None:
-                    dyn["o"] = o_dyn
-                return sig, dyn, sum(lens)
+                return self._slice_plan(pvars, ranges, store, residual,
+                                        o_sig=o_sig, o_dyn=o_dyn)
+        if indexable and p_t is None and (s_t is not None or o_t is not None):
+            # variable predicate: SPO (constant subject) / OSP (constant
+            # object) permutations keep these off the full-scan path
+            view = self.view
+            if s_t is not None:
+                ranges = [r for a, b in s_t.intervals()
+                          for r in view.s_ranges(a, b)]
+                store = "spo"
+                residual, o_sig, o_dyn = (), None, None
+                if o_t is not None:  # (s ?p o): o re-checked after the gather
+                    residual = (2,)
+                    o_sig, o_dyn = _lower_term(o_t)
+                return self._slice_plan(pvars, ranges, store, residual,
+                                        o_sig=o_sig, o_dyn=o_dyn)
+            ranges = [r for a, b in o_t.intervals()
+                      for r in view.o_ranges(a, b)]
+            return self._slice_plan(pvars, ranges, "osp", ())
         sig, dyn = _lower_scan(pvars, terms, extra, self.mode)
         return sig, dyn, None
+
+    @staticmethod
+    def _slice_plan(pvars, ranges, store, residual, o_sig=None, o_dyn=None):
+        lens = [max(r1 - r0, 0) for r0, r1 in ranges]
+        sig = PatternSig(pvars=pvars, strategy="slice", store=store,
+                         k=len(ranges), o_sig=o_sig, residual=residual)
+        dyn = {
+            "starts": jnp.asarray([r0 for r0, _ in ranges], jnp.int32),
+            "lens": jnp.asarray(lens, jnp.int32),
+        }
+        if o_dyn is not None:
+            dyn["o"] = o_dyn
+        return sig, dyn, sum(lens)
 
     def _pattern_count(self, sig: PatternSig, dyn) -> int:
         """Planning cardinality of a scan pattern (cached jitted reduction)."""
         key = ("count", sig)
         fn = self._exec_cache.get(key)
         if fn is None:
-            def count_device(spo, d, _sig=sig):
-                mask, _ = _scan_mask(_sig, spo, d)
+            def count_device(spo, alive, d, _sig=sig):
+                mask, _ = _scan_mask(_sig, spo, alive, d)
                 return mask.astype(jnp.int32).sum()
             fn = jax.jit(count_device)
             self._exec_cache[key] = fn
-        return int(fn(self.spo, dyn))
+        return int(fn(self.view.scan_rows, self.view.scan_alive, dyn))
 
     def _executable(self, key, sigs, caps, join_cap: int, select):
         """Memoized jitted plan: signature + buckets -> compiled function."""
@@ -594,8 +648,20 @@ class QueryEngine:
             bound_vars |= {v for v in prepared[pick][0] if v}
         return order
 
-    def run(self, patterns, select=None, max_retries: int = 6):
-        """Execute; returns (rows int32[k, n_select], select var names)."""
+    def _stores(self, sigs):
+        """Device arrays the executable closes over, keyed per signature."""
+        v = self.view
+        stores = {}
+        if any(sig.strategy == "scan" for sig in sigs):
+            stores["scan"] = v.scan_rows
+            stores["scan_alive"] = v.scan_alive
+        for perm in {sig.store for sig in sigs if sig.strategy == "slice"}:
+            stores[perm] = v.perm_rows(perm)
+            stores[perm + "_alive"] = v.perm_alive(perm)
+        return stores
+
+    def _plan(self, patterns, select):
+        """Host planning: -> (sigs, dyns, ordered caps, join_cap, sel, stores)."""
         prepared = self._prepare(patterns)
         lowered = [self._lower(*pre) for pre in prepared]
         counts = [
@@ -603,7 +669,7 @@ class QueryEngine:
             for sig, dyn, c in lowered
         ]
         order = self._plan_order(prepared, counts)
-        caps = [self._bucket(int(c * self.slack) + 16) for c in counts]
+        caps = [self._bucket(int(counts[i] * self.slack) + 16) for i in order]
         join_cap = self._bucket(int(max(counts) * self.slack) + 16)
 
         sigs = tuple(lowered[i][0] for i in order)
@@ -611,14 +677,14 @@ class QueryEngine:
         all_vars = tuple(dict.fromkeys(
             v for sig in sigs for v in sig.pvars if v is not None))
         sel = tuple(select) if select else all_vars
-        stores = {"spo": self.spo}
-        for perm in {sig.store for sig in sigs if sig.strategy == "slice"}:
-            stores[perm] = getattr(self.index, f"{perm}_rows")
+        return sigs, dyns, caps, join_cap, sel, self._stores(sigs)
 
+    def run(self, patterns, select=None, max_retries: int = 6):
+        """Execute; returns (rows int32[k, n_select], select var names)."""
+        sigs, dyns, caps, join_cap, sel, stores = self._plan(patterns, select)
         for _ in range(max_retries):
-            ordered_caps = tuple(caps[i] for i in order)
-            key = ("exec", self.mode, sigs, ordered_caps, join_cap, sel)
-            fn = self._executable(key, sigs, ordered_caps, join_cap, sel)
+            key = ("exec", self.mode, sigs, tuple(caps), join_cap, sel)
+            fn = self._executable(key, sigs, tuple(caps), join_cap, sel)
             cols, valid, overflow = fn(stores, dyns)
             if int(overflow) == 0:
                 n = int(valid.sum())
@@ -627,3 +693,27 @@ class QueryEngine:
             join_cap *= 2
             caps = [c * 2 for c in caps]
         raise RuntimeError("query kept overflowing its capacity buckets")
+
+    def prewarm(self, queries, buckets=(), select=None) -> int:
+        """Pre-trace executables for a query set; returns #plans compiled.
+
+        Each query is compiled at its *natural* capacity buckets (what
+        ``run`` would pick against the current store) and additionally at
+        every floor in ``buckets``: caps are raised to at least the floor,
+        covering the bucket sizes the store will grow into.  Subsequent
+        ``run`` calls whose buckets land on a prewarmed combination skip
+        the trace+compile cold start entirely.
+        """
+        before = self.cache_stats["misses"]
+        for pats in queries:
+            sigs, dyns, caps, join_cap, sel, stores = self._plan(pats, select)
+            capsets = {(tuple(caps), join_cap)}
+            for b in buckets:
+                b = self._bucket(int(b))
+                capsets.add((tuple(max(c, b) for c in caps),
+                             max(join_cap, b)))
+            for cs, jc in sorted(capsets):
+                key = ("exec", self.mode, sigs, cs, jc, sel)
+                fn = self._executable(key, sigs, cs, jc, sel)
+                jax.block_until_ready(fn(stores, dyns))
+        return self.cache_stats["misses"] - before

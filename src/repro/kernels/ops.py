@@ -22,7 +22,8 @@ from repro.kernels.interval_filter import interval_filter_pallas
 from repro.kernels.msc_select import msc_select_pallas
 from repro.kernels.pair_search import pair_search_pallas
 from repro.kernels.stream_compact import (
-    interval_compact_pallas, stream_compact_pallas,
+    interval_compact_pallas, masked_interval_compact_pallas,
+    stream_compact_pallas,
 )
 
 INVALID = np.int32(np.iinfo(np.int32).max)
@@ -161,8 +162,26 @@ def interval_compact(p, o, params, cap: int, block: int = 512):
     return _assemble_compact(local, counts, cap, block)
 
 
+@partial(jax.jit, static_argnames=("cap", "block"))
+def masked_interval_compact(p, o, alive, params, cap: int, block: int = 512):
+    """Fused interval predicate + liveness mask + compaction in one pass.
+
+    The live-store scan primitive: ``alive`` carries tombstones from the
+    delta overlay (core/delta.py), so a deleted row is filtered in the same
+    kernel pass that evaluates the LiteMat interval predicate.  Same
+    returns as ``compact_indices``.
+    """
+    pp = _pad1(p, block, INVALID)
+    po = _pad1(o, block, INVALID)
+    pa = _pad1(alive.astype(jnp.int32), block, np.int32(0))
+    local, counts = masked_interval_compact_pallas(
+        pp, po, pa, params, block=block, interpret=_interpret())
+    return _assemble_compact(local, counts, cap, block)
+
+
 __all__ = [
     "interval_filter", "msc_select", "closure_expand",
     "embedding_bag", "embedding_bag_mean", "ell_spmm", "pair_search",
-    "compact_indices", "interval_compact", "segment_positions", "ref",
+    "compact_indices", "interval_compact", "masked_interval_compact",
+    "segment_positions", "ref",
 ]

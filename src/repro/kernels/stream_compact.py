@@ -14,13 +14,17 @@ The intra-tile scatter is expressed as a one-hot select-and-reduce — a
 (block, block) compare cube — because TPU has no vector scatter; at the
 default block of 512 the cube is 1 MB of VMEM and pure VPU work.
 
-Two entry points share the body:
+Three entry points share the body:
 
   * ``stream_compact_pallas``   — compacts an arbitrary precomputed mask
     (spill intervals, member sets, rewrite-mode type masks),
   * ``interval_compact_pallas`` — fuses the LiteMat interval predicate
     (kernels/interval_filter.py) with compaction in ONE pass over the
-    store: p in [plo, phi) AND o in [olo, ohi), constants in SMEM.
+    store: p in [plo, phi) AND o in [olo, ohi), constants in SMEM,
+  * ``masked_interval_compact_pallas`` — the live-store variant: the same
+    fused predicate ANDed with a per-row liveness (tombstone) mask, so a
+    delta-overlaid scan (core/delta.py) filters deleted rows in the same
+    single pass instead of compacting twice.
 """
 from __future__ import annotations
 
@@ -62,6 +66,15 @@ def _fused_kernel(params_ref, p_ref, o_ref, idx_ref, cnt_ref):
     p = p_ref[...]
     o = o_ref[...]
     m = (p >= plo) & (p < phi) & (o >= olo) & (o < ohi)
+    _compact_body(m.astype(jnp.int32), idx_ref, cnt_ref)
+
+
+def _masked_fused_kernel(params_ref, p_ref, o_ref, alive_ref, idx_ref, cnt_ref):
+    plo, phi = params_ref[0], params_ref[1]
+    olo, ohi = params_ref[2], params_ref[3]
+    p = p_ref[...]
+    o = o_ref[...]
+    m = (p >= plo) & (p < phi) & (o >= olo) & (o < ohi) & (alive_ref[...] != 0)
     _compact_body(m.astype(jnp.int32), idx_ref, cnt_ref)
 
 
@@ -110,3 +123,32 @@ def interval_compact_pallas(p, o, params, *, block: int = DEFAULT_BLOCK,
         ],
         interpret=interpret,
     )(params, p, o)
+
+
+def masked_interval_compact_pallas(p, o, alive, params, *,
+                                   block: int = DEFAULT_BLOCK,
+                                   interpret: bool = False):
+    """p, o, alive: int32[N]; params: int32[4] = (plo, phi, olo, ohi) ->
+    (tile-compacted match indices, per-tile counts) — interval predicate and
+    tombstone filter fused in one pass."""
+    n = p.shape[0]
+    nb = n // block
+    return pl.pallas_call(
+        _masked_fused_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(params, p, o, alive)

@@ -99,8 +99,16 @@ def generate_lubm(
     seed: int = 0,
     keep_strings: bool = False,
     literals: bool = True,
+    univ_offset: int = 0,
 ) -> RawDataset:
-    """LUBM-like ABox: ~130K triples per university (cf. paper Table III)."""
+    """LUBM-like ABox: ~130K triples per university (cf. paper Table III).
+
+    ``univ_offset`` shifts the university index space: universities are
+    numbered ``[univ_offset, univ_offset + n_universities)``, so a dataset
+    generated at a disjoint offset is a pure-growth *delta* over a base KB
+    (every entity term is new) — the shape incremental-update benchmarks
+    and tests feed to ``KnowledgeBase.insert``.
+    """
     onto = lubm_ontology()
     rng = np.random.default_rng(seed)
     sink = _TripleSink()
@@ -109,15 +117,15 @@ def generate_lubm(
     pfp = {p: fingerprint_string(p) for p in onto.properties + [RDF_TYPE]}
     TYPE = pfp[RDF_TYPE]
 
-    univs = _ent(K_UNIV, np.arange(n_universities), 0, 0)
+    univs = _ent(K_UNIV, univ_offset + np.arange(n_universities), 0, 0)
     sink.add(univs, TYPE, cfp["University"])
 
-    for u in range(n_universities):
+    for u in range(univ_offset, univ_offset + n_universities):
         n_dept = int(rng.integers(15, 26))
         for d in range(n_dept):
             dept = _ent(K_DEPT, u, d, 0)
             sink.add(dept, TYPE, cfp["Department"])
-            sink.add(dept, pfp["subOrganizationOf"], univs[u])
+            sink.add(dept, pfp["subOrganizationOf"], univs[u - univ_offset])
 
             n_rg = int(rng.integers(10, 21))
             rgs = _ent(K_RG, u, d, np.arange(n_rg))
@@ -203,14 +211,17 @@ def generate_lubm(
                 sink.add(faculty, pfp["researchInterest"], _lit(4, faculty))
 
     s, p, o = sink.arrays()
-    term_strings = _build_strings(onto, s, p, o, n_universities) if keep_strings else None
+    term_strings = (
+        _build_strings(onto, s, p, o, n_universities, univ_offset)
+        if keep_strings else None)
     return RawDataset(
         s=s, p=p, o=o, onto=onto, term_strings=term_strings,
-        meta=dict(kind="lubm", n_universities=n_universities, seed=seed),
+        meta=dict(kind="lubm", n_universities=n_universities, seed=seed,
+                  univ_offset=univ_offset),
     )
 
 
-def _build_strings(onto, s, p, o, n_univ) -> dict:
+def _build_strings(onto, s, p, o, n_univ, univ_offset: int = 0) -> dict:
     """fp -> string map (only for keep_strings scales)."""
     out = {}
     for c in onto.concepts:
@@ -221,7 +232,7 @@ def _build_strings(onto, s, p, o, n_univ) -> dict:
     # actually observed in the dataset
     seen = set(np.concatenate([s, p, o]).tolist())
     for kind, label in _KIND_LABEL.items():
-        for u in range(n_univ):
+        for u in range(univ_offset, univ_offset + n_univ):
             for d in range(64):
                 fps = _ent(kind, u, d, np.arange(4096))
                 hit = [i for i, f in enumerate(fps.tolist()) if f in seen]

@@ -17,8 +17,12 @@ inside the queried interval (e.g. Chair + FullProfessor under Professor),
 so each request still deduplicates its own slice — a sort over the slice,
 never over the view.
 
-``invalidate()`` drops every derived view; call it after swapping or
-mutating the underlying store (the views are snapshots, not live).
+View freshness is automatic: every serving call compares the monotonic
+``KnowledgeBase.version`` counter against the version its views were built
+at and rebuilds them when the store has changed — ``insert`` / ``delete`` /
+``compact`` need no manual invalidation.  ``invalidate()`` remains for the
+one case the counter cannot see: direct (out-of-API) mutation of a store
+field.
 """
 from __future__ import annotations
 
@@ -104,25 +108,38 @@ class QueryServer:
     K: KnowledgeBase
     topk: int = 32
     _views: dict = field(default_factory=dict)
+    _seen_version: int | None = field(default=None)
 
     def invalidate(self):
-        """Drop derived views/indexes after the underlying store changed.
+        """Drop derived views/indexes after an out-of-API store mutation.
 
-        The server snapshots (sorted copies of) ``K.lite_spo`` on first use;
-        mutating or swapping the store does NOT propagate automatically.
+        ``insert`` / ``delete`` / ``compact`` bump ``K.version`` and are
+        picked up automatically; this only matters when a store field was
+        swapped directly (tests, manual surgery).
         """
         self._views.clear()
+        self._seen_version = self.K.version
+
+    def _sync(self):
+        """Auto-invalidate when the KnowledgeBase has moved past our views."""
+        if self._seen_version != self.K.version:
+            self._views.clear()
+            self._seen_version = self.K.version
+
+    def _store(self):
+        """The live lite store (base ∪ delta, tombstones dropped)."""
+        return self.K.store_rows("litemat")
 
     def _type_index(self) -> TypeIndex:
         if "type_os" not in self._views:
             self._views["type_os"] = TypeIndex.build(
-                self.K.lite_spo, int(self.K.dtb.rdf_type_id))
+                self._store(), int(self.K.dtb.rdf_type_id))
         return self._views["type_os"]
 
     def _prop_view(self):
         """Property triples sorted by (subject, predicate)."""
         if "prop" not in self._views:
-            spo = np.asarray(self.K.lite_spo)
+            spo = np.asarray(self._store())
             m = spo[:, 1] != self.K.dtb.rdf_type_id
             s, p = spo[m, 0], spo[m, 1]
             order = np.lexsort((p, s))
@@ -168,6 +185,7 @@ class QueryServer:
 
     def class_members(self, class_names):
         """Batch of Q1-style requests -> (distinct counts, member ids)."""
+        self._sync()
         ti, starts, lens, cap = self._ranges(class_names)
         counts, members = _serve_class_members(ti.subj, starts, lens, cap,
                                                self.topk)
@@ -175,6 +193,7 @@ class QueryServer:
 
     def class_prop_join(self, class_names, prop_names):
         """Batch of Q3-style requests -> (distinct-x counts, x bindings)."""
+        self._sync()
         ti, starts, lens, cap = self._ranges(class_names)
         ps, pp = self._prop_view()
         plo, phi = self._intervals(prop_names, self.K.kb.tbox.properties)

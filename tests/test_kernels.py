@@ -112,6 +112,22 @@ def test_interval_compact_fused(n, rng):
     np.testing.assert_array_equal(np.asarray(take)[np.asarray(ok)], want[:256])
 
 
+@pytest.mark.parametrize("n", [5, 513, 4096])
+@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
+def test_masked_interval_compact_fused(n, density, rng):
+    """Tombstone-aware fused compaction == interval predicate AND liveness."""
+    p = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+    o = jnp.asarray(rng.integers(0, 1 << 20, n), jnp.int32)
+    alive = jnp.asarray(rng.random(n) < density)
+    params = jnp.asarray([10, 40, 0, 1 << 19], jnp.int32)
+    want = np.flatnonzero(np.asarray(
+        ref.ref_interval_filter(None, p, o, 10, 40, 0, 1 << 19, 0))
+        & np.asarray(alive))
+    take, ok, total = ops.masked_interval_compact(p, o, alive, params, 256)
+    assert int(total) == len(want)
+    np.testing.assert_array_equal(np.asarray(take)[np.asarray(ok)], want[:256])
+
+
 @given(st.integers(1, 200), st.integers(1, 300), st.integers(0, 2**31 - 2))
 @settings(max_examples=25, deadline=None)
 def test_pair_search_property(T, n, seed):

@@ -1,0 +1,307 @@
+"""Incremental updates: insert/delete/compact must equal full rebuilds.
+
+The contract under test (the update subsystem's acceptance bar): any
+sequence of ``insert`` / ``delete`` / ``compact`` operations yields query
+answers identical — in fingerprint space, since instance ids are assigned
+in dictionary order and therefore differ between an incrementally grown KB
+and a rebuild — to ``KnowledgeBase.build`` on the final triple set, across
+all three execution modes and both execution strategies.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.engine import KnowledgeBase, PAPER_QUERIES
+from repro.core.query import Pattern
+from repro.core.tbox import Ontology
+from repro.rdf.generator import RawDataset, generate_lubm, generate_random_abox
+from repro.utils import pair64
+
+MODES = ("litemat", "full", "rewrite")
+
+
+def answers_fp(K: KnowledgeBase, patterns, mode="litemat", use_index=True):
+    """Query answers with ids mapped back to term fingerprints.
+
+    TBox ids (hit=False only for padding; concepts/properties resolve too)
+    are stable across rebuilds, but instance ids are rank-assigned — the
+    fingerprint is the identity that survives a re-encode.
+    """
+    rows, _ = K.query(patterns, mode=mode, use_index=use_index)
+    if rows.size == 0:
+        return set()
+    ids = jnp.asarray(rows.reshape(-1).astype(np.int32))
+    hi, lo, hit = K.kb.table.extract_fp(ids)
+    fps = pair64.combine_np(np.asarray(hi), np.asarray(lo))
+    fps = np.where(np.asarray(hit), fps, rows.reshape(-1))
+    return {tuple(r) for r in fps.reshape(rows.shape).tolist()}
+
+
+def _remove_triples(s, p, o, deleted: set):
+    keep = np.array(
+        [(a, b, c) not in deleted
+         for a, b, c in zip(s.tolist(), p.tolist(), o.tolist())], dtype=bool)
+    return s[keep], p[keep], o[keep]
+
+
+def _dag_onto(seed: int) -> Ontology:
+    rng = np.random.default_rng(seed)
+    nc, npr = int(rng.integers(5, 10)), int(rng.integers(2, 5))
+    concepts = [f"C{i}" for i in range(nc)]
+    props = [f"p{i}" for i in range(npr)]
+    subclass = [(concepts[i], concepts[int(rng.integers(0, i))])
+                for i in range(1, nc)]
+    # occasionally a second parent: exercises spill intervals under updates
+    if nc > 4:
+        subclass.append((concepts[nc - 1], concepts[1]))
+    subprop = [(props[i], props[int(rng.integers(0, i))])
+               for i in range(1, npr)]
+    domain = {props[0]: [concepts[1]]} if rng.random() < 0.7 else {}
+    range_ = {props[-1]: [concepts[2]]} if rng.random() < 0.7 else {}
+    return Ontology(concepts=concepts, properties=props, subclass=subclass,
+                    subprop=subprop, domain=domain, range_=range_)
+
+
+def _queries(onto):
+    return [
+        [Pattern("?x", "rdf:type", onto.concepts[0])],
+        [Pattern("?x", "rdf:type", onto.concepts[1])],
+        [Pattern("?x", onto.properties[0], "?y")],
+        [Pattern("?x", "rdf:type", onto.concepts[0]),
+         Pattern("?x", onto.properties[0], "?y")],
+    ]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_randomized_update_sequence_equals_rebuild(seed):
+    """Random insert/delete/compact sequences == rebuild on the final set."""
+    rng = np.random.default_rng(seed)
+    onto = _dag_onto(seed)
+    raw = generate_random_abox(onto, n_instances=40, n_type_triples=60,
+                               n_prop_triples=50, seed=seed)
+    K = KnowledgeBase.build(raw)
+    cur_s, cur_p, cur_o = raw.s.copy(), raw.p.copy(), raw.o.copy()
+
+    for step in range(4):
+        op = rng.choice(["insert", "delete", "compact"], p=[0.5, 0.35, 0.15])
+        if op == "insert":
+            extra = generate_random_abox(
+                onto, n_instances=int(rng.integers(10, 60)),
+                n_type_triples=int(rng.integers(5, 40)),
+                n_prop_triples=int(rng.integers(5, 40)),
+                seed=1000 * seed + step)
+            K.insert(extra, auto_compact=False)
+            cur_s = np.concatenate([cur_s, extra.s])
+            cur_p = np.concatenate([cur_p, extra.p])
+            cur_o = np.concatenate([cur_o, extra.o])
+        elif op == "delete":
+            n = cur_s.shape[0]
+            idx = rng.choice(n, size=max(n // 10, 1), replace=False)
+            K.delete((cur_s[idx], cur_p[idx], cur_o[idx]), auto_compact=False)
+            deleted = set(zip(cur_s[idx].tolist(), cur_p[idx].tolist(),
+                              cur_o[idx].tolist()))
+            cur_s, cur_p, cur_o = _remove_triples(cur_s, cur_p, cur_o, deleted)
+        else:
+            K.compact()
+
+    oracle = KnowledgeBase.build(
+        RawDataset(s=cur_s, p=cur_p, o=cur_o, onto=onto))
+    for q in _queries(onto):
+        for mode in MODES:
+            got = answers_fp(K, q, mode=mode)
+            want = answers_fp(oracle, q, mode=mode)
+            assert got == want, (seed, mode, q, len(got ^ want))
+    # the scan path over the live store must agree with the sliced path
+    q = _queries(onto)[0]
+    assert answers_fp(K, q, use_index=False) == answers_fp(K, q)
+
+
+@pytest.fixture(scope="module")
+def lubm_pair():
+    """A small LUBM KB grown incrementally + its final-state rebuild oracle."""
+    base = generate_lubm(1, seed=11, literals=False)
+    delta = generate_lubm(1, seed=13, literals=False, univ_offset=1)
+    K = KnowledgeBase.build(base)
+    K.insert(delta, auto_compact=False)
+    # delete a slice of the base (every 9th triple) post-insert
+    idx = np.arange(0, base.n_triples, 9)
+    K.delete((base.s[idx], base.p[idx], base.o[idx]), auto_compact=False)
+
+    deleted = set(zip(base.s[idx].tolist(), base.p[idx].tolist(),
+                      base.o[idx].tolist()))
+    s1, p1, o1 = _remove_triples(base.s, base.p, base.o, deleted)
+    s2, p2, o2 = _remove_triples(delta.s, delta.p, delta.o, deleted)
+    oracle = KnowledgeBase.build(RawDataset(
+        s=np.concatenate([s1, s2]), p=np.concatenate([p1, p2]),
+        o=np.concatenate([o1, o2]), onto=base.onto))
+    return K, oracle
+
+
+def test_lubm_paper_queries_after_updates(lubm_pair):
+    """Q1-Q4 in all modes: incrementally updated KB == final-state rebuild."""
+    K, oracle = lubm_pair
+    for qn, pats in PAPER_QUERIES.items():
+        for mode in MODES:
+            got = answers_fp(K, pats, mode=mode)
+            want = answers_fp(oracle, pats, mode=mode)
+            assert got == want, (qn, mode, len(got), len(want))
+            assert len(got) > 0, (qn, mode)
+
+
+def test_lubm_compact_preserves_answers(lubm_pair):
+    """Compaction (sorted-merge fold) must not change any Q1-Q4 answer."""
+    K, _ = lubm_pair
+    before = {qn: answers_fp(K, pats) for qn, pats in PAPER_QUERIES.items()}
+    st = K.compact()
+    assert st["compacted"]
+    assert K.delta.empty if K._delta is not None else True
+    for qn, pats in PAPER_QUERIES.items():
+        assert answers_fp(K, pats) == before[qn], qn
+
+
+def test_dictionary_growth_in_place():
+    """New terms get ids past n_instance_terms; existing ids never move."""
+    onto = _dag_onto(5)
+    raw = generate_random_abox(onto, n_instances=30, n_type_triples=40,
+                               n_prop_triples=30, seed=5)
+    K = KnowledgeBase.build(raw)
+    base = K.kb.tbox.instance_base
+    n_before = K.kb.n_instance_terms
+    old_spo = np.asarray(K.kb.spo).copy()
+
+    extra = generate_random_abox(onto, n_instances=90, n_type_triples=50,
+                                 n_prop_triples=20, seed=99)
+    st = K.insert(extra, auto_compact=False)
+    assert st["n_new_terms"] > 0
+    assert K.kb.n_instance_terms == n_before + st["n_new_terms"]
+    # base store untouched, new rows only reference ids below the new ceiling
+    np.testing.assert_array_equal(np.asarray(K.kb.spo), old_spo)
+    delta_rows = K.delta.log("rewrite").rows
+    assert delta_rows[:, 0].max() < base + K.kb.n_instance_terms
+    assert (delta_rows >= 0).all()
+    # locate/extract round-trips through the grown dictionary
+    new_ids = np.unique(delta_rows[:, 0])
+    new_ids = new_ids[new_ids >= base + n_before]
+    assert new_ids.size > 0
+    hi, lo, hit = K.kb.table.extract_fp(jnp.asarray(new_ids.astype(np.int32)))
+    assert np.asarray(hit).all()
+    fps = pair64.combine_np(np.asarray(hi), np.asarray(lo))
+    ids2, _ = K.kb.table.locate(
+        *map(jnp.asarray, pair64.split_np(fps)))
+    np.testing.assert_array_equal(np.asarray(ids2), new_ids)
+
+
+def test_insert_rejects_unknown_predicates():
+    onto = _dag_onto(6)
+    raw = generate_random_abox(onto, n_instances=20, n_type_triples=30,
+                               n_prop_triples=20, seed=6)
+    K = KnowledgeBase.build(raw)
+    from repro.utils.hashing import fingerprint_string
+
+    s = np.array([fingerprint_string("inst:new")], dtype=np.int64)
+    p = np.array([fingerprint_string("notAProperty")], dtype=np.int64)
+    with pytest.raises(ValueError, match="TBox property map"):
+        K.insert((s, p, s.copy()))
+
+
+def test_auto_compaction_threshold():
+    """Past the delta-ratio threshold an insert folds the overlay itself."""
+    onto = _dag_onto(7)
+    raw = generate_random_abox(onto, n_instances=40, n_type_triples=50,
+                               n_prop_triples=40, seed=7)
+    K = KnowledgeBase.build(raw)
+    K.compact_threshold = 0.05  # tiny: first real insert must trigger
+    extra = generate_random_abox(onto, n_instances=30, n_type_triples=25,
+                                 n_prop_triples=20, seed=70)
+    before = answers_fp(K, _queries(onto)[0])
+    st = K.insert(extra)
+    assert st.get("compacted", {}).get("compacted") is True
+    assert K._delta is None or K.delta.empty
+    after = answers_fp(K, _queries(onto)[0])
+    assert after >= before  # inserts only grow the answer set
+
+
+def test_version_counter_monotonic():
+    onto = _dag_onto(8)
+    raw = generate_random_abox(onto, n_instances=20, n_type_triples=30,
+                               n_prop_triples=20, seed=8)
+    K = KnowledgeBase.build(raw)
+    assert K.version == 0
+    extra = generate_random_abox(onto, n_instances=10, n_type_triples=10,
+                                 n_prop_triples=5, seed=80)
+    K.insert(extra, auto_compact=False)
+    v1 = K.version
+    assert v1 == 1
+    K.delete((extra.s[:3], extra.p[:3], extra.o[:3]), auto_compact=False)
+    v2 = K.version
+    assert v2 > v1
+    K.compact()
+    assert K.version > v2
+    # deleting absent triples is a no-op and must NOT bump the version
+    missing = np.array([123456789], dtype=np.int64)
+    st = K.delete((missing, missing, missing))
+    assert st["n_deleted"] == 0 and K.version == v2 + 1
+
+
+def test_serving_resyncs_on_update():
+    """QueryServer picks up inserts/deletes with no invalidate() call."""
+    from repro.serving.engine import QueryServer
+
+    onto = _dag_onto(9)
+    raw = generate_random_abox(onto, n_instances=40, n_type_triples=60,
+                               n_prop_triples=30, seed=9)
+    K = KnowledgeBase.build(raw)
+    srv = QueryServer(K, topk=8)
+    c0, _ = srv.class_members([onto.concepts[0]])
+    extra = generate_random_abox(onto, n_instances=120, n_type_triples=60,
+                                 n_prop_triples=10, seed=90)
+    K.insert(extra, auto_compact=False)
+    c1, _ = srv.class_members([onto.concepts[0]])
+    oracle = len(K.answers([Pattern("?x", "rdf:type", onto.concepts[0])]))
+    assert int(c1[0]) == oracle
+    assert int(c1[0]) > int(c0[0])
+    # deletes propagate too (tombstones must be dropped from the snapshot)
+    K.delete((extra.s, extra.p, extra.o), auto_compact=False)
+    c2, _ = srv.class_members([onto.concepts[0]])
+    oracle2 = len(K.answers([Pattern("?x", "rdf:type", onto.concepts[0])]))
+    assert int(c2[0]) == oracle2 == int(c0[0])
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5), st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_update_sequence_property(seed, n_steps, compact_mid):
+    """Hypothesis-randomized sequences: answers == rebuild, every mode."""
+    rng = np.random.default_rng(seed)
+    onto = _dag_onto(seed % 97)
+    raw = generate_random_abox(onto, n_instances=25, n_type_triples=35,
+                               n_prop_triples=25, seed=seed % 89)
+    K = KnowledgeBase.build(raw)
+    cur_s, cur_p, cur_o = raw.s.copy(), raw.p.copy(), raw.o.copy()
+    for step in range(n_steps):
+        if rng.random() < 0.6:
+            extra = generate_random_abox(
+                onto, n_instances=int(rng.integers(5, 30)),
+                n_type_triples=int(rng.integers(3, 20)),
+                n_prop_triples=int(rng.integers(3, 20)),
+                seed=int(rng.integers(0, 1 << 30)))
+            K.insert(extra, auto_compact=False)
+            cur_s = np.concatenate([cur_s, extra.s])
+            cur_p = np.concatenate([cur_p, extra.p])
+            cur_o = np.concatenate([cur_o, extra.o])
+        else:
+            n = cur_s.shape[0]
+            idx = rng.choice(n, size=max(n // 8, 1), replace=False)
+            K.delete((cur_s[idx], cur_p[idx], cur_o[idx]), auto_compact=False)
+            deleted = set(zip(cur_s[idx].tolist(), cur_p[idx].tolist(),
+                              cur_o[idx].tolist()))
+            cur_s, cur_p, cur_o = _remove_triples(cur_s, cur_p, cur_o, deleted)
+        if compact_mid and step == n_steps // 2:
+            K.compact()
+    oracle = KnowledgeBase.build(
+        RawDataset(s=cur_s, p=cur_p, o=cur_o, onto=onto))
+    for q in _queries(onto)[:2]:
+        for mode in MODES:
+            assert answers_fp(K, q, mode=mode) == answers_fp(
+                oracle, q, mode=mode), (seed, mode, q)
