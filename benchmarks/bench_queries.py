@@ -63,6 +63,19 @@ def main():
                   repeats=3)
     emit("serving/class_prop_join_batch64", t, qps=int(64 / t))
 
+    # live-overlay cost: Q1 against an uncompacted ~1% delta (two-source
+    # gathers over base + device-resident delta bucket) vs post-compaction
+    from repro.rdf.generator import generate_lubm as _gen
+
+    pool = _gen(1, seed=3, univ_offset=BENCH_UNIVERSITIES + 1)
+    n = max(K.kb.n // 100, 1)
+    K.insert((pool.s[:n], pool.p[:n], pool.o[:n]), auto_compact=False)
+    t_live, _ = timeit(lambda: K.query(PAPER_QUERIES["Q1"]), repeats=3)
+    K.compact()
+    t_comp, _ = timeit(lambda: K.query(PAPER_QUERIES["Q1"]), repeats=3)
+    emit("table6/Q1/litemat_live_overlay", t_live,
+         delta_rows=n, overhead_vs_compacted=round(t_live / max(t_comp, 1e-9), 2))
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Diff fresh BENCH_*.json artifacts against the previous commit's.
+
+CI's bench job regenerates BENCH_queries.json / BENCH_updates.json in the
+working tree; this script compares every time-like row against the version
+committed at a baseline git ref (the previous run's artifact) and FAILS the
+job when a metric regressed by more than ``--tolerance`` (default 20%).
+
+Guards against CPU-runner noise:
+
+  * rows below ``--min-us`` (default 50ms) are informational only — a 3ms
+    kernel dispatch jitters far beyond 20% on shared runners,
+  * rows whose ``us_per_call`` is 0 (pure pass/fail or ratio rows, e.g.
+    ``updates/warmup_flatness``) are compared on their ``passed`` flag
+    instead: a True -> False flip is always a failure.
+
+Usage:
+    python scripts/bench_diff.py [--baseline-ref HEAD~1] [--tolerance 0.2]
+                                 [--min-us 50000] [files...]
+
+Exit codes: 0 ok / baseline missing (first run), 1 regression found.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+DEFAULT_FILES = ("BENCH_queries.json", "BENCH_updates.json")
+
+
+def _load_current(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _load_baseline(ref: str, path: str) -> dict | None:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:{path}"],
+            capture_output=True, check=True).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, json.JSONDecodeError, OSError):
+        return None
+
+
+def _rows_by_name(artifact: dict) -> dict:
+    return {r["name"]: r for r in artifact.get("rows", [])
+            if isinstance(r, dict) and "name" in r}
+
+
+def diff_artifact(cur: dict, base: dict, tolerance: float, min_us: float):
+    """-> (regressions, improvements, notes) as printable strings."""
+    regressions, improvements, notes = [], [], []
+    cur_rows, base_rows = _rows_by_name(cur), _rows_by_name(base)
+    for name, row in sorted(cur_rows.items()):
+        prev = base_rows.get(name)
+        if prev is None:
+            notes.append(f"  new row: {name}")
+            continue
+        c_us, b_us = float(row.get("us_per_call", 0)), float(
+            prev.get("us_per_call", 0))
+        if c_us == 0 or b_us == 0:
+            # pass/fail or ratio rows: a flag flip is the regression signal
+            if prev.get("passed") is True and row.get("passed") is False:
+                regressions.append(
+                    f"  {name}: passed True -> False ({row})")
+            continue
+        rel = c_us / b_us - 1.0
+        line = (f"  {name}: {b_us / 1e3:.1f}ms -> {c_us / 1e3:.1f}ms "
+                f"({rel:+.0%})")
+        if rel > tolerance:
+            if max(c_us, b_us) < min_us:
+                notes.append(line + "  [below noise floor, ignored]")
+            else:
+                regressions.append(line)
+        elif rel < -tolerance and max(c_us, b_us) >= min_us:
+            improvements.append(line)
+    return regressions, improvements, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=list(DEFAULT_FILES))
+    ap.add_argument("--baseline-ref", default="HEAD~1",
+                    help="git ref holding the previous artifact")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="relative slowdown that fails the job (0.2 = +20%%)")
+    ap.add_argument("--min-us", type=float, default=50_000,
+                    help="noise floor: rows faster than this never fail")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0")
+    args = ap.parse_args(argv)
+    files = args.files or list(DEFAULT_FILES)
+
+    failed = False
+    for path in files:
+        cur = _load_current(path)
+        if cur is None:
+            print(f"# {path}: no current artifact (bench not run?) — skipped")
+            continue
+        base = _load_baseline(args.baseline_ref, path)
+        if base is None:
+            print(f"# {path}: no baseline at {args.baseline_ref} — skipped "
+                  "(first run or shallow clone)")
+            continue
+        scale = ("bench_universities", "n_base_triples")
+        if any(cur.get(k) != base.get(k) for k in scale):
+            print(f"# {path}: benchmark scale changed "
+                  f"({ {k: (base.get(k), cur.get(k)) for k in scale} }) — "
+                  "timings not comparable, skipped")
+            continue
+        reg, imp, notes = diff_artifact(cur, base, args.tolerance,
+                                        args.min_us)
+        print(f"# {path} vs {args.baseline_ref} "
+              f"(tolerance +{args.tolerance:.0%}, floor {args.min_us / 1e3:.0f}ms)")
+        for line in notes:
+            print(line)
+        if imp:
+            print(" improvements:")
+            for line in imp:
+                print(line)
+        if reg:
+            print(" REGRESSIONS:")
+            for line in reg:
+                print(line)
+            failed = True
+        if not reg and not imp:
+            print("  no significant changes")
+
+    if failed and not args.warn_only:
+        print("bench_diff: FAILED (see REGRESSIONS above)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

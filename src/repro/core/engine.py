@@ -10,11 +10,12 @@ stores can grow without re-encoding, and ``insert`` / ``delete`` exploit
 that:
 
   * ``insert(raw)``  — new instance terms extend the parallel dictionary in
-    place (ids past ``n_instance_terms``; no existing id moves), the delta
-    rows alone are lite/full-materialized against the existing DeviceTBox,
-    and the encoded rows land in an append-only delta overlay
-    (core/delta.py) that queries union with the base via sorted delta
-    indexes.
+    place (ids past ``n_instance_terms``; no existing id moves), and the
+    encoded rows land in an append-only delta overlay (core/delta.py) that
+    queries union with the base via sorted delta indexes.  Lite/full
+    materialization of the delta is LAZY per mode: each store derives its
+    backlog the first time it is served, so single-mode deployments run
+    one materializer per insert, not two.
   * ``delete(raw)``  — tombstones the raw rows, then repairs the
     materialized stores exactly by re-deriving the affected instances from
     their remaining live triples (core/update.py).
@@ -32,18 +33,21 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.abox import EncodedKB, encode_obe, encode_sae
 from repro.core.closure import full_materialize
-from repro.core.delta import MODES, DeltaKB, StoreView, compact_view
+from repro.core.delta import (
+    MODES, DeltaKB, DeviceStoreCache, StoreView, compact_view,
+)
 from repro.core.index import StoreIndex
 from repro.core.materialize import DeviceTBox, compact_rows, lite_materialize
 from repro.core.query import Pattern, QueryEngine
 from repro.core.tbox import TBox, build_tbox
 from repro.core.update import (
     DynamicDictionary, RowLocator, absorb_new_terms, affected_instances,
-    encode_delta, materialize_delta, mentions_mask,
+    encode_delta, materialize_delta_mode, mention_rows, mentions_mask,
 )
 from repro.rdf.generator import RawDataset
 
@@ -79,12 +83,19 @@ class KnowledgeBase:
     full_stats: dict
     compact_threshold: float = 0.25  # auto-compact past this delta ratio
     version: int = 0  # bumps on every insert/delete/compact
+    lazy_materialize: bool = True  # derive lite/full deltas per served mode
+    mat_counts: dict = field(
+        default_factory=lambda: {"litemat": 0, "full": 0})  # batches derived
     _engines: dict = field(default_factory=dict, repr=False)
     _delta: DeltaKB | None = field(default=None, repr=False)
     _dyn: DynamicDictionary | None = field(default=None, repr=False)
     _base_indexes: dict = field(default_factory=dict, repr=False)
     _views: dict = field(default_factory=dict, repr=False)
     _raw_loc: RowLocator | None = field(default=None, repr=False)
+    _dev_caches: dict = field(default_factory=dict, repr=False)
+    _pending_raw: list = field(default_factory=list, repr=False)
+    _mat_cursor: dict = field(
+        default_factory=lambda: {"litemat": 0, "full": 0}, repr=False)
 
     @classmethod
     def build(cls, raw: RawDataset, tbox: TBox | None = None,
@@ -122,18 +133,59 @@ class KnowledgeBase:
             self._delta = DeltaKB()
         return self._delta
 
+    def dev_cache(self, mode: str) -> DeviceStoreCache:
+        """The store's persistent device buffers (survive version bumps)."""
+        if mode not in self._dev_caches:
+            self._dev_caches[mode] = DeviceStoreCache()
+        return self._dev_caches[mode]
+
+    def _flush_mat(self, *modes: str) -> None:
+        """Materialize pending insert batches for the given derived modes.
+
+        Inserts only queue their encoded raw rows (``lazy_materialize``);
+        the first time a mode is actually *served* — a view build, a
+        delete's repair, a compaction — its share of the queue is derived
+        here.  A lite-only deployment therefore never runs the full
+        closure of its inserts (and vice versa).
+        """
+        n = len(self._pending_raw)
+        for mode in modes:
+            cur = self._mat_cursor[mode]
+            if cur >= n:
+                continue
+            for spo in self._pending_raw[cur:]:
+                rows = materialize_delta_mode(spo, self.dtb, mode)
+                self.delta.log(mode).append(rows)
+                self.mat_counts[mode] += 1
+            self._mat_cursor[mode] = n
+        if self._pending_raw and all(
+                c >= n for c in self._mat_cursor.values()):
+            self._pending_raw.clear()
+            self._mat_cursor = {m: 0 for m in self._mat_cursor}
+
+    def _pending_rows(self, mode: str) -> int:
+        """Raw rows queued for ``mode`` whose derivation hasn't run yet."""
+        if mode not in self._mat_cursor:
+            return 0
+        return sum(int(b.shape[0])
+                   for b in self._pending_raw[self._mat_cursor[mode]:])
+
     def view(self, mode: str) -> StoreView:
         """The live base+delta StoreView of one store, cached per version."""
         key = (mode, self.version)
         if key not in self._views:
+            if mode in ("litemat", "full"):
+                self._flush_mat(mode)
             idx = self._base_index(mode)
             if self._delta is None or self._delta.empty:
                 v = StoreView(base_rows=self._base_store(mode), base_h=idx._h,
-                              base_index=idx)
+                              base_index=idx, cache=self.dev_cache(mode))
             else:
                 v = StoreView.overlay(self._base_store(mode), idx,
                                       self._delta.log(mode),
-                                      self._delta.base_alive[mode])
+                                      self._delta.base_alive[mode],
+                                      cache=self.dev_cache(mode),
+                                      kills=tuple(self._delta.kills[mode]))
             self._views[key] = v
         return self._views[key]
 
@@ -182,6 +234,17 @@ class KnowledgeBase:
             for m in modes
         )
 
+    def warm_device(self, mode: str = "litemat", keys=("scan", "pos")):
+        """Bring ``mode``'s device buffers up to the current version.
+
+        The post-mutation warmup unit: with plans prewarmed, this is ALL
+        the work a first query pays after an insert/delete beyond the query
+        itself — O(delta) bucket refresh + O(#killed) tombstone scatters,
+        independent of the base size (``dev_cache(mode).stats`` has the
+        transfer accounting).
+        """
+        return self.view(mode).warm_device(keys)
+
     def sizes(self) -> dict:
         out = dict(
             original=self.kb.n,
@@ -191,6 +254,9 @@ class KnowledgeBase:
         if self._delta is not None and not self._delta.empty:
             out["delta_rows"] = sum(
                 self._delta.n_rows(m) for m in MODES)
+            pending = sum(self._pending_rows(m) for m in ("litemat", "full"))
+            if pending:
+                out["delta_rows_pending_mat"] = pending
         return out
 
     # -- incremental updates -------------------------------------------------
@@ -210,21 +276,29 @@ class KnowledgeBase:
 
     @property
     def delta_ratio(self) -> float:
-        if self._delta is None:
+        if self._delta is None and not self._pending_raw:
             return 0.0
-        return self._delta.ratio({
+        # pending (not yet derived) insert batches count once per lazy mode:
+        # the raw row count is the cheap proxy for the rows their derivation
+        # will add, so auto-compaction triggers on the same schedule whether
+        # or not the modes have been served yet.
+        extra = sum(self._pending_rows(m) for m in ("litemat", "full"))
+        return self.delta.ratio({
             "rewrite": self.kb.n,
             "litemat": int(self.lite_spo.shape[0]),
             "full": int(self.full_spo.shape[0]),
-        })
+        }, extra_rows=extra)
 
     def insert(self, raw, auto_compact: bool = True) -> dict:
-        """Append raw triples without rebuilding: encode + delta-materialize.
+        """Append raw triples without rebuilding: encode + queue derivation.
 
         New instance/literal terms extend the dictionary in place (ids past
         ``n_instance_terms``); predicates must be TBox properties (the TBox
-        is fixed between full re-encodes).  Only the delta rows are
-        materialized; queries see base ∪ delta immediately.
+        is fixed between full re-encodes).  The encoded rows land in the raw
+        delta log immediately; their lite/full materialization is *lazy* —
+        derived the first time each mode is actually served (``view``,
+        ``delete``, ``compact``) — so single-mode deployments only ever run
+        one materializer per insert.
         """
         s_fp, p_fp, o_fp, strings = _raw_columns(raw)
         if s_fp.shape[0] == 0:
@@ -232,18 +306,18 @@ class KnowledgeBase:
         dyn = self._dynamic()
         spo, n_new = encode_delta(dyn, s_fp, p_fp, o_fp)
         absorb_new_terms(self.kb, dyn, strings)
-        lite, full = materialize_delta(spo, self.dtb)
         d = self.delta
         d.log("rewrite").append(spo)
-        d.log("litemat").append(lite)
-        d.log("full").append(full)
+        self._pending_raw.append(spo)
+        if not self.lazy_materialize:
+            self._flush_mat("litemat", "full")
         d.n_new_terms += n_new
         self._bump()
         stats = dict(
             n_inserted=int(spo.shape[0]),
             n_new_terms=n_new,
-            n_lite_delta=int(lite.shape[0]),
-            n_full_delta=int(full.shape[0]),
+            n_pending_mat=sum(
+                self._pending_rows(m) for m in ("litemat", "full")),
             delta_ratio=round(self.delta_ratio, 4),
             version=self.version,
         )
@@ -264,6 +338,9 @@ class KnowledgeBase:
         s_fp, p_fp, o_fp, _ = _raw_columns(raw)
         if s_fp.shape[0] == 0:
             return dict(n_deleted=0)
+        # the repair below tombstones + re-appends derived delta rows, so any
+        # lazily queued materialization must land first
+        self._flush_mat("litemat", "full")
         dyn = self._dynamic()
         ids = np.stack([dyn.lookup(s_fp), dyn.lookup(p_fp),
                         dyn.lookup(o_fp)], axis=1)
@@ -287,34 +364,35 @@ class KnowledgeBase:
                 dhits = dhits[rlog.alive[dhits]]
                 if dhits.size:
                     deleted.append(rlog.rows[dhits])
-                    rlog.alive[dhits] = False
+                    rlog.tombstone(dhits)
 
         if not deleted:
             return dict(n_deleted=0)
         deleted = np.concatenate(deleted)
         inst = affected_instances(deleted, self.kb.tbox.instance_base)
 
-        # tombstone every derived row mentioning an affected instance
+        # tombstone every derived row mentioning an affected instance: the
+        # instance-keyed SPO/OSP lookup touches only the hit runs, so this
+        # is O(k log N + hits) in the base size, not an O(N) np.isin scan
         for mode in ("litemat", "full"):
-            bh = self._base_index(mode)._h
-            d.kill_base(mode, bh.shape[0],
-                        np.nonzero(mentions_mask(bh, inst))[0])
+            idx = self._base_index(mode)
+            d.kill_base(mode, idx.n, mention_rows(idx, inst))
             log = d.log(mode)
             if log.n:
-                log.alive &= ~mentions_mask(log.rows, inst)
+                log.tombstone(mentions_mask(log.rows, inst))
 
         # re-derive the affected instances from their live raw triples
         raw_alive = d.base_alive["rewrite"]
-        bm = mentions_mask(base_h, inst)
+        raw_rows = mention_rows(self._base_index("rewrite"), inst)
         if raw_alive is not None:
-            bm &= raw_alive
-        parts = [base_h[bm]]
+            raw_rows = raw_rows[raw_alive[raw_rows]]
+        parts = [base_h[raw_rows]]
         if rlog.n:
             parts.append(rlog.rows[mentions_mask(rlog.rows, inst) & rlog.alive])
         frontier = np.concatenate(parts)
-        lite, full = materialize_delta(frontier, self.dtb)
-        d.log("litemat").append(lite[mentions_mask(lite, inst)])
-        d.log("full").append(full[mentions_mask(full, inst)])
+        for mode in ("litemat", "full"):
+            derived = materialize_delta_mode(frontier, self.dtb, mode)
+            d.log(mode).append(derived[mentions_mask(derived, inst)])
         self._bump()
         stats = dict(
             n_deleted=int(deleted.shape[0]),
@@ -326,7 +404,7 @@ class KnowledgeBase:
             stats["compacted"] = self.compact()
         return stats
 
-    def compact(self) -> dict:
+    def compact(self, device: bool | None = None) -> dict:
         """Fold the delta overlay into fresh base stores (sorted merges).
 
         Each store's base POS run interleaves with its delta POS run in one
@@ -335,13 +413,20 @@ class KnowledgeBase:
         permutation already materialized (the other permutations re-sort
         lazily on first use).  Dictionary growth needs no work: new terms
         were absorbed into ``kb.tables`` at insert time.
+
+        ``device`` selects the merge implementation: the merge-path Pallas
+        kernel over the resident device buffers (bit-identical to the host
+        merge; default on TPU backends) or the host searchsorted interleave
+        (default elsewhere, where 'device' arrays live in host RAM anyway).
         """
-        if self._delta is None or self._delta.empty:
+        if (self._delta is None or self._delta.empty) and not self._pending_raw:
             return dict(compacted=False)
+        self._flush_mat("litemat", "full")
+        if device is None:
+            device = jax.default_backend() == "tpu"
         sizes = {}
         for mode in MODES:
-            merged, idx = compact_view(self.view(mode))
-            dev = jnp.asarray(merged)
+            dev, idx = compact_view(self.view(mode), device=device)
             if mode == "rewrite":
                 self.kb.spo = dev
             elif mode == "litemat":
@@ -349,7 +434,7 @@ class KnowledgeBase:
             else:
                 self.full_spo = dev
             self._base_indexes[mode] = idx
-            sizes[mode] = int(merged.shape[0])
+            sizes[mode] = int(dev.shape[0])
         self._delta = DeltaKB()
         self._raw_loc = None
         self._bump()

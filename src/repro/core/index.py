@@ -37,6 +37,8 @@ request is two binary searches + a slice rather than a full-view sort.
 """
 from __future__ import annotations
 
+import itertools
+
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -45,7 +47,14 @@ import jax.numpy as jnp
 
 _SHIFT = np.int64(32)
 
+# StoreIndex identity tokens: device caches (core/delta.py) key their state
+# on the *base* they were built from, and Python object ids can be recycled.
+_TOKENS = itertools.count()
+
 PERMUTATIONS = ("pos", "pso", "spo", "osp")
+
+
+INVALID = np.int32(np.iinfo(np.int32).max)
 
 
 def pow2_bucket(n: int, floor: int = 8) -> int:
@@ -56,6 +65,17 @@ def pow2_bucket(n: int, floor: int = 8) -> int:
     reused across them.
     """
     return 1 << max(int(np.ceil(np.log2(max(n, 1)))), int(np.log2(floor)))
+
+
+def pad_rows(rows: np.ndarray, cap: int) -> np.ndarray:
+    """Pad an (N, 3) triple array to ``cap`` rows of INVALID — THE padding
+    helper (delta buckets, materializer batches) so the fill contract
+    lives in one place."""
+    pad = cap - rows.shape[0]
+    if pad <= 0:
+        return rows
+    return np.concatenate(
+        [rows, np.full((pad, 3), INVALID, dtype=np.int32)])
 
 
 def _composite(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -71,6 +91,7 @@ class _Perm:
     primary: np.ndarray  # host primary-sort column
     key: np.ndarray  # host (primary << 32 | secondary) composite keys
     perm: np.ndarray  # source-row index of each sorted row
+    inv: np.ndarray | None = None  # lazy original-row -> sorted-position map
 
 
 # (primary, secondary, tertiary) column indices per permutation name; the
@@ -90,23 +111,27 @@ class StoreIndex:
 
     _h: np.ndarray = field(repr=False)  # host copy of the store
     _perms: dict = field(default_factory=dict, repr=False)
+    token: int = field(default_factory=lambda: next(_TOKENS), repr=False)
 
     @classmethod
     def build(cls, spo) -> "StoreIndex":
         return cls(_h=np.asarray(spo))
 
     @classmethod
-    def from_sorted(cls, rows: np.ndarray, name: str) -> "StoreIndex":
+    def from_sorted(cls, rows: np.ndarray, name: str,
+                    dev_rows: jnp.ndarray | None = None) -> "StoreIndex":
         """Wrap an array already sorted in permutation ``name`` order.
 
         Used by compaction: the merged POS run doubles as the new store, so
         the POS permutation is the identity and costs nothing to register.
+        ``dev_rows`` hands over an existing device copy (the device-side
+        merge result) so the index never re-uploads it.
         """
         idx = cls(_h=np.asarray(rows))
         a, b, _ = _ORDERS[name]
         h = idx._h
         idx._perms[name] = _Perm(
-            rows=jnp.asarray(h),
+            rows=jnp.asarray(h) if dev_rows is None else dev_rows,
             primary=np.ascontiguousarray(h[:, a]),
             key=_composite(h[:, a], h[:, b]),
             perm=np.arange(h.shape[0], dtype=np.int64),
@@ -126,6 +151,20 @@ class StoreIndex:
                 perm=p,
             )
         return self._perms[name]
+
+    def inv_perm(self, name: str) -> np.ndarray:
+        """original-row -> sorted-position map of permutation ``name``.
+
+        The device overlay caches (core/delta.py) need it to scatter
+        tombstone bits — recorded in original store coordinates — into the
+        permuted liveness buffers.  O(N) once per permutation, cached.
+        """
+        p = self.perm(name)
+        if p.inv is None:
+            inv = np.empty(p.perm.shape[0], dtype=np.int64)
+            inv[p.perm] = np.arange(p.perm.shape[0], dtype=np.int64)
+            p.inv = inv
+        return p.inv
 
     # -- legacy aliases (PR 1 API) -------------------------------------------
     @property

@@ -19,7 +19,11 @@ Stores are *live*: the engine executes against a StoreView (core/delta.py)
 — an immutable base plus a small delta overlay with tombstones — so the
 same compiled plans serve a store that is being mutated between queries.
 Patterns union base-index slices with delta-index slices, and every row
-carries a liveness bit that the gather/compaction paths filter.
+carries a liveness bit that the gather/compaction paths filter.  Each view
+key reaches the device as a PAIR of arrays — the base store (resident,
+untouched by mutations) and a power-of-two delta bucket — addressed in
+combined coordinates, so refreshing the executable's inputs after an
+insert/delete moves O(delta) bytes, never an O(base) re-concatenation.
 
 Execution strategy per pattern (chosen host-side during planning):
 
@@ -120,7 +124,9 @@ class PatternSig:
     store: str = "pos"  # slice: which sorted permutation
     k: int = 1  # slice: number of contiguous ranges
     residual: tuple = ()  # slice: positions re-checked after the gather
-    extra_caps: tuple | None = None  # rewrite type pattern: (dom_cap, rng_cap)
+    # rewrite type pattern: (dom_cap, rng_cap, has_dom, has_rng) — the flags
+    # are static so empty domain/range branches compile to nothing
+    extra_caps: tuple | None = None
     fused: bool = False  # scan: predicate fused into the compaction kernel
 
 
@@ -167,28 +173,31 @@ def _in_set(col, arr):
     return (arr[pos] == col) & (col != INVALID)
 
 
-def _type_rewrite_masks_dyn(spo, mem, tid, dom, rng):
+def _type_rewrite_masks_dyn(spo, alive, mem, tid, dom, rng, has_dom, has_rng):
     """Rewrite-mode (?x rdf:type C): explicit ∪ domain ∪ range branches.
 
-    Returns (mask, xcol): which triples contribute and which column binds ?x
-    (subjects for explicit/domain branches, objects for range branches) —
-    the full RDFS reformulation the paper's Q4' illustrates.
+    Returns (mask_s, mask_o): rows binding ?x to their SUBJECT (explicit
+    type triples and domain-entailing predicates) and rows binding ?x to
+    their OBJECT (range-entailing predicates; None when the target has no
+    range-entailing properties — statically known, so the branch compiles
+    to nothing) — the full RDFS reformulation the paper's Q4' illustrates.
+    The branches are NOT exclusive: a triple whose predicate entails the
+    target through both its domain and its range contributes BOTH
+    endpoints, so the two masks must be compacted separately (collapsing
+    them to one row/one binding silently undercounts — the drift the
+    differential oracle caught).
     """
     s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
-    m_expl = (p == tid) & _in_set(o, mem)
-    m_dom = _in_set(p, dom)
-    m_rng = _in_set(p, rng)
-    mask = (m_expl | m_dom | m_rng) & (s != INVALID)
-    xcol = jnp.where(m_rng & ~(m_expl | m_dom), o, s)
-    return mask, xcol
+    valid = (s != INVALID) & alive
+    m_s = (p == tid) & _in_set(o, mem)
+    if has_dom:
+        m_s = m_s | _in_set(p, dom)
+    m_o = (_in_set(p, rng) & valid) if has_rng else None
+    return m_s & valid, m_o
 
 
 def _scan_mask(sig: PatternSig, spo, alive, dyn):
     """Full-store boolean mask for a scan pattern (non-fused path)."""
-    if sig.extra_caps is not None:
-        mask, xcol = _type_rewrite_masks_dyn(spo, dyn["o"], dyn["tid"],
-                                             dyn["dom"], dyn["rng"])
-        return mask & alive, xcol
     s, p, o = spo[:, 0], spo[:, 1], spo[:, 2]
     mask = (s != INVALID) & alive
     for tsig, col, key in ((sig.s_sig, s, "s"), (sig.p_sig, p, "p"),
@@ -246,42 +255,80 @@ def _build_relation(pvars, s, p, o, ok, total, cap: int) -> Relation:
     )
 
 
-def _gather_ranges(rows, alive, starts, lens, cap: int):
-    """Concatenate k contiguous row ranges of a sorted store into [cap] rows.
+def _gather_ranges(base, base_alive, delta, delta_alive, starts, lens,
+                   cap: int):
+    """Concatenate k contiguous row ranges of a sorted view into [cap] rows.
 
-    ``alive`` filters tombstoned rows out of the gathered slice: dead rows
+    Ranges address the virtual [base | delta-bucket] concatenation (delta
+    offset by the base row count); rows resolve through a two-source gather
+    so the base array is never physically concatenated with the delta.
+    Liveness filters tombstoned rows out of the gathered slice: dead rows
     keep their slot (totals stay exact range lengths for overflow
     accounting) but are invalidated before the relation is built.
     """
     src, ok, total = ops.segment_positions(starts, lens, cap)
-    srcc = jnp.clip(src, 0, rows.shape[0] - 1)
-    return rows[srcc], ok & alive[srcc], total
+    rows = ops.two_source_gather(base, delta, src)
+    alive = ops.two_source_gather(base_alive, delta_alive, src)
+    return rows, ok & alive, total
 
 
-def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
-    """One pattern -> (Relation, match count), inside the jitted executable."""
-    if sig.strategy == "slice":
-        rows = stores[sig.store]
-        alive = stores[sig.store + "_alive"]
-        g, ok, total = _gather_ranges(rows, alive, dyn["starts"], dyn["lens"],
-                                      cap)
-        s, p, o = g[:, 0], g[:, 1], g[:, 2]
-        for posi in sig.residual:
-            tsig = (sig.s_sig, sig.p_sig, sig.o_sig)[posi]
-            key = ("s", "p", "o")[posi]
-            ok = ok & _term_mask_dyn((s, p, o)[posi], tsig, dyn[key])
-        return _build_relation(sig.pvars, s, p, o, ok, total, cap), total
+def _stitch_compact(take_b, total_b, take_d, total_d, base_n: int, cap: int):
+    """Fuse two per-source compactions into one combined-coordinate take.
 
-    spo = stores["scan"]
-    alive = stores["scan_alive"]
-    if sig.extra_caps is not None:  # rewrite-mode type pattern (?x rdf:type C)
-        mask, xcol = _scan_mask(sig, spo, alive, dyn)
-        take, ok, total = ops.compact_indices(mask, cap)
-        var = next(v for v in sig.pvars if v is not None)
-        cols = [jnp.where(ok, xcol[take], INVALID)]
-        rel = Relation(vars=(var,), cols=jnp.stack(cols), valid=ok,
-                       overflow=jnp.maximum(total - cap, 0))
-        return rel, total
+    Base matches come first (they are base-store row indices as-is), delta
+    matches follow offset by ``base_n`` — the same combined addressing the
+    range lookups use, so downstream gathers are shared with the slice path.
+    """
+    j = jnp.arange(cap, dtype=jnp.int32)
+    use_b = j < total_b
+    di = jnp.clip(j - total_b, 0, cap - 1)
+    take = jnp.where(use_b, take_b, base_n + take_d[di])
+    total = total_b + total_d
+    return take, j < jnp.minimum(total, cap), total
+
+
+def _masked_compact_both(ds, mask_b, mask_d, cap: int):
+    """Compact one mask per source and stitch into combined coordinates."""
+    take_b, ok_b, tb = ops.compact_indices(mask_b, cap)
+    if mask_d is None:  # delta-free view: single-source plan
+        return take_b, ok_b, tb
+    take_d, _, td = ops.compact_indices(mask_d, cap)
+    return _stitch_compact(take_b, tb, take_d, td, ds.base.shape[0], cap)
+
+
+def _rewrite_type_bindings(sig: PatternSig, ds, dyn, cap: int):
+    """Rewrite-mode type pattern -> (ok, total, xcol of ?x bindings).
+
+    Subject-binding rows (explicit/domain) and object-binding rows (range)
+    are compacted INDEPENDENTLY per source and their bound values stitched:
+    a row entailing the target through both branches yields two bindings.
+    """
+    _, _, has_dom, has_rng = sig.extra_caps
+    ms_b, mo_b = _type_rewrite_masks_dyn(
+        ds.base, ds.base_alive, dyn["o"], dyn["tid"], dyn["dom"],
+        dyn["rng"], has_dom, has_rng)
+    ms_d = mo_d = None
+    if ds.delta is not None:
+        ms_d, mo_d = _type_rewrite_masks_dyn(
+            ds.delta, ds.delta_alive, dyn["o"], dyn["tid"], dyn["dom"],
+            dyn["rng"], has_dom, has_rng)
+    take_s, ok_s, total_s = _masked_compact_both(ds, ms_b, ms_d, cap)
+    vals_s = ops.two_source_gather(ds.base, ds.delta, take_s)[:, 0]
+    if not has_rng:  # no object branch: the subject stream is the answer
+        return ok_s, total_s, vals_s
+    take_o, _, total_o = _masked_compact_both(ds, mo_b, mo_d, cap)
+    vals_o = ops.two_source_gather(ds.base, ds.delta, take_o)[:, 2]
+    j = jnp.arange(cap, dtype=jnp.int32)
+    use_s = j < total_s
+    vo = vals_o[jnp.clip(j - total_s, 0, cap - 1)]
+    xcol = jnp.where(use_s, vals_s, vo)
+    total = total_s + total_o
+    return j < jnp.minimum(total, cap), total, xcol
+
+
+def _scan_compact(sig: PatternSig, ds, dyn, cap: int):
+    """Scan both sources of a view key -> (take, ok, total)."""
+    base_n = ds.base.shape[0]
     if sig.fused:
         pv, ov = dyn.get("p"), dyn.get("o")
         plo = pv[0] if pv is not None else jnp.int32(_I32_MIN)
@@ -289,12 +336,43 @@ def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
         olo = ov[0] if ov is not None else jnp.int32(_I32_MIN)
         ohi = ov[1] if ov is not None else jnp.int32(_I32_MAX)
         params = jnp.stack([plo, phi, olo, ohi]).astype(jnp.int32)
-        take, ok, total = ops.masked_interval_compact(
-            spo[:, 1], spo[:, 2], alive, params, cap)
-    else:
-        mask, _ = _scan_mask(sig, spo, alive, dyn)
-        take, ok, total = ops.compact_indices(mask, cap)
-    g = spo[take]
+        take_b, ok_b, tb = ops.masked_interval_compact(
+            ds.base[:, 1], ds.base[:, 2], ds.base_alive, params, cap)
+        if ds.delta is None:
+            return take_b, ok_b, tb
+        take_d, _, td = ops.masked_interval_compact(
+            ds.delta[:, 1], ds.delta[:, 2], ds.delta_alive, params, cap)
+        return _stitch_compact(take_b, tb, take_d, td, base_n, cap)
+    mask_b, _ = _scan_mask(sig, ds.base, ds.base_alive, dyn)
+    mask_d = (None if ds.delta is None
+              else _scan_mask(sig, ds.delta, ds.delta_alive, dyn)[0])
+    return _masked_compact_both(ds, mask_b, mask_d, cap)
+
+
+def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
+    """One pattern -> (Relation, match count), inside the jitted executable."""
+    if sig.strategy == "slice":
+        ds = stores[sig.store]
+        g, ok, total = _gather_ranges(ds.base, ds.base_alive, ds.delta,
+                                      ds.delta_alive, dyn["starts"],
+                                      dyn["lens"], cap)
+        s, p, o = g[:, 0], g[:, 1], g[:, 2]
+        for posi in sig.residual:
+            tsig = (sig.s_sig, sig.p_sig, sig.o_sig)[posi]
+            key = ("s", "p", "o")[posi]
+            ok = ok & _term_mask_dyn((s, p, o)[posi], tsig, dyn[key])
+        return _build_relation(sig.pvars, s, p, o, ok, total, cap), total
+
+    ds = stores["scan"]
+    if sig.extra_caps is not None:  # rewrite-mode type pattern (?x rdf:type C)
+        ok, total, xcol = _rewrite_type_bindings(sig, ds, dyn, cap)
+        var = next(v for v in sig.pvars if v is not None)
+        cols = [jnp.where(ok, xcol, INVALID)]
+        rel = Relation(vars=(var,), cols=jnp.stack(cols), valid=ok,
+                       overflow=jnp.maximum(total - cap, 0))
+        return rel, total
+    take, ok, total = _scan_compact(sig, ds, dyn, cap)
+    g = ops.two_source_gather(ds.base, ds.delta, take)
     return _build_relation(sig.pvars, g[:, 0], g[:, 1], g[:, 2], ok, total,
                            cap), total
 
@@ -305,8 +383,15 @@ def scan_relation(spo, pattern_vars, pat_terms, mode: str, cap: int, extra=None)
     Standalone oracle entry point (the engine lowers patterns once and runs
     them through cached executables instead).
     """
+    from repro.core.delta import DevStore
+
     sig, dyn = _lower_scan(pattern_vars, pat_terms, extra, mode)
-    stores = {"scan": spo, "scan_alive": jnp.ones(spo.shape[0], dtype=bool)}
+    stores = {"scan": DevStore(
+        base=spo,
+        base_alive=jnp.ones(spo.shape[0], dtype=bool),
+        delta=None,
+        delta_alive=None,
+    )}
     rel, total = _eval_pattern(sig, cap, stores, dyn)
     return rel, total
 
@@ -328,8 +413,10 @@ def _lower_scan(pvars, terms, extra, mode: str):
         dom_cap, dom_arr = _pad_set(dom)
         rng_cap, rng_arr = _pad_set(rng)
         dyn.update(tid=jnp.int32(tid), dom=dom_arr, rng=rng_arr)
-        return PatternSig(pvars=pvars, strategy="scan", o_sig=o_sig,
-                          extra_caps=(dom_cap, rng_cap)), dyn
+        return PatternSig(
+            pvars=pvars, strategy="scan", o_sig=o_sig,
+            extra_caps=(dom_cap, rng_cap, bool(len(dom)), bool(len(rng))),
+        ), dyn
     # litemat/full stores are compacted (no INVALID rows), so pure-interval
     # predicates on p/o can fuse into the compaction kernel's one pass
     fused = (
@@ -602,12 +689,27 @@ class QueryEngine:
         key = ("count", sig)
         fn = self._exec_cache.get(key)
         if fn is None:
-            def count_device(spo, alive, d, _sig=sig):
-                mask, _ = _scan_mask(_sig, spo, alive, d)
-                return mask.astype(jnp.int32).sum()
+            def count_device(ds, d, _sig=sig):
+                sources = [(ds.base, ds.base_alive)]
+                if ds.delta is not None:
+                    sources.append((ds.delta, ds.delta_alive))
+                total = jnp.int32(0)
+                for spo, alive in sources:
+                    if _sig.extra_caps is not None:
+                        # a row can bind through BOTH branches: count both
+                        ms, mo = _type_rewrite_masks_dyn(
+                            spo, alive, d["o"], d["tid"], d["dom"],
+                            d["rng"], _sig.extra_caps[2], _sig.extra_caps[3])
+                        total += ms.astype(jnp.int32).sum()
+                        if mo is not None:
+                            total += mo.astype(jnp.int32).sum()
+                    else:
+                        m, _ = _scan_mask(_sig, spo, alive, d)
+                        total += m.astype(jnp.int32).sum()
+                return total
             fn = jax.jit(count_device)
             self._exec_cache[key] = fn
-        return int(fn(self.view.scan_rows, self.view.scan_alive, dyn))
+        return int(fn(self.view.dev("scan"), dyn))
 
     def _executable(self, key, sigs, caps, join_cap: int, select):
         """Memoized jitted plan: signature + buckets -> compiled function."""
@@ -649,15 +751,18 @@ class QueryEngine:
         return order
 
     def _stores(self, sigs):
-        """Device arrays the executable closes over, keyed per signature."""
+        """DevStores the executable takes as inputs, keyed per signature.
+
+        Each key resolves through the view's device cache: the base arrays
+        are the resident index copies and only the O(delta) bucket (plus
+        any tombstone scatters) moves per mutation.
+        """
         v = self.view
         stores = {}
         if any(sig.strategy == "scan" for sig in sigs):
-            stores["scan"] = v.scan_rows
-            stores["scan_alive"] = v.scan_alive
+            stores["scan"] = v.dev("scan")
         for perm in {sig.store for sig in sigs if sig.strategy == "slice"}:
-            stores[perm] = v.perm_rows(perm)
-            stores[perm + "_alive"] = v.perm_alive(perm)
+            stores[perm] = v.dev(perm)
         return stores
 
     def _plan(self, patterns, select):

@@ -11,13 +11,18 @@ no store is re-encoded.  This module supplies the host-side pieces that
     dictionary.  Lookups are numpy binary searches; new terms are allocated
     ids past ``n_instance_terms`` and handed back as TermTable chunks so the
     device dictionary (``EncodedKB.tables``) absorbs them without a rebuild.
-  * :func:`materialize_delta` — lite + full materialization of *only* the
-    delta rows against the existing DeviceTBox, padded to power-of-two
-    buckets so repeated insert batches reuse the compiled materializers.
+  * :func:`materialize_delta_mode` — materialization of *only* the delta
+    rows against the existing DeviceTBox, one store mode at a time (the
+    unit of the KnowledgeBase's lazy per-mode derivation), padded to
+    power-of-two buckets so repeated insert batches reuse the compiled
+    materializers (:func:`materialize_delta` bundles both modes).
   * :class:`RowLocator` — exact (s, p, o) row lookup over a store (all
     duplicate copies), for tombstoning deletes.
-  * :func:`affected_instances` / :func:`mentions_mask` — the delete
-    re-derivation frontier.
+  * :func:`affected_instances` / :func:`mention_rows` — the delete
+    re-derivation frontier: affected instances resolve to base rows through
+    the SPO/OSP permutations (contiguous runs per instance), so a delete's
+    base-store work is O(k log N + hits), sublinear in the store size
+    (``mentions_mask`` remains the O(N) scan for the small delta arrays).
 
 Correctness model (why delta-only materialization is enough):
 
@@ -48,11 +53,9 @@ import numpy as np
 from repro.core import dictionary as dct
 from repro.core.abox import EncodedKB
 from repro.core.closure import _full_materialize_device
-from repro.core.index import pow2_bucket
+from repro.core.index import pad_rows as _pad_rows, pow2_bucket
 from repro.core.materialize import DeviceTBox, _lite_materialize_device
 from repro.utils import pair64
-
-INVALID = np.int32(np.iinfo(np.int32).max)
 
 
 # ---------------------------------------------------------------------------
@@ -190,31 +193,35 @@ def absorb_new_terms(kb: EncodedKB, dyn: DynamicDictionary,
 # ---------------------------------------------------------------------------
 
 
-def _pad_rows(spo: np.ndarray, cap: int) -> np.ndarray:
-    pad = cap - spo.shape[0]
-    if pad <= 0:
-        return spo
-    return np.concatenate([spo, np.full((pad, 3), INVALID, dtype=np.int32)])
+_MATERIALIZERS = {
+    "litemat": _lite_materialize_device,
+    "full": _full_materialize_device,
+}
 
 
-def materialize_delta(spo: np.ndarray, dtb: DeviceTBox):
-    """lite + full materialization of delta rows only -> (lite, full) np arrays.
+def materialize_delta_mode(spo: np.ndarray, dtb: DeviceTBox,
+                           mode: str) -> np.ndarray:
+    """Materialize delta rows for ONE store mode ('litemat' | 'full').
 
-    Rows are padded to a power-of-two bucket so the jitted device
+    The unit of lazy per-mode derivation: a deployment that only serves the
+    lite store never pays for the full closure of its inserts (and vice
+    versa).  Rows are padded to a power-of-two bucket so the jitted device
     materializers compile once per bucket, not once per batch size.
     """
     import jax.numpy as jnp
 
     spo = np.asarray(spo, dtype=np.int32).reshape(-1, 3)
     if spo.shape[0] == 0:
-        empty = np.zeros((0, 3), dtype=np.int32)
-        return empty, empty
+        return np.zeros((0, 3), dtype=np.int32)
     padded = jnp.asarray(_pad_rows(spo, pow2_bucket(spo.shape[0], floor=64)))
-    lite, lvalid, _ = _lite_materialize_device(padded, dtb)
-    full, fvalid, _ = _full_materialize_device(padded, dtb)
-    lite_np = np.asarray(lite)[np.asarray(lvalid)]
-    full_np = np.asarray(full)[np.asarray(fvalid)]
-    return lite_np, full_np
+    rows, valid, _ = _MATERIALIZERS[mode](padded, dtb)
+    return np.asarray(rows)[np.asarray(valid)]
+
+
+def materialize_delta(spo: np.ndarray, dtb: DeviceTBox):
+    """lite + full materialization of delta rows -> (lite, full) np arrays."""
+    return (materialize_delta_mode(spo, dtb, "litemat"),
+            materialize_delta_mode(spo, dtb, "full"))
 
 
 # ---------------------------------------------------------------------------
@@ -277,8 +284,40 @@ def affected_instances(deleted_rows: np.ndarray, instance_base: int) -> np.ndarr
 
 
 def mentions_mask(rows: np.ndarray, instances: np.ndarray) -> np.ndarray:
-    """bool[N]: row mentions (as s or o) any of the sorted instance ids."""
+    """bool[N]: row mentions (as s or o) any of the sorted instance ids.
+
+    O(N) scan — appropriate for the SMALL arrays of the delete path (delta
+    logs, re-derived frontiers).  Base stores go through ``mention_rows``,
+    which is sublinear in the store size.
+    """
     if rows.shape[0] == 0 or instances.shape[0] == 0:
         return np.zeros(rows.shape[0], dtype=bool)
     return (np.isin(rows[:, 0], instances, assume_unique=False)
             | np.isin(rows[:, 2], instances, assume_unique=False))
+
+
+def mention_rows(index, instances: np.ndarray) -> np.ndarray:
+    """Row indices (original coords) mentioning any instance as s or o.
+
+    The instance-keyed replacement for scanning a base store with
+    ``mentions_mask``: each instance id is a *contiguous run* of the SPO
+    permutation (as subject) and of the OSP permutation (as object), so the
+    lookup is two vectorized binary searches per permutation plus the hit
+    segments — O(k log N + hits) against an O(N) scan per delete.  The two
+    permutations are exactly the ones variable-predicate patterns already
+    materialize; first use pays their one-time lazy sort.
+    """
+    instances = np.asarray(instances).reshape(-1)
+    if instances.shape[0] == 0 or index.n == 0:
+        return np.zeros(0, dtype=np.int64)
+    hits = []
+    for name in ("spo", "osp"):
+        p = index.perm(name)
+        l = np.searchsorted(p.primary, instances, side="left")
+        r = np.searchsorted(p.primary, instances, side="right")
+        for a, b in zip(l.tolist(), r.tolist()):
+            if b > a:
+                hits.append(p.perm[a:b])
+    if not hits:
+        return np.zeros(0, dtype=np.int64)
+    return np.unique(np.concatenate(hits))

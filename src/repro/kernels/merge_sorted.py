@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: merge-path interleave of two lex-sorted runs.
+
+Compaction's primitive (core/delta.py) is "fold a small sorted delta run
+into a large sorted base run of the same permutation".  The host version
+(core/index.py::merge_sorted) assembles the merged array in numpy — an
+O(base) host materialization per store, exactly what keeps large-scale
+compaction off the accelerator.  This kernel computes the *gather map* of
+the stable merge instead: for every output slot ``i`` of the merged run it
+emits the source index (``< n`` → run A, ``>= n`` → ``n +`` run B index),
+so the merged rows themselves are produced by one device gather and never
+touch the host.
+
+Keys are lexicographic (hi, lo) int32 pairs — the same two-plane encoding
+pair_search.py uses, because TPUs have no fast int64 and every store
+permutation is already sorted by a (primary, secondary) column pair.
+
+Each output element finds its source with a *merge-path diagonal search*:
+``ia`` (the number of A elements among the first ``i`` outputs) is the
+unique point on diagonal ``i`` where ``A[ia-1] <= B[i-ia] < A[ia]`` under
+the stable ordering (ties take A first).  That is a ~log2(n) binary search
+per element — both key tables stay VMEM-resident (constant index map, like
+pair_search) and every probe is a vector gather, so a block of outputs
+resolves in ~log2(n) gather steps with no sequential two-pointer walk.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _le_pair(a_hi, a_lo, b_hi, b_lo):
+    """Lexicographic (a_hi, a_lo) <= (b_hi, b_lo)."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo <= b_lo))
+
+
+def _kernel(ahi_ref, alo_ref, bhi_ref, blo_ref, out_ref):
+    n = ahi_ref.shape[0]
+    m = bhi_ref.shape[0]
+    block = out_ref.shape[0]
+    # diagonal index of each output slot (2D iota: TPU has no 1D iota)
+    i = (pl.program_id(0) * block
+         + lax.broadcasted_iota(jnp.int32, (1, block), 1).reshape(block))
+    i = jnp.minimum(i, n + m - 1)  # grid padding: clamp, wrapper slices off
+
+    # binary search the merge path: smallest ia in [max(0, i-m), min(i, n)]
+    # such that NOT (A[ia] <= B[i-ia-1]); ties resolve A-before-B, matching
+    # the host merge (searchsorted side='right' for the B run).
+    lo0 = jnp.maximum(i - m, 0)
+    hi0 = jnp.minimum(i, n)
+    steps = max(1, int(np.ceil(np.log2(max(n, 1) + 1))) + 1)
+
+    def body(_, carry):
+        lo_b, hi_b = carry
+        cont = lo_b < hi_b
+        mid = (lo_b + hi_b) >> 1  # in [lo_b, hi_b) when cont: mid < n, i-mid >= 1
+        a_h = ahi_ref[jnp.clip(mid, 0, n - 1)]
+        a_l = alo_ref[jnp.clip(mid, 0, n - 1)]
+        jb = jnp.clip(i - mid - 1, 0, m - 1)
+        go = _le_pair(a_h, a_l, bhi_ref[jb], blo_ref[jb])  # A[mid] still <= B
+        lo_n = jnp.where(cont & go, mid + 1, lo_b)
+        hi_n = jnp.where(cont & ~go, mid, hi_b)
+        return lo_n, hi_n
+
+    ia, _ = lax.fori_loop(0, steps, body, (lo0, hi0))
+    ib = i - ia
+
+    # slot i holds A[ia] iff A still has rows and A[ia] <= B[ib] (stable)
+    iac = jnp.clip(ia, 0, n - 1)
+    ibc = jnp.clip(ib, 0, m - 1)
+    a_le_b = _le_pair(ahi_ref[iac], alo_ref[iac], bhi_ref[ibc], blo_ref[ibc])
+    take_a = (ia < n) & ((ib >= m) | a_le_b)
+    out_ref[...] = jnp.where(take_a, ia, n + ib)
+
+
+def merge_path_pallas(a_hi, a_lo, b_hi, b_lo, *, block: int = DEFAULT_BLOCK,
+                      interpret: bool = False):
+    """Lex-sorted pair runs int32[n] / int32[m] -> gather map int32[P].
+
+    ``P`` is ``n + m`` rounded up to a block multiple; callers slice to
+    ``n + m``.  ``out[i] < n`` selects ``A[out[i]]``, otherwise
+    ``B[out[i] - n]``.  Requires n >= 1 and m >= 1 (degenerate runs are
+    identity maps — the ops wrapper short-circuits them).
+    """
+    n = a_hi.shape[0]
+    m = b_hi.shape[0]
+    total = n + m
+    nb = pl.cdiv(total, block)
+    tbl_a = pl.BlockSpec((n,), lambda i: (0,))
+    tbl_b = pl.BlockSpec((m,), lambda i: (0,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[tbl_a, tbl_a, tbl_b, tbl_b],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * block,), jnp.int32),
+        interpret=interpret,
+    )(a_hi, a_lo, b_hi, b_lo)

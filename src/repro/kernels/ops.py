@@ -19,6 +19,7 @@ from repro.kernels.closure_expand import closure_expand_pallas
 from repro.kernels.ell_spmm import ell_spmm_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.interval_filter import interval_filter_pallas
+from repro.kernels.merge_sorted import merge_path_pallas
 from repro.kernels.msc_select import msc_select_pallas
 from repro.kernels.pair_search import pair_search_pallas
 from repro.kernels.stream_compact import (
@@ -102,6 +103,49 @@ def pair_search(table_hi, table_lo, qhi, qlo, block: int = 1024):
     return out[:n]
 
 
+@partial(jax.jit, static_argnames=("block",))
+def merge_gather(a_hi, a_lo, b_hi, b_lo, block: int = 1024):
+    """Stable-merge gather map of two lex-sorted (hi, lo) pair runs.
+
+    Returns int32[n + m]: values < n select run A, values >= n select
+    ``B[value - n]`` — merged rows are one device gather away, so folding
+    a sorted delta into a sorted base never assembles the merged array on
+    the host.  Ties keep A-before-B order (the ``index.merge_sorted``
+    contract; ``ref.ref_merge_sorted`` is the oracle).
+    """
+    n, m = a_hi.shape[0], b_hi.shape[0]
+    if m == 0:
+        return jnp.arange(n, dtype=jnp.int32)
+    if n == 0:
+        return jnp.arange(m, dtype=jnp.int32)
+    out = merge_path_pallas(a_hi, a_lo, b_hi, b_lo, block=block,
+                            interpret=_interpret())
+    return out[: n + m]
+
+
+def two_source_gather(base, delta, idx):
+    """Gather rows addressed in combined [base | delta] coordinates.
+
+    ``idx < base_n`` selects ``base[idx]``; the rest select
+    ``delta[idx - base_n]`` — the virtual-concat addressing every live
+    store view uses (core/delta.py keeps base and delta as SEPARATE device
+    arrays so mutations never re-concatenate the base).  ``delta=None``
+    (a delta-free view: combined coords never exceed the base) collapses
+    to a plain base gather, so static stores pay no two-source overhead.
+    """
+    bn = base.shape[0]
+    if delta is None or delta.shape[0] == 0:
+        return base[jnp.clip(idx, 0, bn - 1)]
+    if bn == 0:  # fully-compacted-away base: every coord is a delta coord
+        return delta[jnp.clip(idx, 0, delta.shape[0] - 1)]
+    b = base[jnp.clip(idx, 0, bn - 1)]
+    from_d = idx >= bn
+    d = delta[jnp.clip(idx - bn, 0, delta.shape[0] - 1)]
+    if base.ndim > 1:
+        from_d = from_d.reshape(from_d.shape + (1,) * (base.ndim - 1))
+    return jnp.where(from_d, d, b)
+
+
 def segment_positions(starts, lens, cap: int):
     """Map output slots [0, cap) onto k variable-length segments.
 
@@ -183,5 +227,5 @@ __all__ = [
     "interval_filter", "msc_select", "closure_expand",
     "embedding_bag", "embedding_bag_mean", "ell_spmm", "pair_search",
     "compact_indices", "interval_compact", "masked_interval_compact",
-    "segment_positions", "ref",
+    "merge_gather", "two_source_gather", "segment_positions", "ref",
 ]

@@ -95,3 +95,28 @@ def ref_pair_search(table_hi, table_lo, qhi, qlo):
     from repro.utils import pair64
 
     return pair64.searchsorted_pair(table_hi, table_lo, qhi, qlo, side="left")
+
+
+def ref_merge_sorted(a_hi, a_lo, b_hi, b_lo):
+    """Gather map of the stable merge of two lex-sorted (hi, lo) runs.
+
+    out[i] < n means merged slot i holds A[out[i]]; out[i] >= n means it
+    holds B[out[i] - n].  Ties place A rows before B rows (the host
+    ``index.merge_sorted`` contract: searchsorted side='right' for B) —
+    the semantics ``merge_path_pallas`` must match exactly.
+    """
+    from repro.utils import pair64
+
+    n, m = a_hi.shape[0], b_hi.shape[0]
+    if m == 0:
+        return jnp.arange(n, dtype=jnp.int32)
+    if n == 0:
+        return jnp.arange(m, dtype=jnp.int32)
+    pos_a = pair64.searchsorted_pair(b_hi, b_lo, a_hi, a_lo, side="left")
+    pos_b = pair64.searchsorted_pair(a_hi, a_lo, b_hi, b_lo, side="right")
+    out = jnp.zeros(n + m, dtype=jnp.int32)
+    out = out.at[pos_a + jnp.arange(n, dtype=jnp.int32)].set(
+        jnp.arange(n, dtype=jnp.int32))
+    out = out.at[pos_b + jnp.arange(m, dtype=jnp.int32)].set(
+        n + jnp.arange(m, dtype=jnp.int32))
+    return out

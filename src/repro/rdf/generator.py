@@ -321,13 +321,21 @@ def generate_random_abox(
     n_type_triples: int = 8_000,
     n_prop_triples: int = 30_000,
     seed: int = 0,
+    instance_offset: int = 0,
 ) -> RawDataset:
-    """Uniform random ABox over an arbitrary ontology (property tests)."""
+    """Uniform random ABox over an arbitrary ontology (property tests).
+
+    ``instance_offset`` shifts the instance fingerprint space (the random
+    analogue of ``generate_lubm``'s ``univ_offset``): a dataset generated at
+    a disjoint offset is a pure-growth delta over a base KB — every
+    instance term is new, so update benchmarks/tests can pin O(delta)
+    behavior without the delta aliasing base instances.
+    """
     rng = np.random.default_rng(seed)
     cfps = np.array([fingerprint_string(c) for c in onto.concepts], dtype=np.int64)
     pfps = np.array([fingerprint_string(p) for p in onto.properties], dtype=np.int64)
     TYPE = fingerprint_string(RDF_TYPE)
-    inst = mix64(np.int64(99), np.arange(n_instances), 0, 0)
+    inst = mix64(np.int64(99), np.arange(n_instances) + instance_offset, 0, 0)
 
     sink = _TripleSink()
     sink.add(

@@ -1,0 +1,169 @@
+"""Differential oracle: a naive set-semantics reference KnowledgeBase.
+
+The update tests' original contract compared an incrementally mutated
+KnowledgeBase against ``KnowledgeBase.build`` on the final triple set —
+strong, but blind to any bug the build pipeline *shares* with the update
+pipeline (both run the same encoders, materializers, and query engine).
+:class:`NaiveKB` is an independent implementation with none of that code in
+common: a Python set of fingerprint triples, a brute-force RDFS closure
+(dict lookups and set unions — no ids, no intervals, no device), and
+nested-loop conjunctive query evaluation.  Randomized
+insert/delete/compact/query sequences are checked against it after every
+step, in fingerprint space, which is exactly the identity the engine-side
+``answers_fp`` helper reports.
+
+Closure semantics mirror what the engine's materializers define (and the
+paper's RDFS subset): rdfs5/7 sub-property closure on non-type triples,
+rdfs2/3 through *effective* domain/range tables (a property inherits its
+ancestors' domain/range — rdfs7 composed with rdfs2/3), and rdfs9/11
+sub-class closure over every explicit or derived type.  Set-of-triples
+semantics make duplicate inserts and delete-all-copies free.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tbox import RDF_TYPE
+from repro.utils.hashing import fingerprint_string
+
+
+def _is_var(t) -> bool:
+    return isinstance(t, str) and t.startswith("?")
+
+
+def _ancestor_sets(edges, nodes):
+    """name -> reflexive-transitive superset along (sub, sup) edges."""
+    up = {}
+    for sub, sup in edges:
+        up.setdefault(sub, set()).add(sup)
+    anc = {}
+    for n in nodes:
+        seen, stack = set(), [n]
+        while stack:
+            c = stack.pop()
+            for s in up.get(c, ()):
+                if s not in seen:
+                    seen.add(s)
+                    stack.append(s)
+        anc[n] = seen | {n}
+    return anc
+
+
+class NaiveKB:
+    """Set-of-triples reference KB with brute-force RDFS entailment."""
+
+    def __init__(self, onto):
+        self.onto = onto
+        self.type_fp = int(fingerprint_string(RDF_TYPE))
+        self.cfp = {c: int(fingerprint_string(c)) for c in onto.concepts}
+        self.pfp = {p: int(fingerprint_string(p)) for p in onto.properties}
+        c_anc = _ancestor_sets(onto.subclass, onto.concepts)
+        p_anc = _ancestor_sets(onto.subprop, onto.properties)
+        self.c_anc = {self.cfp[c]: {self.cfp[a] for a in c_anc[c]}
+                      for c in onto.concepts}
+        self.p_anc = {self.pfp[p]: {self.pfp[a] for a in p_anc[p]}
+                      for p in onto.properties}
+        # effective domain/range: a property inherits every ancestor's
+        # axioms (the engine precomputes the same union into DeviceTBox)
+        self.eff_dom, self.eff_rng = {}, {}
+        for p in onto.properties:
+            dom = {c for a in p_anc[p] for c in onto.domain.get(a, ())}
+            rng = {c for a in p_anc[p] for c in onto.range_.get(a, ())}
+            self.eff_dom[self.pfp[p]] = {self.cfp[c] for c in dom}
+            self.eff_rng[self.pfp[p]] = {self.cfp[c] for c in rng}
+        self.triples: set = set()
+
+    # -- mutations (set semantics) -------------------------------------------
+    @staticmethod
+    def _rows(raw):
+        if hasattr(raw, "s"):
+            s, p, o = raw.s, raw.p, raw.o
+        else:
+            s, p, o = raw
+        return zip(np.asarray(s).tolist(), np.asarray(p).tolist(),
+                   np.asarray(o).tolist())
+
+    def insert(self, raw) -> None:
+        self.triples.update(self._rows(raw))
+
+    def delete(self, raw) -> None:
+        self.triples.difference_update(self._rows(raw))
+
+    def compact(self) -> None:
+        """Compaction must be answer-invariant: nothing to do here."""
+
+    # -- entailment ----------------------------------------------------------
+    def closure(self) -> set:
+        """Full RDFS closure of the current triple set (brute force)."""
+        out = set(self.triples)
+        candidates = set()  # (instance, concept) type candidates
+        for s, p, o in self.triples:
+            if p == self.type_fp:
+                candidates.add((s, o))
+                continue
+            for q in self.p_anc.get(p, {p}):
+                out.add((s, q, o))
+            for c in self.eff_dom.get(p, ()):
+                candidates.add((s, c))
+            for c in self.eff_rng.get(p, ()):
+                candidates.add((o, c))
+        for x, c in candidates:
+            for a in self.c_anc.get(c, {c}):
+                out.add((x, self.type_fp, a))
+        return out
+
+    # -- query evaluation ----------------------------------------------------
+    def _resolve(self, term, position: str):
+        if isinstance(term, (int, np.integer)):
+            return int(term)
+        if position == "p":
+            if term in (RDF_TYPE, "a"):
+                return self.type_fp
+            if term in self.pfp:
+                return self.pfp[term]
+        if term in self.cfp:
+            return self.cfp[term]
+        if term in self.pfp:
+            return self.pfp[term]
+        raise KeyError(f"unknown oracle term {term!r}")
+
+    def _match(self, closure, pat):
+        """One pattern -> list of {var: fp} bindings (nested-loop scan)."""
+        spec = []
+        for term, pos in ((pat.s, "s"), (pat.p, "p"), (pat.o, "o")):
+            spec.append(term if _is_var(term) else self._resolve(term, pos))
+        out = []
+        for t in closure:
+            binding = {}
+            for want, got in zip(spec, t):
+                if isinstance(want, str):  # variable
+                    if binding.get(want, got) != got:
+                        binding = None
+                        break
+                    binding[want] = got
+                elif want != got:
+                    binding = None
+                    break
+            if binding is not None:
+                out.append(binding)
+        return out
+
+    def answers(self, patterns, select) -> set:
+        """Conjunctive query -> set of ``select``-projected fp tuples."""
+        closure = self.closure()
+        acc = [{}]
+        for pat in patterns:
+            rel = self._match(closure, pat)
+            acc = [
+                {**b1, **b2}
+                for b1 in acc
+                for b2 in rel
+                if all(b1.get(k, v) == v for k, v in b2.items())
+            ]
+        return {tuple(b[v] for v in select) for b in acc}
+
+
+def query_vars(patterns):
+    """Deterministic select list: variables in first-appearance order."""
+    return tuple(dict.fromkeys(
+        t for pat in patterns for t in (pat.s, pat.p, pat.o) if _is_var(t)))

@@ -1,0 +1,247 @@
+"""Device-resident delta buckets: the O(delta) post-mutation contract.
+
+Pins the three properties the ROADMAP items demanded:
+
+  * post-mutation device refresh moves O(delta) rows — transfer counters
+    and delta-bucket shapes are IDENTICAL for the same mutation sequence on
+    a 1x and a >=4x base (nothing scales with the base),
+  * buffers are reused inside a power-of-two bucket: growing the delta
+    without crossing a bucket boundary reallocates nothing, and the base
+    arrays keep their identity across versions (no [base | delta]
+    re-concatenation anywhere),
+  * compact() assembled on device (merge-path kernel + stream compaction)
+    is bit-identical to the host searchsorted merge, across modes,
+    tombstones included.
+"""
+import numpy as np
+import pytest
+
+from repro.core.delta import compact_view
+from repro.core.engine import KnowledgeBase
+from repro.core.query import Pattern
+from repro.core.tbox import Ontology
+from repro.rdf.generator import generate_random_abox
+
+
+def _onto() -> Ontology:
+    concepts = [f"C{i}" for i in range(7)]
+    props = [f"p{i}" for i in range(4)]
+    return Ontology(
+        concepts=concepts, properties=props,
+        subclass=[(concepts[i], concepts[max(0, i - 2)]) for i in range(1, 7)],
+        subprop=[(props[1], props[0])],
+        domain={props[0]: [concepts[1]]},
+        range_={props[3]: [concepts[2]]},
+    )
+
+
+def _kb(onto, scale: int, seed: int = 0) -> KnowledgeBase:
+    raw = generate_random_abox(
+        onto, n_instances=40 * scale, n_type_triples=60 * scale,
+        n_prop_triples=50 * scale, seed=seed)
+    return KnowledgeBase.build(raw)
+
+
+def _disjoint_delta(onto, seed: int, n_inst=30, n_type=20, n_prop=15):
+    """A delta whose instance terms are DISJOINT from every base's.
+
+    ``generate_random_abox`` draws instances from one shared fingerprint
+    space, so its deltas alias base instances; the O(delta) pins need a
+    pure-growth delta whose delete re-derivation frontier cannot touch the
+    base.
+    """
+    from repro.core.tbox import RDF_TYPE
+    from repro.rdf.generator import RawDataset
+    from repro.utils.hashing import fingerprint_string, mix64
+
+    rng = np.random.default_rng(seed)
+    inst = mix64(np.int64(777), np.arange(n_inst) + 1_000_000, 0, 0)
+    cfps = np.array([fingerprint_string(c) for c in onto.concepts])
+    pfps = np.array([fingerprint_string(p) for p in onto.properties])
+    s = np.concatenate([inst[rng.integers(0, n_inst, n_type)],
+                        inst[rng.integers(0, n_inst, n_prop)]])
+    p = np.concatenate([np.full(n_type, fingerprint_string(RDF_TYPE)),
+                        pfps[rng.integers(0, len(pfps), n_prop)]])
+    o = np.concatenate([cfps[rng.integers(0, len(cfps), n_type)],
+                        inst[rng.integers(0, n_inst, n_prop)]])
+    return RawDataset(s=s, p=p, o=o, onto=onto)
+
+
+def _mutate(K, onto, seed: int, disjoint: bool = False):
+    """One fixed-size insert + one fixed-size delete (same on every base)."""
+    extra = (_disjoint_delta(onto, seed) if disjoint else
+             generate_random_abox(onto, n_instances=30, n_type_triples=20,
+                                  n_prop_triples=15, seed=seed))
+    K.insert(extra, auto_compact=False)
+    K.delete((extra.s[:5], extra.p[:5], extra.o[:5]), auto_compact=False)
+    return extra
+
+
+QUERY = [Pattern("?x", "rdf:type", "C1")]
+
+
+def test_warmup_transfer_independent_of_base_size():
+    """Same delta on a 1x and a 4x base -> identical device-transfer stats.
+
+    The update-slice extent, delta-bucket shapes, and every upload counter
+    must depend only on the delta; only the one-time base-alive upload of
+    the first delete (and kill scatters) may differ in *content*, never in
+    delta terms.
+    """
+    onto = _onto()
+    snaps = {}
+    for scale in (1, 4):
+        K = _kb(onto, scale)
+        K.answers(QUERY)  # build base state pre-mutation
+        cache = K.dev_cache("litemat")
+        before = dict(cache.stats)
+        _mutate(K, onto, seed=99, disjoint=True)
+        K.answers(QUERY)  # first post-mutation query: syncs device buffers
+        after = dict(cache.stats)
+        delta_stats = {k: after[k] - before[k] for k in after}
+        shapes = {k: cache.buffer_shapes(k)
+                  for k in ("scan", "pos") if cache.buffer_shapes(k)}
+        snaps[scale] = (delta_stats, shapes)
+
+    stats1, shapes1 = snaps[1]
+    stats4, shapes4 = snaps[4]
+    # delta-sized transfers: identical regardless of base size
+    for key in ("upload_delta_rows", "upload_alive_rows", "delta_allocs"):
+        assert stats1[key] == stats4[key], (key, stats1, stats4)
+    # the delta bucket shape (= the dynamic-update-slice extent) matches too
+    assert shapes1 == shapes4
+    # and nothing fell back to a full [base | delta] rebuild
+    assert stats1["stale_view_builds"] == stats4["stale_view_builds"] == 0
+
+
+def test_bucket_growth_reuses_buffers():
+    """Delta growth inside a pow2 bucket reallocates nothing; the base
+    arrays keep their identity across every version."""
+    onto = _onto()
+    K = _kb(onto, 1)
+    K.answers(QUERY)
+    cache = K.dev_cache("litemat")
+    base0 = K.view("litemat").dev("pos").base
+
+    def tiny(seed, n):
+        return generate_random_abox(onto, n_instances=5, n_type_triples=n,
+                                    n_prop_triples=0, seed=seed)
+
+    K.insert(tiny(1, 3), auto_compact=False)
+    K.answers(QUERY)
+    allocs0 = cache.stats["delta_allocs"]
+    shape0, cap0 = cache.buffer_shapes("pos")
+
+    # grow WITHIN the bucket: no new allocation, same shapes
+    K.insert(tiny(2, 2), auto_compact=False)
+    K.answers(QUERY)
+    assert cache.stats["delta_allocs"] == allocs0
+    assert cache.buffer_shapes("pos") == (shape0, cap0)
+
+    # cross the pow2 boundary: exactly the delta bucket reallocates
+    lite_delta = K.delta.log("litemat").n
+    grow = generate_random_abox(onto, n_instances=40,
+                                n_type_triples=4 * cap0,
+                                n_prop_triples=0, seed=3)
+    K.insert(grow, auto_compact=False)
+    K.answers(QUERY)
+    assert K.delta.log("litemat").n > cap0 >= lite_delta
+    assert cache.stats["delta_allocs"] > allocs0
+    (shape1, cap1) = cache.buffer_shapes("pos")
+    assert cap1 > cap0 and shape1[0] == cap1
+
+    # the base device array was NEVER copied or re-concatenated
+    assert K.view("litemat").dev("pos").base is base0
+
+
+def test_delete_applies_kill_scatters_not_mask_uploads():
+    """Deletes after the first reach the device as point scatters."""
+    onto = _onto()
+    K = _kb(onto, 2)
+    raw_extra = _mutate(K, onto, seed=7)  # creates tombstone state + buffers
+    K.answers(QUERY)
+    cache = K.dev_cache("litemat")
+    before = dict(cache.stats)
+    K.delete((raw_extra.s[5:9], raw_extra.p[5:9], raw_extra.o[5:9]),
+             auto_compact=False)
+    K.answers(QUERY)
+    after = dict(cache.stats)
+    assert after["kill_scatter_rows"] > before["kill_scatter_rows"]
+    # no O(base) mask re-upload once the state exists
+    assert after["upload_base_alive_rows"] == before["upload_base_alive_rows"]
+
+
+@pytest.mark.parametrize("mode", ["rewrite", "litemat", "full"])
+def test_compact_device_bit_identical_to_host(mode):
+    """PINNED: device-side compaction == host merge, byte for byte."""
+    onto = _onto()
+    K = _kb(onto, 2)
+    _mutate(K, onto, seed=21)
+    _mutate(K, onto, seed=22)
+    v = K.view(mode)
+    host_rows, host_idx = compact_view(v, device=False)
+    dev_rows, dev_idx = compact_view(v, device=True)
+    np.testing.assert_array_equal(np.asarray(host_rows), np.asarray(dev_rows))
+    np.testing.assert_array_equal(host_idx._h, dev_idx._h)
+
+
+def test_compact_device_end_to_end_preserves_answers():
+    """KnowledgeBase.compact(device=True) leaves every mode's answers as-is."""
+    onto = _onto()
+    K = _kb(onto, 1)
+    _mutate(K, onto, seed=31)
+    before = {m: K.answers(QUERY, mode=m)
+              for m in ("litemat", "full", "rewrite")}
+    st = K.compact(device=True)
+    assert st["compacted"]
+    after = {m: K.answers(QUERY, mode=m)
+             for m in ("litemat", "full", "rewrite")}
+    assert before == after
+    # post-compaction, executables run against the NEW device base arrays
+    assert K.view("litemat").dev("pos").base.shape[0] == st["litemat"]
+
+
+def test_stale_view_snapshot_stays_consistent():
+    """A view held across later mutations serves its own snapshot."""
+    onto = _onto()
+    K = _kb(onto, 1)
+    K.insert(generate_random_abox(onto, n_instances=10, n_type_triples=8,
+                                  n_prop_triples=4, seed=41),
+             auto_compact=False)
+    old = K.view("litemat")
+    n_old = old.n_live
+    old_rows = old.dev("scan")  # sync the cache at this version
+    K.insert(generate_random_abox(onto, n_instances=10, n_type_triples=8,
+                                  n_prop_triples=4, seed=42),
+             auto_compact=False)
+    K.view("litemat").dev("scan")  # cache moves to the new version
+    again = old.dev("scan")  # stale view: one-off build, same content
+    assert old.n_live == n_old
+    np.testing.assert_array_equal(np.asarray(old_rows.delta)[:old.delta_n],
+                                  np.asarray(again.delta)[:old.delta_n])
+    assert K.dev_cache("litemat").stats["stale_view_builds"] >= 1
+
+
+def test_pre_compaction_view_never_rewinds_cache():
+    """A snapshot from BEFORE a compaction must not thrash the cache.
+
+    Alternating queries between a held pre-compaction view and the live KB
+    must serve the old view as one-off builds — rewinding the resident
+    state to the dead base would degrade every live query to an O(base)
+    rebuild.
+    """
+    onto = _onto()
+    K = _kb(onto, 1)
+    K.insert(_disjoint_delta(onto, seed=51), auto_compact=False)
+    old = K.view("litemat")
+    old.dev("pos")
+    K.compact()
+    K.answers(QUERY)  # resident state now belongs to the NEW base
+    cache = K.dev_cache("litemat")
+    rebuilds = cache.stats["base_rebuilds"]
+    live = K.view("litemat").dev("pos").base
+    for _ in range(3):  # alternate: held snapshot vs live store
+        old.dev("pos")
+        assert K.view("litemat").dev("pos").base is live
+    assert cache.stats["base_rebuilds"] == rebuilds  # never rewound
+    assert cache.stats["stale_view_builds"] >= 3

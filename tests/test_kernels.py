@@ -128,6 +128,98 @@ def test_masked_interval_compact_fused(n, density, rng):
     np.testing.assert_array_equal(np.asarray(take)[np.asarray(ok)], want[:256])
 
 
+def _sorted_pair_run(rng, n, key_space):
+    """Random (hi, lo)-lex-sorted int32 run; small key_space → dense dups."""
+    hi = rng.integers(0, key_space, n).astype(np.int32)
+    lo = rng.integers(0, key_space, n).astype(np.int32)
+    k = np.lexsort((lo, hi))
+    return hi[k], lo[k]
+
+
+@pytest.mark.parametrize("n,m", [(1, 1), (7, 100), (513, 513), (2048, 31),
+                                 (1, 2000), (1000, 1000)])
+@pytest.mark.parametrize("key_space", [3, 1 << 20])  # dup density sweep
+def test_merge_gather_sweep(n, m, key_space, rng):
+    """Merge-path kernel == ref oracle across sizes × duplicate densities."""
+    ah, al = _sorted_pair_run(rng, n, key_space)
+    bh, bl = _sorted_pair_run(rng, m, key_space)
+    args = tuple(map(jnp.asarray, (ah, al, bh, bl)))
+    got = np.asarray(ops.merge_gather(*args))
+    want = np.asarray(ref.ref_merge_sorted(*args))
+    np.testing.assert_array_equal(got, want)
+    # the map is a permutation and the gathered keys are sorted + stable
+    assert len(np.unique(got)) == n + m
+    mh = np.where(got < n, ah[np.clip(got, 0, n - 1)],
+                  bh[np.clip(got - n, 0, m - 1)])
+    ml = np.where(got < n, al[np.clip(got, 0, n - 1)],
+                  bl[np.clip(got - n, 0, m - 1)])
+    key = mh.astype(np.int64) << 32 | ml.astype(np.int64)
+    assert (np.diff(key) >= 0).all()
+
+
+@pytest.mark.parametrize("n,m", [(64, 16), (517, 100), (1500, 1500)])
+@pytest.mark.parametrize("tombstone_ratio", [0.0, 0.3, 1.0])
+def test_merge_gather_masked_compaction(n, m, tombstone_ratio, rng):
+    """Merge-everything-then-compact == host merge of pre-filtered runs.
+
+    The device compaction path (core/delta.py) merges runs WITH their dead
+    rows and drops them through the stream-compaction kernel afterwards;
+    a stable merge followed by a stable filter must equal the merge of the
+    filtered runs — the contract this pins across tombstone ratios.
+    """
+    from repro.core.index import merge_sorted
+
+    def rows_run(k):
+        hi, lo = _sorted_pair_run(rng, k, 50)
+        rows = np.stack([rng.integers(0, 1 << 20, k).astype(np.int32),
+                         hi, lo], axis=1)
+        alive = rng.random(k) >= tombstone_ratio
+        key = hi.astype(np.int64) << 32 | lo.astype(np.int64)
+        return rows, alive, key
+
+    a_rows, a_alive, a_key = rows_run(n)
+    b_rows, b_alive, b_key = rows_run(m)
+    gidx = np.asarray(ops.merge_gather(
+        *map(jnp.asarray, (a_rows[:, 1], a_rows[:, 2],
+                           b_rows[:, 1], b_rows[:, 2]))))
+    alive = np.asarray(ops.two_source_gather(
+        jnp.asarray(a_alive), jnp.asarray(b_alive), jnp.asarray(gidx)))
+    n_live = int(a_alive.sum() + b_alive.sum())
+    take, ok, total = ops.compact_indices(jnp.asarray(alive), max(n_live, 8))
+    src = np.asarray(take)[:n_live]
+    got = np.asarray(ops.two_source_gather(
+        jnp.asarray(a_rows), jnp.asarray(b_rows), jnp.asarray(gidx[src])))
+    assert int(total) == n_live
+    want, _ = merge_sorted(a_rows[a_alive], a_key[a_alive],
+                           b_rows[b_alive], b_key[b_alive])
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+def test_two_source_gather_degenerate_sources(rng):
+    """Empty base (fully-compacted-away store) and absent delta both work."""
+    rows = jnp.asarray(rng.integers(0, 100, (16, 3)).astype(np.int32))
+    idx = jnp.asarray(np.arange(16, dtype=np.int32))
+    empty = jnp.zeros((0, 3), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.two_source_gather(empty, rows, idx)), np.asarray(rows))
+    np.testing.assert_array_equal(
+        np.asarray(ops.two_source_gather(rows, None, idx)), np.asarray(rows))
+    np.testing.assert_array_equal(
+        np.asarray(ops.two_source_gather(rows, empty, idx)), np.asarray(rows))
+
+
+@given(st.integers(1, 300), st.integers(1, 300), st.integers(0, 2**31 - 2))
+@settings(max_examples=25, deadline=None)
+def test_merge_gather_property(n, m, seed):
+    rng = np.random.default_rng(seed)
+    ah, al = _sorted_pair_run(rng, n, int(rng.integers(2, 1 << 16)))
+    bh, bl = _sorted_pair_run(rng, m, int(rng.integers(2, 1 << 16)))
+    args = tuple(map(jnp.asarray, (ah, al, bh, bl)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.merge_gather(*args)),
+        np.asarray(ref.ref_merge_sorted(*args)))
+
+
 @given(st.integers(1, 200), st.integers(1, 300), st.integers(0, 2**31 - 2))
 @settings(max_examples=25, deadline=None)
 def test_pair_search_property(T, n, seed):

@@ -1,17 +1,26 @@
-"""Incremental updates: insert/delete/compact must equal full rebuilds.
+"""Incremental updates: insert/delete/compact must equal full rebuilds
+AND an independent naive oracle.
 
-The contract under test (the update subsystem's acceptance bar): any
-sequence of ``insert`` / ``delete`` / ``compact`` operations yields query
-answers identical — in fingerprint space, since instance ids are assigned
-in dictionary order and therefore differ between an incrementally grown KB
-and a rebuild — to ``KnowledgeBase.build`` on the final triple set, across
-all three execution modes and both execution strategies.
+Two contracts under test:
+
+  * rebuild equivalence — any sequence of ``insert`` / ``delete`` /
+    ``compact`` operations yields query answers identical, in fingerprint
+    space (instance ids are rank-assigned, so only fingerprints survive a
+    re-encode), to ``KnowledgeBase.build`` on the final triple set, across
+    all three execution modes and both execution strategies;
+  * differential oracle — after EVERY step, answers match
+    :class:`tests.oracle.NaiveKB`, a set-semantics brute-force RDFS
+    reference sharing no code with the engine.  The rebuild comparison
+    cannot see a bug both pipelines share (same encoders, materializers,
+    query engine); the oracle can.
 """
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
+
+from oracle import NaiveKB, query_vars
 
 from repro.core.engine import KnowledgeBase, PAPER_QUERIES
 from repro.core.query import Pattern
@@ -22,14 +31,15 @@ from repro.utils import pair64
 MODES = ("litemat", "full", "rewrite")
 
 
-def answers_fp(K: KnowledgeBase, patterns, mode="litemat", use_index=True):
+def answers_fp(K: KnowledgeBase, patterns, mode="litemat", use_index=True,
+               select=None):
     """Query answers with ids mapped back to term fingerprints.
 
     TBox ids (hit=False only for padding; concepts/properties resolve too)
     are stable across rebuilds, but instance ids are rank-assigned — the
     fingerprint is the identity that survives a re-encode.
     """
-    rows, _ = K.query(patterns, mode=mode, use_index=use_index)
+    rows, _ = K.query(patterns, mode=mode, use_index=use_index, select=select)
     if rows.size == 0:
         return set()
     ids = jnp.asarray(rows.reshape(-1).astype(np.int32))
@@ -74,14 +84,27 @@ def _queries(onto):
     ]
 
 
+def _check_against_oracle(K, naive, queries, seed, step, modes=MODES):
+    """Engine answers (fp space) == NaiveKB answers, every query and mode."""
+    for q in queries:
+        sel = query_vars(q)
+        want = naive.answers(q, sel)
+        for mode in modes:
+            got = answers_fp(K, q, mode=mode, select=sel)
+            assert got == want, (seed, step, mode, q, len(got ^ want))
+
+
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
 def test_randomized_update_sequence_equals_rebuild(seed):
-    """Random insert/delete/compact sequences == rebuild on the final set."""
+    """Random insert/delete/compact sequences == rebuild on the final set,
+    and == the naive differential oracle after EVERY step."""
     rng = np.random.default_rng(seed)
     onto = _dag_onto(seed)
     raw = generate_random_abox(onto, n_instances=40, n_type_triples=60,
                                n_prop_triples=50, seed=seed)
     K = KnowledgeBase.build(raw)
+    naive = NaiveKB(onto)
+    naive.insert(raw)
     cur_s, cur_p, cur_o = raw.s.copy(), raw.p.copy(), raw.o.copy()
 
     for step in range(4):
@@ -93,6 +116,7 @@ def test_randomized_update_sequence_equals_rebuild(seed):
                 n_prop_triples=int(rng.integers(5, 40)),
                 seed=1000 * seed + step)
             K.insert(extra, auto_compact=False)
+            naive.insert(extra)
             cur_s = np.concatenate([cur_s, extra.s])
             cur_p = np.concatenate([cur_p, extra.p])
             cur_o = np.concatenate([cur_o, extra.o])
@@ -100,18 +124,24 @@ def test_randomized_update_sequence_equals_rebuild(seed):
             n = cur_s.shape[0]
             idx = rng.choice(n, size=max(n // 10, 1), replace=False)
             K.delete((cur_s[idx], cur_p[idx], cur_o[idx]), auto_compact=False)
+            naive.delete((cur_s[idx], cur_p[idx], cur_o[idx]))
             deleted = set(zip(cur_s[idx].tolist(), cur_p[idx].tolist(),
                               cur_o[idx].tolist()))
             cur_s, cur_p, cur_o = _remove_triples(cur_s, cur_p, cur_o, deleted)
         else:
             K.compact()
+            naive.compact()
+        # the differential check runs after EVERY step — rebuild-only
+        # comparison happens once at the end and shares the engine code
+        _check_against_oracle(K, naive, _queries(onto)[:2], seed, step)
 
-    oracle = KnowledgeBase.build(
+    _check_against_oracle(K, naive, _queries(onto), seed, "final")
+    rebuilt = KnowledgeBase.build(
         RawDataset(s=cur_s, p=cur_p, o=cur_o, onto=onto))
     for q in _queries(onto):
         for mode in MODES:
             got = answers_fp(K, q, mode=mode)
-            want = answers_fp(oracle, q, mode=mode)
+            want = answers_fp(rebuilt, q, mode=mode)
             assert got == want, (seed, mode, q, len(got ^ want))
     # the scan path over the live store must agree with the sliced path
     q = _queries(onto)[0]
@@ -272,12 +302,14 @@ def test_serving_resyncs_on_update():
 @given(st.integers(0, 10_000), st.integers(2, 5), st.booleans())
 @settings(max_examples=8, deadline=None)
 def test_update_sequence_property(seed, n_steps, compact_mid):
-    """Hypothesis-randomized sequences: answers == rebuild, every mode."""
+    """Hypothesis-randomized sequences vs the naive differential oracle."""
     rng = np.random.default_rng(seed)
     onto = _dag_onto(seed % 97)
     raw = generate_random_abox(onto, n_instances=25, n_type_triples=35,
                                n_prop_triples=25, seed=seed % 89)
     K = KnowledgeBase.build(raw)
+    naive = NaiveKB(onto)
+    naive.insert(raw)
     cur_s, cur_p, cur_o = raw.s.copy(), raw.p.copy(), raw.o.copy()
     for step in range(n_steps):
         if rng.random() < 0.6:
@@ -287,6 +319,7 @@ def test_update_sequence_property(seed, n_steps, compact_mid):
                 n_prop_triples=int(rng.integers(3, 20)),
                 seed=int(rng.integers(0, 1 << 30)))
             K.insert(extra, auto_compact=False)
+            naive.insert(extra)
             cur_s = np.concatenate([cur_s, extra.s])
             cur_p = np.concatenate([cur_p, extra.p])
             cur_o = np.concatenate([cur_o, extra.o])
@@ -294,14 +327,52 @@ def test_update_sequence_property(seed, n_steps, compact_mid):
             n = cur_s.shape[0]
             idx = rng.choice(n, size=max(n // 8, 1), replace=False)
             K.delete((cur_s[idx], cur_p[idx], cur_o[idx]), auto_compact=False)
+            naive.delete((cur_s[idx], cur_p[idx], cur_o[idx]))
             deleted = set(zip(cur_s[idx].tolist(), cur_p[idx].tolist(),
                               cur_o[idx].tolist()))
             cur_s, cur_p, cur_o = _remove_triples(cur_s, cur_p, cur_o, deleted)
         if compact_mid and step == n_steps // 2:
             K.compact()
-    oracle = KnowledgeBase.build(
-        RawDataset(s=cur_s, p=cur_p, o=cur_o, onto=onto))
-    for q in _queries(onto)[:2]:
-        for mode in MODES:
-            assert answers_fp(K, q, mode=mode) == answers_fp(
-                oracle, q, mode=mode), (seed, mode, q)
+            naive.compact()
+    _check_against_oracle(K, naive, _queries(onto)[:2], seed, "property")
+
+
+def test_lazy_materialization_per_mode():
+    """Single-mode service skips the other mode's delta derivation.
+
+    Inserts queue raw rows only; serving 'litemat' derives lite rows and
+    must NOT run the full closure (and vice versa) — the regression pin for
+    lazy per-mode delta materialization.
+    """
+    onto = _dag_onto(11)
+    raw = generate_random_abox(onto, n_instances=30, n_type_triples=40,
+                               n_prop_triples=30, seed=11)
+    K = KnowledgeBase.build(raw)
+    naive = NaiveKB(onto)
+    naive.insert(raw)
+    extra = generate_random_abox(onto, n_instances=40, n_type_triples=25,
+                                 n_prop_triples=20, seed=12)
+    K.insert(extra, auto_compact=False)
+    naive.insert(extra)
+    assert K.mat_counts == {"litemat": 0, "full": 0}
+
+    _check_against_oracle(K, naive, _queries(onto)[:2], 11, "lite-only",
+                          modes=("litemat",))
+    assert K.mat_counts["litemat"] == 1
+    assert K.mat_counts["full"] == 0  # full closure never ran
+
+    # a second single-mode insert + query still leaves 'full' underived
+    K.insert(generate_random_abox(onto, n_instances=10, n_type_triples=8,
+                                  n_prop_triples=6, seed=13),
+             auto_compact=False)
+    answers_fp(K, _queries(onto)[0], mode="litemat")
+    assert K.mat_counts["full"] == 0
+
+    # first 'full' service derives the whole backlog, answers correct
+    got = answers_fp(K, _queries(onto)[0], mode="full",
+                     select=query_vars(_queries(onto)[0]))
+    assert K.mat_counts["full"] > 0
+    naive.insert(generate_random_abox(onto, n_instances=10, n_type_triples=8,
+                                      n_prop_triples=6, seed=13))
+    assert got == naive.answers(_queries(onto)[0],
+                                query_vars(_queries(onto)[0]))
