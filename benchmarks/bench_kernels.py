@@ -4,10 +4,83 @@ NOTE: on this CPU host the Pallas kernels run in INTERPRET mode, so their
 wall-times measure the validation path, not TPU performance — the numbers
 that matter are the ref-path times (XLA CPU) and, on real hardware, the
 Mosaic-compiled kernels.  Reported for completeness + regression tracking.
+
+The SIZE SWEEP section (1e5 -> 4e6 rows, REPRO_BENCH_SWEEP_MAX tunable)
+captures the scaling curve the chunked-cumsum compaction and the
+diagonal-partitioned merge unlock: stream compaction + compaction-merge
+rows at multi-million-row stores — sizes the old (block, block) one-hot
+scatter and both-tables-VMEM-resident merge could not express on real
+hardware (64 MB cube / >16 MB key residency).  ``kernels/sweep/scale_ok``
+gates on the sweep actually reaching >= 2e6 rows.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
+
+SWEEP_SIZES = (100_000, 400_000, 1_000_000, 2_000_000, 4_000_000)
+
+
+def _sweep(emit, timeit):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    max_n = int(float(os.environ.get("REPRO_BENCH_SWEEP_MAX", "4e6")))
+    sizes = [n for n in SWEEP_SIZES if n <= max_n]
+    rng = np.random.default_rng(7)
+    ran = 0
+    for n in sizes:
+        mask = jnp.asarray(rng.random(n) < 0.1)
+        p = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+        o = jnp.asarray(rng.integers(0, 1 << 20, n), jnp.int32)
+        alive = jnp.asarray(rng.random(n) < 0.97)
+        params = jnp.asarray([100, 300, 0, 1 << 19], jnp.int32)
+        cap = 1 << 15
+        blk = ops.auto_block(n)
+        t, _ = timeit(lambda: ops.compact_indices(mask, cap, block=blk),
+                      repeats=2)
+        emit(f"kernels/sweep/stream_compact_n{n}", t, n=n, block=blk,
+             rows_per_s=int(n / max(t, 1e-9)))
+        t, _ = timeit(lambda: ops.masked_interval_compact(
+            p, o, alive, params, cap, block=blk), repeats=2)
+        emit(f"kernels/sweep/masked_interval_compact_n{n}", t, n=n, block=blk,
+             rows_per_s=int(n / max(t, 1e-9)))
+
+        # compaction-merge: fold a 10% delta into a 90% base (tombstones
+        # dropped through the compaction kernel) — core/delta.py's device
+        # compaction at scale
+        nb, nd = (n * 9) // 10, n // 10
+        def run(k):
+            hi = rng.integers(0, 1 << 20, k).astype(np.int32)
+            lo = rng.integers(0, 1 << 20, k).astype(np.int32)
+            srt = np.lexsort((lo, hi))
+            return jnp.asarray(hi[srt]), jnp.asarray(lo[srt])
+        bh_, bl_ = run(nb)
+        dh_, dl_ = run(nd)
+        keep = jnp.asarray(rng.random(n) < 0.97)
+
+        def merge_compact():
+            gidx = ops.merge_gather(bh_, bl_, dh_, dl_)
+            al = keep[gidx]
+            return ops.compact_indices(al, cap, block=blk)
+
+        t, _ = timeit(merge_compact, repeats=2)
+        emit(f"kernels/sweep/merge_compact_n{n}", t, n=n,
+             rows_per_s=int(n / max(t, 1e-9)))
+        ran = n
+
+    # block-size effect at a fixed size: the old 512 ceiling vs 4096 tiles
+    n = min(400_000, max_n)
+    mask = jnp.asarray(rng.random(n) < 0.1)
+    for blk in (512, ops.LARGE_BLOCK):
+        t, _ = timeit(lambda: ops.compact_indices(mask, 1 << 15, block=blk),
+                      repeats=2)
+        emit(f"kernels/sweep/stream_compact_block{blk}", t, n=n, block=blk)
+
+    emit("kernels/sweep/scale_ok", 0.0, max_rows=ran,
+         passed=bool(ran >= 2_000_000))
 
 
 def main():
@@ -57,6 +130,8 @@ def main():
     reff = jax.jit(lambda: ref.ref_embedding_bag(table, idx))
     t, _ = timeit(reff, repeats=3)
     emit("kernels/embedding_bag_ref", t, bags=B)
+
+    _sweep(emit, timeit)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,24 @@
 #!/usr/bin/env python
-"""Diff fresh BENCH_*.json artifacts against the previous commit's.
+"""Diff fresh BENCH_*.json artifacts against the previous run's.
 
 CI's bench job regenerates BENCH_queries.json / BENCH_updates.json in the
-working tree; this script compares every time-like row against the version
-committed at a baseline git ref (the previous run's artifact) and FAILS the
-job when a metric regressed by more than ``--tolerance`` (default 20%).
+working tree; this script compares every time-like row against a baseline
+artifact and FAILS the job when a metric regressed by more than
+``--tolerance`` (default 20%).
+
+Baseline resolution order (same-hardware beats same-repo):
+
+  1. ``--baseline-dir DIR`` — a directory holding the PREVIOUS CI run's
+     uploaded bench artifact (the CI workflow downloads it with ``gh run
+     download`` before this script runs).  Those timings came from the
+     same runner class as the fresh ones, so the 20% gate is meaningful
+     all the way down to the noise floor — unlike the committed artifact,
+     which may have been regenerated on a dev machine with very different
+     single-core performance.  Searched recursively (``gh run download``
+     nests files under per-artifact directories).
+  2. ``--baseline-ref REF`` (default HEAD~1) — the artifact committed at a
+     git ref.  Cross-hardware fallback for local use and for the first CI
+     run after this scheme lands (no uploaded artifact exists yet).
 
 Guards against CPU-runner noise:
 
@@ -15,7 +29,8 @@ Guards against CPU-runner noise:
     instead: a True -> False flip is always a failure.
 
 Usage:
-    python scripts/bench_diff.py [--baseline-ref HEAD~1] [--tolerance 0.2]
+    python scripts/bench_diff.py [--baseline-dir prev-bench]
+                                 [--baseline-ref HEAD~1] [--tolerance 0.2]
                                  [--min-us 50000] [files...]
 
 Exit codes: 0 ok / baseline missing (first run), 1 regression found.
@@ -24,6 +39,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import subprocess
 import sys
 
@@ -36,6 +52,22 @@ def _load_current(path: str) -> dict | None:
             return json.load(f)
     except (OSError, json.JSONDecodeError):
         return None
+
+
+def _load_baseline_dir(base_dir: str, path: str) -> tuple[dict, str] | None:
+    """Find ``basename(path)`` anywhere under ``base_dir`` and load it."""
+    if not base_dir or not os.path.isdir(base_dir):
+        return None
+    want = os.path.basename(path)
+    for root, _dirs, files in sorted(os.walk(base_dir)):
+        if want in files:
+            full = os.path.join(root, want)
+            try:
+                with open(full) as f:
+                    return json.load(f), full
+            except (OSError, json.JSONDecodeError):
+                return None
+    return None
 
 
 def _load_baseline(ref: str, path: str) -> dict | None:
@@ -86,8 +118,13 @@ def diff_artifact(cur: dict, base: dict, tolerance: float, min_us: float):
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("files", nargs="*", default=list(DEFAULT_FILES))
+    ap.add_argument("--baseline-dir", default=None,
+                    help="directory holding the previous CI run's uploaded "
+                         "bench artifact (same runner class; preferred "
+                         "over --baseline-ref when the file is found)")
     ap.add_argument("--baseline-ref", default="HEAD~1",
-                    help="git ref holding the previous artifact")
+                    help="git ref holding the previous artifact "
+                         "(cross-hardware fallback)")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="relative slowdown that fails the job (0.2 = +20%%)")
     ap.add_argument("--min-us", type=float, default=50_000,
@@ -103,7 +140,16 @@ def main(argv=None) -> int:
         if cur is None:
             print(f"# {path}: no current artifact (bench not run?) — skipped")
             continue
-        base = _load_baseline(args.baseline_ref, path)
+        base = None
+        provenance = args.baseline_ref
+        hit = _load_baseline_dir(args.baseline_dir, path)
+        if hit is not None:
+            base, provenance = hit[0], f"{hit[1]} (previous CI run)"
+        if base is None:
+            if args.baseline_dir:
+                print(f"# {path}: not in --baseline-dir "
+                      f"{args.baseline_dir} — falling back to git ref")
+            base = _load_baseline(args.baseline_ref, path)
         if base is None:
             print(f"# {path}: no baseline at {args.baseline_ref} — skipped "
                   "(first run or shallow clone)")
@@ -116,7 +162,7 @@ def main(argv=None) -> int:
             continue
         reg, imp, notes = diff_artifact(cur, base, args.tolerance,
                                         args.min_us)
-        print(f"# {path} vs {args.baseline_ref} "
+        print(f"# {path} vs {provenance} "
               f"(tolerance +{args.tolerance:.0%}, floor {args.min_us / 1e3:.0f}ms)")
         for line in notes:
             print(line)

@@ -213,6 +213,27 @@ class _DevState:
     cap: int
     delta_len: int
     tombstone_mut: int
+    owns_alive: bool = False  # True once base_alive is a private buffer
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _kill_scatter(alive, idx):
+    """Tombstone point scatter with the alive buffer DONATED.
+
+    Donation lets XLA flip the bits IN PLACE instead of realizing the
+    ``.at[].set`` as an O(base) copy-then-scatter — a delete batch then
+    costs O(#killed) device work AND zero base-sized allocations.  ``idx``
+    is padded to a power-of-two bucket with out-of-range indices (dropped
+    by the scatter) so kill batches of any size share a few executables.
+    """
+    return alive.at[idx].set(False, mode="drop")
+
+
+def _pad_kill_idx(idx: np.ndarray, n: int) -> jnp.ndarray:
+    """Kill indices -> pow2-padded int32 device array (pad rows dropped)."""
+    cap = _pow2(idx.shape[0])
+    pad = np.full(cap - idx.shape[0], n, dtype=np.int64)
+    return jnp.asarray(np.concatenate([idx, pad]).astype(np.int32))
 
 
 class DeviceStoreCache:
@@ -236,6 +257,9 @@ class DeviceStoreCache:
             "upload_alive_rows": 0,  # delta liveness bits shipped
             "upload_base_alive_rows": 0,  # full base masks shipped (fresh only)
             "kill_scatter_rows": 0,  # base tombstones applied as scatters
+            "alive_privatize_rows": 0,  # one-time shared-mask copies (first
+            # delete against a key whose resident mask is the SHARED
+            # all-alive buffer; donation needs a private one)
             "stale_view_builds": 0,  # one-off builds for out-of-date views
         }
 
@@ -281,6 +305,7 @@ class DeviceStoreCache:
             n_kills=len(view.kills), delta=delta, delta_alive=dalive,
             cap=cap if delta is not None else 0, delta_len=view.delta_n,
             tombstone_mut=view.delta_mut,
+            owns_alive=view.base_alive_h is not None,
         )
 
     def sync(self, view: "StoreView", key: str) -> DevStore:
@@ -341,7 +366,17 @@ class DeviceStoreCache:
                 idx = np.concatenate(view.kills[st.n_kills:])
                 if key != "scan":
                     idx = view.base_index.inv_perm(key)[idx]
-                st.base_alive = st.base_alive.at[jnp.asarray(idx)].set(False)
+                if not st.owns_alive:
+                    # resident mask is the SHARED all-alive buffer: copy it
+                    # once (first delete against this key+base) so every
+                    # later kill batch can donate it back in place
+                    st.base_alive = jnp.array(st.base_alive)
+                    st.owns_alive = True
+                    self.stats["alive_privatize_rows"] += int(
+                        st.base_alive.shape[0])
+                st.base_alive = _kill_scatter(
+                    st.base_alive,
+                    _pad_kill_idx(idx, int(st.base_alive.shape[0])))
                 self.stats["kill_scatter_rows"] += int(idx.shape[0])
                 st.n_kills = len(view.kills)
 
@@ -553,6 +588,24 @@ class StoreView:
         return self._combine(
             self.base_index.o_range(olo, ohi),
             self.delta_index.o_range(olo, ohi) if self.has_delta else None)
+
+    def distinct_p_ids(self, plo: int, phi: int, limit: int = 8):
+        """Distinct predicate ids in [plo, phi) across base AND delta.
+
+        None when either side is too mixed (past ``limit``) — the
+        index-nested-loop planner then leaves the pattern on its
+        slice/scan strategy.
+        """
+        base = self.base_index.distinct_p_ids(plo, phi, limit)
+        if base is None:
+            return None
+        if not self.has_delta:
+            return base
+        extra = self.delta_index.distinct_p_ids(plo, phi, limit)
+        if extra is None:
+            return None
+        out = sorted(set(base) | set(extra))
+        return out if len(out) <= limit else None
 
     def single_p_run(self, plo: int, phi: int):
         """Unique predicate id inside [plo, phi) across base AND delta."""

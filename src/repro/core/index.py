@@ -99,6 +99,17 @@ class _Perm:
 _ORDERS = {"pos": (1, 2, 0), "pso": (1, 0, 2), "spo": (0, 1, 2), "osp": (2, 0, 1)}
 
 
+def key_cols(name: str):
+    """(primary, secondary) column indices of permutation ``name``.
+
+    The device-side key planes of a sorted store are just these two columns
+    of its permuted rows — the index-nested-loop join (core/query.py) probes
+    them with the pair-search kernel, so no separate key upload ever exists.
+    """
+    a, b, _ = _ORDERS[name]
+    return a, b
+
+
 @dataclass
 class StoreIndex:
     """Sorted permutations of one triple store + host search keys.
@@ -216,6 +227,26 @@ class StoreIndex:
         if pos_p[r0] == pos_p[r1 - 1]:
             return int(pos_p[r0])
         return None
+
+    def distinct_p_ids(self, plo: int, phi: int, limit: int = 8):
+        """Distinct predicate ids the store holds in [plo, phi), or None.
+
+        Walks the sorted POS primary column run-by-run (one binary search
+        per distinct id, O(k log N)); gives up past ``limit`` ids — the
+        index-nested-loop join probes each id's composite range, so the
+        planner only wants this when the id set is small (a LiteMat
+        property interval typically covers a handful of sub-properties).
+        """
+        col = self.perm("pos").primary
+        r0, r1 = self.p_range(plo, phi)
+        out = []
+        while r0 < r1:
+            pid = int(col[r0])
+            out.append(pid)
+            if len(out) > limit:
+                return None
+            r0 = int(np.searchsorted(col, pid, side="right"))
+        return out
 
     def po_range(self, p_id: int, olo: int, ohi: int):
         """Row range of (p == p_id, o in [olo, ohi)) in POS order."""

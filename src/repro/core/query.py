@@ -64,7 +64,7 @@ import jax.numpy as jnp
 
 from repro.core.abox import EncodedKB
 from repro.core.delta import StoreView
-from repro.core.index import StoreIndex, pow2_bucket as _pow2
+from repro.core.index import StoreIndex, key_cols, pow2_bucket as _pow2
 from repro.core.materialize import DeviceTBox
 from repro.kernels import ops
 
@@ -117,17 +117,19 @@ class TermSig:
 @dataclass(frozen=True)
 class PatternSig:
     pvars: tuple  # per-position var name or None
-    strategy: str  # 'slice' | 'scan'
+    strategy: str  # 'slice' | 'scan' | 'inl'
     s_sig: TermSig | None = None
     p_sig: TermSig | None = None
     o_sig: TermSig | None = None
-    store: str = "pos"  # slice: which sorted permutation
+    store: str = "pos"  # slice/inl: which sorted permutation
     k: int = 1  # slice: number of contiguous ranges
-    residual: tuple = ()  # slice: positions re-checked after the gather
+    residual: tuple = ()  # slice/inl: positions re-checked after the gather
     # rewrite type pattern: (dom_cap, rng_cap, has_dom, has_rng) — the flags
     # are static so empty domain/range branches compile to nothing
     extra_caps: tuple | None = None
     fused: bool = False  # scan: predicate fused into the compaction kernel
+    probe_pos: int = -1  # inl: pattern position the bound var probes (0|2)
+    n_pids: int = 0  # inl: how many distinct store pids are probed
 
 
 def _clip32(v) -> int:
@@ -266,7 +268,7 @@ def _gather_ranges(base, base_alive, delta, delta_alive, starts, lens,
     keep their slot (totals stay exact range lengths for overflow
     accounting) but are invalidated before the relation is built.
     """
-    src, ok, total = ops.segment_positions(starts, lens, cap)
+    src, ok, total, _ = ops.segment_positions(starts, lens, cap)
     rows = ops.two_source_gather(base, delta, src)
     alive = ops.two_source_gather(base_alive, delta_alive, src)
     return rows, ok & alive, total
@@ -289,11 +291,32 @@ def _stitch_compact(take_b, total_b, take_d, total_d, base_n: int, cap: int):
 
 def _masked_compact_both(ds, mask_b, mask_d, cap: int):
     """Compact one mask per source and stitch into combined coordinates."""
-    take_b, ok_b, tb = ops.compact_indices(mask_b, cap)
+    take_b, ok_b, tb = ops.compact_indices(
+        mask_b, cap, block=ops.auto_block(mask_b.shape[0]))
     if mask_d is None:  # delta-free view: single-source plan
         return take_b, ok_b, tb
-    take_d, _, td = ops.compact_indices(mask_d, cap)
+    take_d, _, td = ops.compact_indices(
+        mask_d, cap, block=ops.auto_block(mask_d.shape[0]))
     return _stitch_compact(take_b, tb, take_d, td, ds.base.shape[0], cap)
+
+
+def _dual_masked_compact_both(ds, ms_b, mo_b, ms_d, mo_d, cap: int):
+    """Compact BOTH rewrite branches of each source in one dual-mask pass.
+
+    The subject-binding and object-binding masks cover the same rows, so
+    the dual-mask kernel emits both compacted streams per tile — one grid
+    pass over each source instead of two.  Returns the two stitched
+    (take, ok, total) triples in combined [base | delta] coordinates.
+    """
+    take_s_b, ok_s_b, ts_b, take_o_b, ok_o_b, to_b = ops.dual_compact_indices(
+        ms_b, mo_b, cap, block=ops.auto_block(ms_b.shape[0]))
+    if ms_d is None:  # delta-free view
+        return (take_s_b, ok_s_b, ts_b), (take_o_b, ok_o_b, to_b)
+    take_s_d, _, ts_d, take_o_d, _, to_d = ops.dual_compact_indices(
+        ms_d, mo_d, cap, block=ops.auto_block(ms_d.shape[0]))
+    base_n = ds.base.shape[0]
+    return (_stitch_compact(take_s_b, ts_b, take_s_d, ts_d, base_n, cap),
+            _stitch_compact(take_o_b, to_b, take_o_d, to_d, base_n, cap))
 
 
 def _rewrite_type_bindings(sig: PatternSig, ds, dyn, cap: int):
@@ -302,6 +325,8 @@ def _rewrite_type_bindings(sig: PatternSig, ds, dyn, cap: int):
     Subject-binding rows (explicit/domain) and object-binding rows (range)
     are compacted INDEPENDENTLY per source and their bound values stitched:
     a row entailing the target through both branches yields two bindings.
+    When both branches exist, the dual-mask kernel resolves them in a
+    single pass per source (the dual-branch cost fix).
     """
     _, _, has_dom, has_rng = sig.extra_caps
     ms_b, mo_b = _type_rewrite_masks_dyn(
@@ -312,11 +337,14 @@ def _rewrite_type_bindings(sig: PatternSig, ds, dyn, cap: int):
         ms_d, mo_d = _type_rewrite_masks_dyn(
             ds.delta, ds.delta_alive, dyn["o"], dyn["tid"], dyn["dom"],
             dyn["rng"], has_dom, has_rng)
-    take_s, ok_s, total_s = _masked_compact_both(ds, ms_b, ms_d, cap)
-    vals_s = ops.two_source_gather(ds.base, ds.delta, take_s)[:, 0]
     if not has_rng:  # no object branch: the subject stream is the answer
+        take_s, ok_s, total_s = _masked_compact_both(ds, ms_b, ms_d, cap)
+        vals_s = ops.two_source_gather(ds.base, ds.delta, take_s)[:, 0]
         return ok_s, total_s, vals_s
-    take_o, _, total_o = _masked_compact_both(ds, mo_b, mo_d, cap)
+    ((take_s, ok_s, total_s),
+     (take_o, _, total_o)) = _dual_masked_compact_both(
+        ds, ms_b, mo_b, ms_d, mo_d, cap)
+    vals_s = ops.two_source_gather(ds.base, ds.delta, take_s)[:, 0]
     vals_o = ops.two_source_gather(ds.base, ds.delta, take_o)[:, 2]
     j = jnp.arange(cap, dtype=jnp.int32)
     use_s = j < total_s
@@ -337,11 +365,13 @@ def _scan_compact(sig: PatternSig, ds, dyn, cap: int):
         ohi = ov[1] if ov is not None else jnp.int32(_I32_MAX)
         params = jnp.stack([plo, phi, olo, ohi]).astype(jnp.int32)
         take_b, ok_b, tb = ops.masked_interval_compact(
-            ds.base[:, 1], ds.base[:, 2], ds.base_alive, params, cap)
+            ds.base[:, 1], ds.base[:, 2], ds.base_alive, params, cap,
+            block=ops.auto_block(base_n))
         if ds.delta is None:
             return take_b, ok_b, tb
         take_d, _, td = ops.masked_interval_compact(
-            ds.delta[:, 1], ds.delta[:, 2], ds.delta_alive, params, cap)
+            ds.delta[:, 1], ds.delta[:, 2], ds.delta_alive, params, cap,
+            block=ops.auto_block(ds.delta.shape[0]))
         return _stitch_compact(take_b, tb, take_d, td, base_n, cap)
     mask_b, _ = _scan_mask(sig, ds.base, ds.base_alive, dyn)
     mask_d = (None if ds.delta is None
@@ -375,6 +405,93 @@ def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
     g = ops.two_source_gather(ds.base, ds.delta, take)
     return _build_relation(sig.pvars, g[:, 0], g[:, 1], g[:, 2], ok, total,
                            cap), total
+
+
+def _inl_ranges(ds, prim: int, sec: int, qhi, qlo, valid):
+    """Probe one source's key planes -> (starts, lens), all pids batched.
+
+    The sorted permutation's key planes are simply two columns of its
+    device-resident rows (core/index.py::key_cols), so the rows matching
+    (pid, key) form a composite-key range — start at (pid, key), end at
+    (pid, key + 1).  ``qhi``/``qlo``/``valid`` carry ALL pid groups
+    concatenated (k probes per pid), so one source costs exactly two
+    pair-search launches regardless of how many pids are probed.
+    Invalid probe rows get zero-length ranges.
+    """
+    t_hi, t_lo = ds[:, prim], ds[:, sec]
+    starts = ops.pair_search(t_hi, t_lo, qhi, qlo)
+    ends = ops.pair_search(t_hi, t_lo, qhi, qlo + 1)
+    lens = jnp.where(valid, jnp.maximum(ends - starts, 0), 0)
+    return starts, lens
+
+
+def _eval_inl(sig: PatternSig, cap: int, stores, dyn, rel: Relation):
+    """Index-nested-loop join: probe a sorted store with the current relation.
+
+    The Q4-style fallback: when the accumulated relation is tiny next to a
+    pattern's row count, evaluating the pattern in full (a huge slice or
+    scan) just to sort-merge-join it away is wasted work.  Instead, each
+    bound value of the shared variable probes the pattern's composite-key
+    permutation (PSO for a subject probe, POS for an object probe) with the
+    pair-search kernel; the hit ranges expand through one segment mapping,
+    and every output row carries its probe row's bindings plus the
+    pattern's newly bound columns.  Both view sources are probed (delta
+    ranges offset by the base row count) and tombstones filter through the
+    gathered liveness bits — semantics identical to eval-then-join.
+    """
+    ds = stores[sig.store]
+    prim, sec = key_cols(sig.store)
+    var = sig.pvars[sig.probe_pos]
+    probe = rel.col(var)
+    k = probe.shape[0]
+    pid_arr = dyn["pid"]  # int32[n_pids] — distinct store ids in the interval
+    qlo1 = jnp.where(rel.valid, probe, 0)  # avoid key+1 overflow on INVALID
+    base_n = ds.base.shape[0]
+    # one probe batch per pid, concatenated: [pid0 x k, pid1 x k, ...] —
+    # a source then costs two pair-search launches total (not per pid)
+    valid = jnp.tile(rel.valid, sig.n_pids)
+    qlo = jnp.tile(qlo1, sig.n_pids)
+    qhi = jnp.where(valid, jnp.repeat(pid_arr, k), INVALID)
+    seg_starts, seg_lens = [], []
+    for src_rows, offset in (((ds.base, 0),) if ds.delta is None
+                             else ((ds.base, 0), (ds.delta, base_n))):
+        st, ln = _inl_ranges(src_rows, prim, sec, qhi, qlo, valid)
+        seg_starts.append(st + offset)
+        seg_lens.append(ln)
+    starts = jnp.concatenate(seg_starts)
+    lens = jnp.concatenate(seg_lens)
+    src, ok, total, seg = ops.segment_positions(starts, lens, cap)
+    rows = ops.two_source_gather(ds.base, ds.delta, src)
+    alive = ops.two_source_gather(ds.base_alive, ds.delta_alive, src)
+    ok = ok & alive
+    probe_row = jnp.mod(seg, k)  # every segment group is one probe batch
+
+    s, p, o = rows[:, 0], rows[:, 1], rows[:, 2]
+    for posi in sig.residual:  # constant terms re-checked on the hit rows
+        tsig = (sig.s_sig, sig.p_sig, sig.o_sig)[posi]
+        key = ("s", "p", "o")[posi]
+        ok = ok & _term_mask_dyn((s, p, o)[posi], tsig, dyn[key])
+
+    carried = rel.cols[:, probe_row]  # probe bindings ride along
+    out_vars = list(rel.vars)
+    out_cols = [carried[i] for i in range(len(rel.vars))]
+    seen = dict(zip(rel.vars, out_cols))
+    for v, colv in zip(sig.pvars, (s, p, o)):
+        if v is None:
+            continue
+        if v in seen:  # shared var: probe key (equal by construction) or
+            ok = ok & (seen[v] == colv)  # a repeated var inside the pattern
+            continue
+        seen[v] = colv
+        out_vars.append(v)
+        out_cols.append(colv)
+    out_cols = [jnp.where(ok, c, INVALID) for c in out_cols]
+    return Relation(
+        vars=tuple(out_vars),
+        cols=jnp.stack(out_cols),
+        valid=ok,
+        overflow=rel.overflow + jnp.maximum(total - cap, 0),
+    )
 
 
 def scan_relation(spo, pattern_vars, pat_terms, mode: str, cap: int, extra=None):
@@ -505,6 +622,14 @@ class QueryEngine:
     dtb: DeviceTBox | None = None
     slack: float = 1.5
     use_index: bool = True  # resolve eligible patterns via sorted indexes
+    use_inl: bool = True  # index-nested-loop joins when one side is tiny
+    inl_factor: int = 8  # pattern must outweigh the probe side by this much
+    inl_max_probe: int = 4096  # never INL above this probe-side estimate
+    # pair_search keeps its table planes VMEM-resident (constant index
+    # maps), so INL is capped at stores that fit comfortably: past this the
+    # planner keeps the merge join (whose partitioned kernels have no
+    # ceiling).  A window-partitioned pair search would lift this (ROADMAP).
+    inl_max_table: int = 1 << 20
     view: StoreView | None = None  # live base+delta view (None: static store)
     _exec_cache: dict = field(default_factory=dict, repr=False)
     cache_stats: dict = field(default_factory=lambda: {"hits": 0, "misses": 0},
@@ -720,6 +845,9 @@ class QueryEngine:
             def run_device(stores, dyns):
                 rel = None
                 for sig, cap, dyn in zip(sigs, caps, dyns):
+                    if sig.strategy == "inl":  # consumes the running relation
+                        rel = _eval_inl(sig, cap, stores, dyn, rel)
+                        continue
                     r, _ = _eval_pattern(sig, cap, stores, dyn)
                     rel = r if rel is None else join(rel, r, join_cap)
                 out = distinct(rel, select, join_cap)
@@ -761,9 +889,86 @@ class QueryEngine:
         stores = {}
         if any(sig.strategy == "scan" for sig in sigs):
             stores["scan"] = v.dev("scan")
-        for perm in {sig.store for sig in sigs if sig.strategy == "slice"}:
+        for perm in {sig.store for sig in sigs
+                     if sig.strategy in ("slice", "inl")}:
             stores[perm] = v.dev(perm)
         return stores
+
+    def _inl_pids(self, p_t: Term, limit: int = 4):
+        """Distinct store predicate ids of a constant p term, or None.
+
+        A LiteMat property interval usually covers a handful of store ids
+        (the property and its sub-properties); each becomes one composite-
+        key probe group.  None (too many / spilled) leaves the pattern on
+        its slice or scan strategy.
+        """
+        if p_t.spills:
+            return None
+        if p_t.hi == p_t.lo + 1:
+            return [p_t.lo]
+        return self.view.distinct_p_ids(p_t.lo, p_t.hi, limit)
+
+    def _apply_inl(self, prepared, lowered, counts, order):
+        """Convert eligible joins to index-nested-loop probes (in place).
+
+        Walking the join order with a running probe-side estimate (the
+        smallest relation seen so far — the greedy order starts tiny), a
+        later pattern whose row count dwarfs that estimate is re-lowered
+        from evaluate-then-merge-join to an INL probe of its composite-key
+        permutation (PSO when the shared variable is the subject, POS when
+        it is the object) — the Q4 shape: a huge (?x worksFor ?y) pattern
+        probed by a handful of Chairs instead of materialized and sorted.
+        Its planning count drops to the probe-side estimate times a fanout
+        allowance, shrinking every downstream capacity (overflow retries
+        still protect underestimates).
+        """
+        indexable = (self.use_inl and self.use_index
+                     and self.mode in ("litemat", "full")
+                     and self.view.n <= self.inl_max_table)
+        if not indexable or len(order) < 2:
+            return
+        bound = {v for v in prepared[order[0]][0] if v}
+        est = counts[order[0]]
+        for i in order[1:]:
+            pvars, terms, extra = prepared[i]
+            pat_vars = {v for v in pvars if v}
+            convertible = (
+                extra is None
+                and counts[i] >= self.inl_factor * max(est, 1)
+                and est <= self.inl_max_probe
+                and terms[1] is not None
+                and all(t is None or t.members is None for t in terms)
+            )
+            if convertible:
+                pids = self._inl_pids(terms[1])
+                probe_pos = store = None
+                if pids:
+                    if pvars[0] is not None and pvars[0] in bound:
+                        probe_pos, store = 0, "pso"
+                        res_t, res_pos = terms[2], 2
+                    elif pvars[2] is not None and pvars[2] in bound:
+                        probe_pos, store = 2, "pos"
+                        res_t, res_pos = terms[0], 0
+                if probe_pos is not None:
+                    dyn = {"pid": jnp.asarray(
+                        np.asarray([_clip32(p) for p in pids], np.int32))}
+                    residual = ()
+                    r_sig = None
+                    if res_t is not None:
+                        r_sig, r_dyn = _lower_term(res_t)
+                        residual = (res_pos,)
+                        dyn[("s", "p", "o")[res_pos]] = r_dyn
+                    sig = PatternSig(
+                        pvars=pvars, strategy="inl", store=store,
+                        probe_pos=probe_pos, residual=residual,
+                        n_pids=len(pids),
+                        s_sig=r_sig if res_pos == 0 else None,
+                        o_sig=r_sig if res_pos == 2 else None,
+                    )
+                    counts[i] = min(counts[i], max(est, 1) * 32)
+                    lowered[i] = (sig, dyn, counts[i])
+            bound |= pat_vars
+            est = min(est, counts[i])
 
     def _plan(self, patterns, select):
         """Host planning: -> (sigs, dyns, ordered caps, join_cap, sel, stores)."""
@@ -774,6 +979,7 @@ class QueryEngine:
             for sig, dyn, c in lowered
         ]
         order = self._plan_order(prepared, counts)
+        self._apply_inl(prepared, lowered, counts, order)
         caps = [self._bucket(int(counts[i] * self.slack) + 16) for i in order]
         join_cap = self._bucket(int(max(counts) * self.slack) + 16)
 

@@ -1,10 +1,10 @@
-"""Pallas TPU kernel: merge-path interleave of two lex-sorted runs.
+"""Pallas TPU kernels: merge-path interleave of two lex-sorted runs.
 
 Compaction's primitive (core/delta.py) is "fold a small sorted delta run
 into a large sorted base run of the same permutation".  The host version
 (core/index.py::merge_sorted) assembles the merged array in numpy — an
 O(base) host materialization per store, exactly what keeps large-scale
-compaction off the accelerator.  This kernel computes the *gather map* of
+compaction off the accelerator.  These kernels compute the *gather map* of
 the stable merge instead: for every output slot ``i`` of the merged run it
 emits the source index (``< n`` → run A, ``>= n`` → ``n +`` run B index),
 so the merged rows themselves are produced by one device gather and never
@@ -17,12 +17,24 @@ permutation is already sorted by a (primary, secondary) column pair.
 Each output element finds its source with a *merge-path diagonal search*:
 ``ia`` (the number of A elements among the first ``i`` outputs) is the
 unique point on diagonal ``i`` where ``A[ia-1] <= B[i-ia] < A[ia]`` under
-the stable ordering (ties take A first).  That is a ~log2(n) binary search
-per element — both key tables stay VMEM-resident (constant index map, like
-pair_search) and every probe is a vector gather, so a block of outputs
-resolves in ~log2(n) gather steps with no sequential two-pointer walk.
+the stable ordering (ties take A first).  Two variants share that math:
+
+  * ``merge_path_pallas`` — both key tables VMEM-resident (constant index
+    maps, like pair_search); every probe is a vector gather, so a block of
+    outputs resolves in ~log2(n) gather steps.  Simple, but 8*(n+m) bytes
+    of VMEM caps it near ~1M combined rows.
+  * ``merge_path_partitioned_pallas`` — the A/B fetches are PARTITIONED
+    along merge-path diagonals: the wrapper binary-searches the path once
+    per tile boundary (``_diag_splits``, plain XLA over the full arrays in
+    HBM), and each grid step DMAs only its own ≤block-long A-run and B-run
+    windows from ``ANY`` memory into VMEM scratch before a purely local
+    merge-path search.  VMEM is O(block) regardless of n and m, lifting
+    the ceiling from "both tables resident" to multi-million-row bases;
+    the in-kernel search also shortens from log2(n) to log2(block) steps.
 """
 from __future__ import annotations
+
+from functools import partial
 
 import numpy as np
 
@@ -30,6 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK = 1024
 
@@ -85,7 +98,9 @@ def merge_path_pallas(a_hi, a_lo, b_hi, b_lo, *, block: int = DEFAULT_BLOCK,
     ``P`` is ``n + m`` rounded up to a block multiple; callers slice to
     ``n + m``.  ``out[i] < n`` selects ``A[out[i]]``, otherwise
     ``B[out[i] - n]``.  Requires n >= 1 and m >= 1 (degenerate runs are
-    identity maps — the ops wrapper short-circuits them).
+    identity maps — the ops wrapper short-circuits them).  Both key tables
+    stay fully VMEM-resident; use the partitioned variant for runs past
+    the VMEM ceiling.
     """
     n = a_hi.shape[0]
     m = b_hi.shape[0]
@@ -101,3 +116,150 @@ def merge_path_pallas(a_hi, a_lo, b_hi, b_lo, *, block: int = DEFAULT_BLOCK,
         out_shape=jax.ShapeDtypeStruct((nb * block,), jnp.int32),
         interpret=interpret,
     )(a_hi, a_lo, b_hi, b_lo)
+
+
+# ---------------------------------------------------------------------------
+# Diagonal-partitioned variant: per-tile A/B windows, O(block) VMEM
+# ---------------------------------------------------------------------------
+
+
+def _diag_splits(a_hi, a_lo, b_hi, b_lo, block: int):
+    """A-side merge-path split at every tile-boundary diagonal.
+
+    Returns int32[nb + 1]: ``splits[t]`` is the number of A elements among
+    the first ``min(t*block, n+m)`` outputs of the stable merge — the same
+    "smallest ia with NOT (A[ia] <= B[d-ia-1])" search the kernels run per
+    element, vectorized over the nb+1 boundaries with plain XLA gathers
+    (the full tables never enter VMEM; this is O(nb log n) scalar work).
+    """
+    n, m = a_hi.shape[0], b_hi.shape[0]
+    nb = pl.cdiv(n + m, block)
+    d = jnp.minimum(jnp.arange(nb + 1, dtype=jnp.int32) * block, n + m)
+    lo0 = jnp.maximum(d - m, 0)
+    hi0 = jnp.minimum(d, n)
+    steps = max(1, int(np.ceil(np.log2(max(n, 1) + 1))) + 1)
+
+    def body(_, carry):
+        lo_b, hi_b = carry
+        cont = lo_b < hi_b
+        mid = (lo_b + hi_b) >> 1
+        a_h = a_hi[jnp.clip(mid, 0, n - 1)]
+        a_l = a_lo[jnp.clip(mid, 0, n - 1)]
+        jb = jnp.clip(d - mid - 1, 0, m - 1)
+        go = _le_pair(a_h, a_l, b_hi[jb], b_lo[jb])
+        lo_n = jnp.where(cont & go, mid + 1, lo_b)
+        hi_n = jnp.where(cont & ~go, mid, hi_b)
+        return lo_n, hi_n
+
+    ia, _ = lax.fori_loop(0, steps, body, (lo0, hi0))
+    return ia.astype(jnp.int32)
+
+
+def _part_kernel(splits_ref, ahi_ref, alo_ref, bhi_ref, blo_ref, out_ref,
+                 wa_hi, wa_lo, wb_hi, wb_lo, sems, *, n, m, block):
+    """One output tile: DMA its own A/B run windows, merge them locally.
+
+    The tile's outputs are global diagonals [t*block, min((t+1)*block, n+m));
+    the merge-path splits bound its A-run to [a0, a1) and its B-run to
+    [d0 - a0, d1 - a1), each at most ``block`` long, so a ``block``-sized
+    window per key plane (start clamped so the window stays inside the
+    table — requires n, m >= block, the wrapper's dispatch condition)
+    always covers the run.  All four DMAs overlap, then a purely local
+    merge-path binary search (log2(block) steps over VMEM scratch) places
+    every output slot.
+    """
+    t = pl.program_id(0)
+    a0 = splits_ref[t]
+    a1 = splits_ref[t + 1]
+    d0 = t * block
+    d1 = jnp.minimum(d0 + block, n + m)
+    b0 = d0 - a0
+    len_a = a1 - a0
+    len_b = (d1 - d0) - len_a
+
+    sa = jnp.clip(a0, 0, n - block)
+    sb = jnp.clip(b0, 0, m - block)
+    copies = [
+        pltpu.make_async_copy(ahi_ref.at[pl.ds(sa, block)], wa_hi, sems.at[0]),
+        pltpu.make_async_copy(alo_ref.at[pl.ds(sa, block)], wa_lo, sems.at[1]),
+        pltpu.make_async_copy(bhi_ref.at[pl.ds(sb, block)], wb_hi, sems.at[2]),
+        pltpu.make_async_copy(blo_ref.at[pl.ds(sb, block)], wb_lo, sems.at[3]),
+    ]
+    for c in copies:
+        c.start()
+    for c in copies:
+        c.wait()
+
+    offa = a0 - sa  # local offset of the run inside its window
+    offb = b0 - sb
+    j = lax.broadcasted_iota(jnp.int32, (1, block), 1).reshape(block)
+    j = jnp.minimum(j, jnp.maximum(d1 - d0 - 1, 0))  # partial-tile clamp
+
+    lo0 = jnp.maximum(j - len_b, 0)
+    hi0 = jnp.minimum(j, len_a)
+    steps = max(1, int(np.ceil(np.log2(block + 1))) + 1)
+
+    def wa(i):  # window gathers, indices pre-clipped to the window
+        ic = jnp.clip(offa + i, 0, block - 1)
+        return wa_hi[ic], wa_lo[ic]
+
+    def wb(i):
+        ic = jnp.clip(offb + i, 0, block - 1)
+        return wb_hi[ic], wb_lo[ic]
+
+    def body(_, carry):
+        lo_b, hi_b = carry
+        cont = lo_b < hi_b
+        mid = (lo_b + hi_b) >> 1
+        a_h, a_l = wa(jnp.clip(mid, 0, jnp.maximum(len_a - 1, 0)))
+        b_h, b_l = wb(jnp.clip(j - mid - 1, 0, jnp.maximum(len_b - 1, 0)))
+        go = _le_pair(a_h, a_l, b_h, b_l)
+        lo_n = jnp.where(cont & go, mid + 1, lo_b)
+        hi_n = jnp.where(cont & ~go, mid, hi_b)
+        return lo_n, hi_n
+
+    ia, _ = lax.fori_loop(0, steps, body, (lo0, hi0))
+    ib = j - ia
+    a_h, a_l = wa(jnp.clip(ia, 0, jnp.maximum(len_a - 1, 0)))
+    b_h, b_l = wb(jnp.clip(ib, 0, jnp.maximum(len_b - 1, 0)))
+    a_le_b = _le_pair(a_h, a_l, b_h, b_l)
+    take_a = (ia < len_a) & ((ib >= len_b) | a_le_b)
+    out_ref[...] = jnp.where(take_a, a0 + ia, n + b0 + ib)
+
+
+def merge_path_partitioned_pallas(a_hi, a_lo, b_hi, b_lo, *,
+                                  block: int = DEFAULT_BLOCK,
+                                  interpret: bool = False):
+    """Diagonal-partitioned merge gather map — O(block) VMEM per grid step.
+
+    Same contract as ``merge_path_pallas`` (int32[P] gather map, P = n+m
+    rounded up to a block multiple).  Requires n >= block and m >= block so
+    the clamped per-tile windows always fit inside the tables; the ops
+    wrapper falls back to the resident kernel for smaller runs (where the
+    VMEM ceiling is not a concern anyway).
+    """
+    n = a_hi.shape[0]
+    m = b_hi.shape[0]
+    if n < block or m < block:
+        raise ValueError(
+            f"partitioned merge needs both runs >= block ({block}); "
+            f"got n={n}, m={m} — use merge_path_pallas")
+    total = n + m
+    nb = pl.cdiv(total, block)
+    splits = _diag_splits(a_hi, a_lo, b_hi, b_lo, block)
+    tbl = pl.BlockSpec(memory_space=pltpu.ANY)
+    return pl.pallas_call(
+        partial(_part_kernel, n=n, m=m, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tbl, tbl, tbl, tbl],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * block,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((block,), jnp.int32),
+            pltpu.VMEM((block,), jnp.int32),
+            pltpu.VMEM((block,), jnp.int32),
+            pltpu.VMEM((block,), jnp.int32),
+            pltpu.SemaphoreType.DMA((4,)),
+        ],
+        interpret=interpret,
+    )(splits, a_hi, a_lo, b_hi, b_lo)

@@ -19,19 +19,51 @@ from repro.kernels.closure_expand import closure_expand_pallas
 from repro.kernels.ell_spmm import ell_spmm_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.interval_filter import interval_filter_pallas
-from repro.kernels.merge_sorted import merge_path_pallas
+from repro.kernels.merge_sorted import (
+    merge_path_pallas, merge_path_partitioned_pallas,
+)
 from repro.kernels.msc_select import msc_select_pallas
 from repro.kernels.pair_search import pair_search_pallas
 from repro.kernels.stream_compact import (
-    interval_compact_pallas, masked_interval_compact_pallas,
-    stream_compact_pallas,
+    dual_compact_pallas, interval_compact_pallas,
+    masked_interval_compact_pallas, stream_compact_pallas,
 )
 
 INVALID = np.int32(np.iinfo(np.int32).max)
 
+# Trace-time kernel-pass accounting.  Each counter bumps while a wrapper's
+# body is being TRACED (once per compiled executable, not per execution), so
+# "how many kernel passes does this plan make over the store" is a
+# deterministic, timing-free signal: reset, trace a cold plan, read.  The
+# rewrite-mode dual-branch pin (one dual-mask pass instead of two
+# single-mask passes) and the bench pass-count rows gate on these.
+pass_counters = {"compact": 0, "dual_compact": 0,
+                 "merge_resident": 0, "merge_partitioned": 0}
+
+
+def reset_pass_counters() -> dict:
+    """Zero the trace-time pass counters; returns the pre-reset snapshot."""
+    snap = dict(pass_counters)
+    for k in pass_counters:
+        pass_counters[k] = 0
+    return snap
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# Block-size selection for the compaction kernels.  The chunked-cumsum
+# body's VMEM is O(chunk^2) regardless of block, so large stores take
+# 4096-row tiles (8x fewer grid steps + stitch segments than the old
+# 512 ceiling); small stores keep small tiles so padding stays bounded.
+LARGE_BLOCK = 4096
+_LARGE_N = 1 << 16
+
+
+def auto_block(n: int) -> int:
+    """Compaction tile size for an n-row store (static at trace time)."""
+    return LARGE_BLOCK if n >= _LARGE_N else 512
 
 
 def _pad1(x, m, fill):
@@ -112,14 +144,26 @@ def merge_gather(a_hi, a_lo, b_hi, b_lo, block: int = 1024):
     a sorted delta into a sorted base never assembles the merged array on
     the host.  Ties keep A-before-B order (the ``index.merge_sorted``
     contract; ``ref.ref_merge_sorted`` is the oracle).
+
+    Dispatch: when BOTH runs reach ``block`` rows the diagonal-partitioned
+    kernel runs (per-tile DMA windows, O(block) VMEM — no ceiling on n+m);
+    smaller runs take the resident kernel, whose whole-table VMEM footprint
+    is then trivially affordable.
     """
     n, m = a_hi.shape[0], b_hi.shape[0]
     if m == 0:
         return jnp.arange(n, dtype=jnp.int32)
     if n == 0:
         return jnp.arange(m, dtype=jnp.int32)
-    out = merge_path_pallas(a_hi, a_lo, b_hi, b_lo, block=block,
-                            interpret=_interpret())
+    if n >= block and m >= block:
+        pass_counters["merge_partitioned"] += 1
+        out = merge_path_partitioned_pallas(a_hi, a_lo, b_hi, b_lo,
+                                            block=block,
+                                            interpret=_interpret())
+    else:
+        pass_counters["merge_resident"] += 1
+        out = merge_path_pallas(a_hi, a_lo, b_hi, b_lo, block=block,
+                                interpret=_interpret())
     return out[: n + m]
 
 
@@ -151,9 +195,11 @@ def segment_positions(starts, lens, cap: int):
 
     One exclusive prefix sum over ``lens`` assigns every output slot j a
     (segment, rank-in-segment); returns (src = starts[seg] + rank,
-    ok = j < total, total).  Shared by the kernel-tile stitch below and the
-    sorted-index range gather in core/query.py — the searchsorted(side=
-    "right") addressing lives in exactly one place.
+    ok = j < total, total, seg).  Shared by the kernel-tile stitch below,
+    the sorted-index range gather, and the index-nested-loop join (which
+    needs ``seg`` to map each output row back to its probe row) in
+    core/query.py — the searchsorted(side="right") addressing lives in
+    exactly one place.
     """
     offsets = jnp.cumsum(lens)
     total = offsets[-1]
@@ -162,7 +208,7 @@ def segment_positions(starts, lens, cap: int):
     seg = jnp.clip(jnp.searchsorted(offsets, j, side="right"),
                    0, lens.shape[0] - 1)
     src = starts[seg] + (j - begin[seg])
-    return src, j < total, total
+    return src, j < total, total, seg
 
 
 def _assemble_compact(local, counts, cap: int, block: int):
@@ -173,7 +219,7 @@ def _assemble_compact(local, counts, cap: int, block: int):
     for overflow accounting instead of a second full counting pass.
     """
     tile_starts = jnp.arange(counts.shape[0], dtype=jnp.int32) * block
-    src, ok, total = segment_positions(tile_starts, counts, cap)
+    src, ok, total, _ = segment_positions(tile_starts, counts, cap)
     take = jnp.where(ok, local[jnp.clip(src, 0, local.shape[0] - 1)], 0)
     return take, ok, total
 
@@ -186,9 +232,29 @@ def compact_indices(mask, cap: int, block: int = 512):
     0-filled past the end; ok bool[cap]; total int32 match count).  Replaces
     the ``jnp.argsort(~mask, stable=True)[:cap]`` idiom in O(N).
     """
+    pass_counters["compact"] += 1
     m = _pad1(mask.astype(jnp.int32), block, np.int32(0))
     local, counts = stream_compact_pallas(m, block=block, interpret=_interpret())
     return _assemble_compact(local, counts, cap, block)
+
+
+@partial(jax.jit, static_argnames=("cap", "block"))
+def dual_compact_indices(mask_a, mask_b, cap: int, block: int = 512):
+    """Stable compaction of TWO bool masks over the same rows in ONE pass.
+
+    Returns (take_a, ok_a, total_a, take_b, ok_b, total_b) — each triple
+    exactly what ``compact_indices`` returns for its mask, but the store is
+    streamed through the kernel once (the rewrite-mode dual-branch type
+    pattern compacts a subject-binding and an object-binding mask over the
+    same rows; this halves its kernel passes).
+    """
+    pass_counters["dual_compact"] += 1
+    ma = _pad1(mask_a.astype(jnp.int32), block, np.int32(0))
+    mb = _pad1(mask_b.astype(jnp.int32), block, np.int32(0))
+    la, ca, lb, cb = dual_compact_pallas(ma, mb, block=block,
+                                         interpret=_interpret())
+    return (*_assemble_compact(la, ca, cap, block),
+            *_assemble_compact(lb, cb, cap, block))
 
 
 @partial(jax.jit, static_argnames=("cap", "block"))
@@ -199,6 +265,7 @@ def interval_compact(p, o, params, cap: int, block: int = 512):
     never satisfy ``p < phi`` for any real predicate bound.  Same returns as
     ``compact_indices``.
     """
+    pass_counters["compact"] += 1
     pp = _pad1(p, block, INVALID)
     po = _pad1(o, block, INVALID)
     local, counts = interval_compact_pallas(pp, po, params, block=block,
@@ -215,6 +282,7 @@ def masked_interval_compact(p, o, alive, params, cap: int, block: int = 512):
     kernel pass that evaluates the LiteMat interval predicate.  Same
     returns as ``compact_indices``.
     """
+    pass_counters["compact"] += 1
     pp = _pad1(p, block, INVALID)
     po = _pad1(o, block, INVALID)
     pa = _pad1(alive.astype(jnp.int32), block, np.int32(0))
@@ -226,6 +294,8 @@ def masked_interval_compact(p, o, alive, params, cap: int, block: int = 512):
 __all__ = [
     "interval_filter", "msc_select", "closure_expand",
     "embedding_bag", "embedding_bag_mean", "ell_spmm", "pair_search",
-    "compact_indices", "interval_compact", "masked_interval_compact",
-    "merge_gather", "two_source_gather", "segment_positions", "ref",
+    "compact_indices", "dual_compact_indices", "interval_compact",
+    "masked_interval_compact", "merge_gather", "two_source_gather",
+    "segment_positions", "auto_block", "LARGE_BLOCK",
+    "pass_counters", "reset_pass_counters", "ref",
 ]

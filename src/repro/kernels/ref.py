@@ -90,6 +90,18 @@ def ref_stream_compact(mask, block: int):
     return local.reshape(-1), cnt.astype(jnp.int32)
 
 
+def ref_dual_compact(mask_a, mask_b, block: int):
+    """Two independent tile-local compactions of masks over the same rows.
+
+    The dual-mask kernel streams the tile once and emits both streams; its
+    contract is simply ``ref_stream_compact`` applied to each mask — order
+    of streams preserved, no interaction between them.
+    """
+    la, ca = ref_stream_compact(mask_a, block)
+    lb, cb = ref_stream_compact(mask_b, block)
+    return la, ca, lb, cb
+
+
 def ref_pair_search(table_hi, table_lo, qhi, qlo):
     """Left insertion point of each query pair in a lex-sorted pair table."""
     from repro.utils import pair64

@@ -10,11 +10,18 @@ exclusive prefix sum over the per-tile counts plus a single gather — O(N)
 total, and the per-tile counts double as the match count, so the engine no
 longer needs a separate counting pass over the store.
 
-The intra-tile scatter is expressed as a one-hot select-and-reduce — a
-(block, block) compare cube — because TPU has no vector scatter; at the
-default block of 512 the cube is 1 MB of VMEM and pure VPU work.
+The intra-tile scatter is a CHUNKED cumsum + dynamic-slice store: the tile
+is cut into ``chunk``-sized pieces (default 256); each piece resolves its
+matches with a (chunk, chunk) one-hot select-and-reduce (TPU has no vector
+scatter, so the smallest compare cube that fits the VPU is the scatter),
+and the piece's compacted run is stored at the tile-local running offset
+with one ``pl.ds`` dynamic-slice write.  VMEM for the cube is O(chunk^2)
+*independent of block*, so blocks grow to 4096+ (the old formulation was a
+(block, block) cube — 64 MB at block=4096 — which capped blocks at 512);
+larger blocks mean 8x fewer grid steps and tile-count segments per store
+pass, the difference between "toy" and multi-million-row scans.
 
-Three entry points share the body:
+Four entry points share the body:
 
   * ``stream_compact_pallas``   — compacts an arbitrary precomputed mask
     (spill intervals, member sets, rewrite-mode type masks),
@@ -24,9 +31,16 @@ Three entry points share the body:
   * ``masked_interval_compact_pallas`` — the live-store variant: the same
     fused predicate ANDed with a per-row liveness (tombstone) mask, so a
     delta-overlaid scan (core/delta.py) filters deleted rows in the same
-    single pass instead of compacting twice.
+    single pass instead of compacting twice,
+  * ``dual_compact_pallas``     — TWO masks over the same rows compacted
+    into two independent output streams in one grid pass.  The rewrite-mode
+    dual-branch type pattern (dom∩rng predicates bind BOTH endpoints,
+    core/query.py) needs a subject-binding and an object-binding compaction
+    over the same store; emitting both per tile halves its kernel passes.
 """
 from __future__ import annotations
+
+from functools import partial
 
 import numpy as np
 
@@ -37,104 +51,154 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK = 512
+DEFAULT_CHUNK = 256
 INVALID = np.int32(np.iinfo(np.int32).max)
 
 
-def _compact_body(m, idx_ref, cnt_ref):
-    """m: int32[block] 0/1 -> front-compacted global indices + tile count."""
+def _chunk_of(block: int, chunk: int) -> int:
+    """Effective chunk: never larger than the tile, must divide it."""
+    c = min(chunk, block)
+    if block % c:
+        raise ValueError(f"chunk {c} must divide block {block}")
+    return c
+
+
+def _compact_body(m, idx_ref, cnt_ref, chunk: int):
+    """m: int32[block] 0/1 -> front-compacted global indices + tile count.
+
+    Chunked: each ``chunk`` of the tile resolves its own matches with a
+    (chunk, chunk) one-hot reduce, then lands at the tile-local running
+    offset (the exclusive cumsum of chunk counts, carried through the loop)
+    with one dynamic-slice store.  A chunk's local run is INVALID past its
+    own count, and chunk c's store begins exactly where chunk c-1's matches
+    end, so every stale INVALID tail is overwritten by the next chunk's
+    run and the final tail stays INVALID — the tile's output is the tile's
+    matches in ascending order, INVALID-padded, same contract as before.
+    """
     block = m.shape[0]
-    m2 = m.reshape(1, block)
+    chunk = _chunk_of(block, chunk)
+    n_chunks = block // chunk
+    base = pl.program_id(0) * block
+    if n_chunks == 1:
+        vals, cnt = _chunk_compact(m, base)
+        idx_ref[...] = vals
+        cnt_ref[0] = cnt
+        return
+    idx_ref[...] = jnp.full((block,), INVALID, jnp.int32)
+
+    def body(c, off):
+        mc = lax.dynamic_slice(m, (c * chunk,), (chunk,))
+        vals, cnt = _chunk_compact(mc, base + c * chunk)
+        idx_ref[pl.ds(off, chunk)] = vals
+        return off + cnt
+
+    cnt_ref[0] = lax.fori_loop(0, n_chunks, body, jnp.int32(0))
+
+
+def _chunk_compact(m, gbase):
+    """int32[chunk] 0/1 -> (compacted global indices, INVALID-padded; count)."""
+    chunk = m.shape[0]
+    m2 = m.reshape(1, chunk)
     pos = jnp.cumsum(m2, axis=1) - 1  # target slot of each match
     cnt = jnp.sum(m2)
-    out_slot = lax.broadcasted_iota(jnp.int32, (block, block), 0)
-    src_idx = lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    out_slot = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    src_idx = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
     sel = (pos == out_slot) & (m2 != 0)  # one-hot: slot j <- source i
-    local = jnp.sum(jnp.where(sel, src_idx, 0), axis=1)  # int32[block]
-    slot = lax.broadcasted_iota(jnp.int32, (1, block), 1).reshape(block)
-    base = pl.program_id(0) * block
-    idx_ref[...] = jnp.where(slot < cnt, local + base, INVALID)
-    cnt_ref[0] = cnt
+    local = jnp.sum(jnp.where(sel, src_idx, 0), axis=1)  # int32[chunk]
+    slot = lax.broadcasted_iota(jnp.int32, (1, chunk), 1).reshape(chunk)
+    return jnp.where(slot < cnt, local + gbase, INVALID), cnt
 
 
-def _mask_kernel(mask_ref, idx_ref, cnt_ref):
-    _compact_body(mask_ref[...].astype(jnp.int32), idx_ref, cnt_ref)
+def _mask_kernel(mask_ref, idx_ref, cnt_ref, *, chunk):
+    _compact_body(mask_ref[...].astype(jnp.int32), idx_ref, cnt_ref, chunk)
 
 
-def _fused_kernel(params_ref, p_ref, o_ref, idx_ref, cnt_ref):
+def _fused_kernel(params_ref, p_ref, o_ref, idx_ref, cnt_ref, *, chunk):
     plo, phi = params_ref[0], params_ref[1]
     olo, ohi = params_ref[2], params_ref[3]
     p = p_ref[...]
     o = o_ref[...]
     m = (p >= plo) & (p < phi) & (o >= olo) & (o < ohi)
-    _compact_body(m.astype(jnp.int32), idx_ref, cnt_ref)
+    _compact_body(m.astype(jnp.int32), idx_ref, cnt_ref, chunk)
 
 
-def _masked_fused_kernel(params_ref, p_ref, o_ref, alive_ref, idx_ref, cnt_ref):
+def _masked_fused_kernel(params_ref, p_ref, o_ref, alive_ref, idx_ref,
+                         cnt_ref, *, chunk):
     plo, phi = params_ref[0], params_ref[1]
     olo, ohi = params_ref[2], params_ref[3]
     p = p_ref[...]
     o = o_ref[...]
     m = (p >= plo) & (p < phi) & (o >= olo) & (o < ohi) & (alive_ref[...] != 0)
-    _compact_body(m.astype(jnp.int32), idx_ref, cnt_ref)
+    _compact_body(m.astype(jnp.int32), idx_ref, cnt_ref, chunk)
 
 
-def stream_compact_pallas(mask, *, block: int = DEFAULT_BLOCK, interpret: bool = False):
+def _dual_kernel(ma_ref, mb_ref, idxa_ref, cnta_ref, idxb_ref, cntb_ref,
+                 *, chunk):
+    _compact_body(ma_ref[...].astype(jnp.int32), idxa_ref, cnta_ref, chunk)
+    _compact_body(mb_ref[...].astype(jnp.int32), idxb_ref, cntb_ref, chunk)
+
+
+def _compact_specs(block: int, nb: int, n: int, streams: int = 1):
+    out_specs, out_shape = [], []
+    for _ in range(streams):
+        out_specs += [pl.BlockSpec((block,), lambda i: (i,)),
+                      pl.BlockSpec((1,), lambda i: (i,))]
+        out_shape += [jax.ShapeDtypeStruct((n,), jnp.int32),
+                      jax.ShapeDtypeStruct((nb,), jnp.int32)]
+    return out_specs, out_shape
+
+
+def stream_compact_pallas(mask, *, block: int = DEFAULT_BLOCK,
+                          chunk: int = DEFAULT_CHUNK, interpret: bool = False):
     """mask: int32[N] (N a multiple of block) ->
     (tile-compacted global indices int32[N], per-tile counts int32[N/block])."""
     n = mask.shape[0]
     nb = n // block
+    out_specs, out_shape = _compact_specs(block, nb, n)
     return pl.pallas_call(
-        _mask_kernel,
+        partial(_mask_kernel, chunk=chunk),
         grid=(nb,),
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-            jax.ShapeDtypeStruct((nb,), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(mask)
 
 
 def interval_compact_pallas(p, o, params, *, block: int = DEFAULT_BLOCK,
+                            chunk: int = DEFAULT_CHUNK,
                             interpret: bool = False):
     """p, o: int32[N]; params: int32[4] = (plo, phi, olo, ohi) ->
     (tile-compacted match indices, per-tile counts) — predicate fused."""
     n = p.shape[0]
     nb = n // block
+    out_specs, out_shape = _compact_specs(block, nb, n)
     return pl.pallas_call(
-        _fused_kernel,
+        partial(_fused_kernel, chunk=chunk),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
         ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-            jax.ShapeDtypeStruct((nb,), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(params, p, o)
 
 
 def masked_interval_compact_pallas(p, o, alive, params, *,
                                    block: int = DEFAULT_BLOCK,
+                                   chunk: int = DEFAULT_CHUNK,
                                    interpret: bool = False):
     """p, o, alive: int32[N]; params: int32[4] = (plo, phi, olo, ohi) ->
     (tile-compacted match indices, per-tile counts) — interval predicate and
     tombstone filter fused in one pass."""
     n = p.shape[0]
     nb = n // block
+    out_specs, out_shape = _compact_specs(block, nb, n)
     return pl.pallas_call(
-        _masked_fused_kernel,
+        partial(_masked_fused_kernel, chunk=chunk),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -142,13 +206,29 @@ def masked_interval_compact_pallas(p, o, alive, params, *,
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
         ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-            jax.ShapeDtypeStruct((nb,), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(params, p, o, alive)
+
+
+def dual_compact_pallas(mask_a, mask_b, *, block: int = DEFAULT_BLOCK,
+                        chunk: int = DEFAULT_CHUNK, interpret: bool = False):
+    """Two int32[N] masks -> two (indices, per-tile counts) streams, one pass.
+
+    Each stream independently satisfies the ``stream_compact_pallas``
+    contract; the tile's rows are resident once while BOTH masks resolve,
+    so the dual-branch consumer pays one grid pass instead of two.
+    """
+    n = mask_a.shape[0]
+    nb = n // block
+    out_specs, out_shape = _compact_specs(block, nb, n, streams=2)
+    return pl.pallas_call(
+        partial(_dual_kernel, chunk=chunk),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(mask_a, mask_b)

@@ -54,7 +54,7 @@ def _distinct_count_topk(hits, topk: int):
 
 def _slice_hits(subj_os, start_row, len_row, cap: int):
     """Gather one request's type-index segments (primary + spill intervals)."""
-    src, ok, _ = ops.segment_positions(start_row, len_row, cap)
+    src, ok, _, _ = ops.segment_positions(start_row, len_row, cap)
     return jnp.where(ok, subj_os[jnp.clip(src, 0, subj_os.shape[0] - 1)],
                      INVALID)
 

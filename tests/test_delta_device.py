@@ -80,23 +80,26 @@ def _mutate(K, onto, seed: int, disjoint: bool = False):
 QUERY = [Pattern("?x", "rdf:type", "C1")]
 
 
-def test_warmup_transfer_independent_of_base_size():
+@pytest.mark.parametrize("mode", ["litemat", "full", "rewrite"])
+def test_warmup_transfer_independent_of_base_size(mode):
     """Same delta on a 1x and a 4x base -> identical device-transfer stats.
 
     The update-slice extent, delta-bucket shapes, and every upload counter
     must depend only on the delta; only the one-time base-alive upload of
     the first delete (and kill scatters) may differ in *content*, never in
-    delta terms.
+    delta terms.  Pinned for ALL THREE serving modes: the lazily derived
+    lite/full delta materializations and the rewrite-mode raw log all land
+    in O(delta) buckets whose refresh never scales with the base.
     """
     onto = _onto()
     snaps = {}
     for scale in (1, 4):
         K = _kb(onto, scale)
-        K.answers(QUERY)  # build base state pre-mutation
-        cache = K.dev_cache("litemat")
+        K.answers(QUERY, mode=mode)  # build base state pre-mutation
+        cache = K.dev_cache(mode)
         before = dict(cache.stats)
         _mutate(K, onto, seed=99, disjoint=True)
-        K.answers(QUERY)  # first post-mutation query: syncs device buffers
+        K.answers(QUERY, mode=mode)  # first post-mutation query: syncs buffers
         after = dict(cache.stats)
         delta_stats = {k: after[k] - before[k] for k in after}
         shapes = {k: cache.buffer_shapes(k)
@@ -152,6 +155,47 @@ def test_bucket_growth_reuses_buffers():
 
     # the base device array was NEVER copied or re-concatenated
     assert K.view("litemat").dev("pos").base is base0
+
+
+def _donation_reuses_buffers() -> bool:
+    """Probe whether this backend honors jit buffer donation."""
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda m: m.at[0].set(False), donate_argnums=(0,))
+    x = jnp.ones(128, dtype=bool)
+    ptr = x.unsafe_buffer_pointer()
+    return f(x).unsafe_buffer_pointer() == ptr
+
+
+def test_delete_kill_scatters_donate_alive_buffer_in_place():
+    """PINNED: a delete batch flips bits in the SAME device buffer.
+
+    The kill scatter donates the resident base-alive mask, so XLA updates
+    it in place — no O(base) copy-then-scatter per delete batch, no
+    base-sized transfer, and no shared-mask privatization after the first:
+    the buffer pointer survives the batch.
+    """
+    if not _donation_reuses_buffers():
+        pytest.skip("backend does not honor buffer donation")
+    onto = _onto()
+    K = _kb(onto, 2)
+    raw_extra = _mutate(K, onto, seed=7)  # tombstone state exists up front
+    K.answers(QUERY)  # resident buffers own a private base-alive mask
+    cache = K.dev_cache("litemat")
+    ptr0 = K.view("litemat").dev("pos").base_alive.unsafe_buffer_pointer()
+    before = dict(cache.stats)
+    K.delete((raw_extra.s[5:9], raw_extra.p[5:9], raw_extra.o[5:9]),
+             auto_compact=False)
+    K.answers(QUERY)
+    after = dict(cache.stats)
+    # same buffer, updated in place by the donated scatter
+    assert (K.view("litemat").dev("pos").base_alive.unsafe_buffer_pointer()
+            == ptr0)
+    assert after["kill_scatter_rows"] > before["kill_scatter_rows"]
+    # and the batch shipped/copied nothing base-sized
+    assert after["upload_base_alive_rows"] == before["upload_base_alive_rows"]
+    assert after["alive_privatize_rows"] == before["alive_privatize_rows"]
 
 
 def test_delete_applies_kill_scatters_not_mask_uploads():

@@ -128,6 +128,113 @@ def test_masked_interval_compact_fused(n, density, rng):
     np.testing.assert_array_equal(np.asarray(take)[np.asarray(ok)], want[:256])
 
 
+@pytest.mark.parametrize("block", [512, 1024, 4096])
+@pytest.mark.parametrize("chunk", [128, 256, 512])
+@pytest.mark.parametrize("density", [0.0, 0.13, 1.0])
+def test_stream_compact_chunked_sweep(block, chunk, density, rng):
+    """Chunked-cumsum body == ref across block x chunk x density.
+
+    The chunked rewrite must be bit-identical for every chunking of the
+    tile — including blocks past the old 512 one-hot ceiling — and for the
+    empty-output (density 0) and all-survivors (density 1) edges, where
+    the dynamic-slice stores degenerate to nothing / the whole tile.
+    """
+    from repro.kernels.stream_compact import stream_compact_pallas
+
+    n = block * 2 + block // 2  # partial final tile after padding
+    mask = jnp.asarray(rng.random(n) < density)
+    padded = ops._pad1(mask.astype(jnp.int32), block, np.int32(0))
+    loc, cnt = stream_compact_pallas(padded, block=block, chunk=chunk,
+                                     interpret=True)
+    rloc, rcnt = ref.ref_stream_compact(padded, block)
+    np.testing.assert_array_equal(np.asarray(loc), np.asarray(rloc))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(rcnt))
+
+
+@pytest.mark.parametrize("block", [512, 4096])
+@pytest.mark.parametrize("n", [100, 5000, 9000])
+def test_compact_indices_large_blocks(block, n, rng):
+    """The assembled wrapper is block-size invariant (4096 == 512 == ref)."""
+    mask = jnp.asarray(rng.random(n) < 0.2)
+    want = np.flatnonzero(np.asarray(mask))
+    for cap in (8, 1 << 13):
+        take, ok, total = ops.compact_indices(mask, cap, block=block)
+        assert int(total) == len(want)
+        np.testing.assert_array_equal(np.asarray(take)[np.asarray(ok)],
+                                      want[:cap])
+
+
+@pytest.mark.parametrize("block", [512, 4096])
+@pytest.mark.parametrize("n", [513, 5000])
+@pytest.mark.parametrize("density", [0.0, 0.4, 1.0])
+def test_masked_interval_compact_block_sweep(n, block, density, rng):
+    """Fused masked variant parity across the new block sizes."""
+    p = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+    o = jnp.asarray(rng.integers(0, 1 << 20, n), jnp.int32)
+    alive = jnp.asarray(rng.random(n) < density)
+    params = jnp.asarray([10, 40, 0, 1 << 19], jnp.int32)
+    want = np.flatnonzero(np.asarray(
+        ref.ref_interval_filter(None, p, o, 10, 40, 0, 1 << 19, 0))
+        & np.asarray(alive))
+    take, ok, total = ops.masked_interval_compact(p, o, alive, params, 256,
+                                                  block=block)
+    assert int(total) == len(want)
+    np.testing.assert_array_equal(np.asarray(take)[np.asarray(ok)],
+                                  want[:256])
+
+
+@pytest.mark.parametrize("block", [512, 1024, 4096])
+@pytest.mark.parametrize("da,db", [(0.0, 0.0), (0.2, 0.9), (1.0, 1.0),
+                                   (0.0, 1.0)])
+def test_dual_compact_sweep(block, da, db, rng):
+    """Dual-mask kernel: both streams == ref, one grid pass.
+
+    Covers asymmetric densities and the empty-output / all-survivors edges
+    on each stream independently.
+    """
+    from repro.kernels.stream_compact import dual_compact_pallas
+
+    n = block * 2
+    ma = jnp.asarray((rng.random(n) < da).astype(np.int32))
+    mb = jnp.asarray((rng.random(n) < db).astype(np.int32))
+    la, ca, lb, cb = dual_compact_pallas(ma, mb, block=block, interpret=True)
+    rla, rca, rlb, rcb = ref.ref_dual_compact(ma, mb, block)
+    for got, want in ((la, rla), (ca, rca), (lb, rlb), (cb, rcb)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dual_compact_indices_wrapper(rng):
+    """ops.dual_compact_indices == two compact_indices, one kernel pass."""
+    n = 3000
+    ma = jnp.asarray(rng.random(n) < 0.15)
+    mb = jnp.asarray(rng.random(n) < 0.6)
+    wa, wb = np.flatnonzero(np.asarray(ma)), np.flatnonzero(np.asarray(mb))
+    for cap in (16, 1 << 12):
+        ta, oka, tota, tb, okb, totb = ops.dual_compact_indices(
+            ma, mb, cap)
+        assert int(tota) == len(wa) and int(totb) == len(wb)
+        np.testing.assert_array_equal(np.asarray(ta)[np.asarray(oka)],
+                                      wa[:cap])
+        np.testing.assert_array_equal(np.asarray(tb)[np.asarray(okb)],
+                                      wb[:cap])
+
+
+@given(st.integers(1, 6000), st.integers(0, 2**31 - 2),
+       st.sampled_from([512, 1024, 4096]), st.sampled_from([128, 256]))
+@settings(max_examples=20, deadline=None)
+def test_stream_compact_chunked_property(n, seed, block, chunk):
+    from repro.kernels.stream_compact import stream_compact_pallas
+
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray((rng.random(n) < rng.random()).astype(np.int32))
+    padded = ops._pad1(mask, block, np.int32(0))
+    loc, cnt = stream_compact_pallas(padded, block=block, chunk=chunk,
+                                     interpret=True)
+    rloc, rcnt = ref.ref_stream_compact(padded, block)
+    np.testing.assert_array_equal(np.asarray(loc), np.asarray(rloc))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(rcnt))
+
+
 def _sorted_pair_run(rng, n, key_space):
     """Random (hi, lo)-lex-sorted int32 run; small key_space → dense dups."""
     hi = rng.integers(0, key_space, n).astype(np.int32)
@@ -193,6 +300,85 @@ def test_merge_gather_masked_compaction(n, m, tombstone_ratio, rng):
     want, _ = merge_sorted(a_rows[a_alive], a_key[a_alive],
                            b_rows[b_alive], b_key[b_alive])
     np.testing.assert_array_equal(got, np.asarray(want))
+
+
+@pytest.mark.parametrize("n,m", [(256, 256), (300, 270), (1030, 5000),
+                                 (4096, 256), (2000, 2000)])
+@pytest.mark.parametrize("key_space", [3, 50, 1 << 20])  # dup density sweep
+def test_merge_gather_partitioned_sweep(n, m, key_space, rng):
+    """Diagonal-partitioned merge == ref oracle across sizes x dup density.
+
+    Runs the partitioned kernel directly at a small block (256) so every
+    case crosses several tile boundaries — including boundaries that land
+    inside long duplicate-key runs, where the split search's stable
+    A-before-B rule must agree with the per-element searches on both
+    sides of the cut.
+    """
+    from repro.kernels.merge_sorted import merge_path_partitioned_pallas
+
+    ah, al = _sorted_pair_run(rng, n, key_space)
+    bh, bl = _sorted_pair_run(rng, m, key_space)
+    args = tuple(map(jnp.asarray, (ah, al, bh, bl)))
+    got = np.asarray(merge_path_partitioned_pallas(
+        *args, block=256, interpret=True))[: n + m]
+    want = np.asarray(ref.ref_merge_sorted(*args))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,m", [(1100, 1100), (1024, 4096)])
+@pytest.mark.parametrize("tombstone_ratio", [0.0, 0.3, 1.0])
+def test_merge_gather_partitioned_masked_compaction(n, m, tombstone_ratio,
+                                                    rng):
+    """Partitioned merge + tombstone drop == host merge of filtered runs.
+
+    The device-compaction contract (core/delta.py) re-pinned on the
+    dispatch path that selects the partitioned kernel (both runs >= the
+    1024 default block), across tombstone ratios including kill-everything.
+    """
+    from repro.core.index import merge_sorted
+
+    def rows_run(k):
+        hi, lo = _sorted_pair_run(rng, k, 50)
+        rows = np.stack([rng.integers(0, 1 << 20, k).astype(np.int32),
+                         hi, lo], axis=1)
+        alive = rng.random(k) >= tombstone_ratio
+        key = hi.astype(np.int64) << 32 | lo.astype(np.int64)
+        return rows, alive, key
+
+    a_rows, a_alive, a_key = rows_run(n)
+    b_rows, b_alive, b_key = rows_run(m)
+    ops.merge_gather.clear_cache()  # counters bump at trace time only
+    ops.reset_pass_counters()
+    gidx = np.asarray(ops.merge_gather(
+        *map(jnp.asarray, (a_rows[:, 1], a_rows[:, 2],
+                           b_rows[:, 1], b_rows[:, 2]))))
+    assert ops.pass_counters["merge_partitioned"] >= 1  # dispatch took it
+    alive = np.asarray(ops.two_source_gather(
+        jnp.asarray(a_alive), jnp.asarray(b_alive), jnp.asarray(gidx)))
+    n_live = int(a_alive.sum() + b_alive.sum())
+    take, ok, total = ops.compact_indices(jnp.asarray(alive), max(n_live, 8))
+    src = np.asarray(take)[:n_live]
+    got = np.asarray(ops.two_source_gather(
+        jnp.asarray(a_rows), jnp.asarray(b_rows), jnp.asarray(gidx[src])))
+    assert int(total) == n_live
+    want, _ = merge_sorted(a_rows[a_alive], a_key[a_alive],
+                           b_rows[b_alive], b_key[b_alive])
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+@given(st.integers(256, 1200), st.integers(256, 1200),
+       st.integers(0, 2**31 - 2))
+@settings(max_examples=20, deadline=None)
+def test_merge_gather_partitioned_property(n, m, seed):
+    from repro.kernels.merge_sorted import merge_path_partitioned_pallas
+
+    rng = np.random.default_rng(seed)
+    ah, al = _sorted_pair_run(rng, n, int(rng.integers(2, 1 << 16)))
+    bh, bl = _sorted_pair_run(rng, m, int(rng.integers(2, 1 << 16)))
+    args = tuple(map(jnp.asarray, (ah, al, bh, bl)))
+    got = np.asarray(merge_path_partitioned_pallas(
+        *args, block=256, interpret=True))[: n + m]
+    np.testing.assert_array_equal(got, np.asarray(ref.ref_merge_sorted(*args)))
 
 
 def test_two_source_gather_degenerate_sources(rng):

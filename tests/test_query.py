@@ -65,6 +65,73 @@ def test_join_on_object_position(lubm_kb):
     assert len(res["litemat"]) > 100
 
 
+def test_inl_join_fallback_matches_merge_join(lubm_kb):
+    """Q4-style tiny-side joins: INL probe plan == merge-join plan.
+
+    The planner must actually convert Q4's dominant pattern (worksFor,
+    ~40x the Chair count) to an index-nested-loop probe of the PSO
+    permutation, and the answers must be identical to the merge-join plan
+    with INL disabled.
+    """
+    K, _ = lubm_kb
+    for mode in ("litemat", "full"):
+        eng = K.engine(mode)
+        sigs, *_ = eng._plan(PAPER_QUERIES["Q4"], None)
+        assert any(s.strategy == "inl" for s in sigs), mode
+        got = K.answers(PAPER_QUERIES["Q4"], mode=mode)
+        eng.use_inl = False
+        try:
+            rows, _ = eng.run(PAPER_QUERIES["Q4"])
+        finally:
+            eng.use_inl = True
+        assert got == {tuple(r) for r in rows.tolist()}
+        assert len(got) > 0
+
+
+def test_inl_join_object_probe(lubm_kb):
+    """Constant-object probes take the POS permutation (o is the bound var)."""
+    K, _ = lubm_kb
+    pats = [Pattern("?x", "rdf:type", "Chair"),
+            Pattern("?s", "advisor", "?x")]
+    eng = K.engine("litemat")
+    sigs, *_ = eng._plan(pats, None)
+    inl = [s for s in sigs if s.strategy == "inl"]
+    assert inl and inl[0].store == "pos" and inl[0].probe_pos == 2
+    got = K.answers(pats, mode="litemat")
+    eng.use_inl = False
+    try:
+        rows, _ = eng.run(pats)
+    finally:
+        eng.use_inl = True
+    assert got == {tuple(r) for r in rows.tolist()}
+
+
+def test_rewrite_dual_branch_is_one_pass(lubm_kb):
+    """(?x rdf:type Person) has dom AND rng branches: ONE dual-mask pass.
+
+    Person entails through domain properties (memberOf, advisor, ...) and
+    range properties (member, publicationAuthor) — the dual-branch shape
+    whose two per-source compactions the dual-mask kernel folds into one.
+    The trace-time pass counters pin it: >= 1 dual pass, and at most the
+    single pass DISTINCT's dedup owns; answers stay equal to litemat.
+    """
+    from repro.core.query import QueryEngine
+    from repro.kernels import ops
+
+    K, _ = lubm_kb
+    q = [Pattern("?x", "rdf:type", "Person")]
+    want = K.answers(q, mode="litemat")
+    eng = QueryEngine(kb=K.kb, spo=K.kb.spo, mode="rewrite", dtb=K.dtb)
+    ops.compact_indices.clear_cache()
+    ops.dual_compact_indices.clear_cache()
+    ops.reset_pass_counters()
+    rows, _ = eng.run(q)
+    assert ops.pass_counters["dual_compact"] >= 1
+    assert ops.pass_counters["compact"] <= 1, ops.pass_counters
+    assert {tuple(r) for r in rows.tolist()} == want
+    assert len(want) > 0
+
+
 @st.composite
 def dag_onto(draw):
     nc = draw(st.integers(4, 10))
