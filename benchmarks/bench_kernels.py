@@ -122,15 +122,6 @@ def main():
     t, _ = timeit(argsort_ref, repeats=3)
     emit("kernels/compact_argsort_ref", t, n=N2, cap=cap)
 
-    V, E, B, L = 10_000, 64, 512, 16
-    table = jnp.asarray(rng.normal(size=(V, E)).astype(np.float32))
-    idx = jnp.asarray(rng.integers(-1, V, (B, L)).astype(np.int32))
-    t, _ = timeit(ops.embedding_bag, table, idx, repeats=3)
-    emit("kernels/embedding_bag_pallas", t, bags=B)
-    reff = jax.jit(lambda: ref.ref_embedding_bag(table, idx))
-    t, _ = timeit(reff, repeats=3)
-    emit("kernels/embedding_bag_ref", t, bags=B)
-
     _sweep(emit, timeit)
 
 

@@ -102,6 +102,90 @@ def main():
     emit("table6/Q1/litemat_live_overlay", t_live,
          delta_rows=n, overhead_vs_compacted=round(t_live / max(t_comp, 1e-9), 2))
 
+    _sharded_section(emit, timeit, raw)
+
+
+def _sharded_section(emit, timeit, raw):
+    """ShardedKB rows: Q1-Q4 latency, serving fan-out, bulk ingest.
+
+    ``REPRO_BENCH_SHARDED=0`` skips the section (the single-device CI
+    leg); ``REPRO_BENCH_SHARDS`` sets the logical shard count (execution
+    lowers through shard_map when a device per shard exists — the
+    8-forced-device CI leg); ``REPRO_BENCH_INGEST_ROWS`` scales the bulk
+    ingest (default 1e7 — the ROADMAP's LUBM-100-class target; CI sets it
+    lower to bound runner time, emitting ``sharded/ingest_scaled``).
+    """
+    import os
+    import time
+
+    if os.environ.get("REPRO_BENCH_SHARDED", "1") != "1":
+        return
+    import jax
+
+    from repro.core.engine import PAPER_QUERIES
+    from repro.core.shard import ShardedKB
+    from repro.rdf.generator import generate_random_abox
+    from repro.rdf.vocab import lubm_ontology
+    from repro.serving.engine import ShardedQueryServer
+
+    n_shards = int(os.environ.get("REPRO_BENCH_SHARDS", "8"))
+    t0 = time.perf_counter()
+    S = ShardedKB.build(raw, n_shards=n_shards)
+    emit("sharded/build", time.perf_counter() - t0, shards=n_shards,
+         devices=jax.device_count(), **S.sizes())
+    for qn, pats in PAPER_QUERIES.items():
+        answers = {}
+        for mode in ("litemat", "rewrite"):
+            t, _ = timeit(lambda m=mode: S.query(pats, mode=m), repeats=3)
+            answers[mode] = S.answers(pats, mode=mode)
+            emit(f"sharded/{qn}/{mode}", t, n_answers=len(answers[mode]))
+        assert answers["litemat"] == answers["rewrite"], qn
+    eng = S.engine("litemat")
+    emit("sharded/exec_path", 0.0, **eng.cache_stats,
+         shard_map=eng._shard_map_on())
+
+    srv = ShardedQueryServer(S)
+    names = ["Professor", "Student", "Faculty", "Person", "Course",
+             "Publication", "Organization", "Department"] * 32
+    t, _ = timeit(lambda: srv.class_members(names), repeats=3)
+    emit("sharded/serving_class_members", t, batch=len(names),
+         per_request_us=round(t * 1e6 / len(names), 1))
+
+    # bulk ingest: per-shard encode + partition + lazy per-shard derivation
+    rows_target = int(float(os.environ.get("REPRO_BENCH_INGEST_ROWS", "1e7")))
+    if rows_target <= 0:
+        return
+    onto = lubm_ontology()
+    n_parts = 10
+    per = rows_target // n_parts
+    parts = (generate_random_abox(
+        onto, n_instances=max(per // 4, 1), n_type_triples=int(per * 0.3),
+        n_prop_triples=per - int(per * 0.3), seed=40 + i,
+        instance_offset=20_000_000 * (i + 1)) for i in range(n_parts))
+    t0 = time.perf_counter()
+    SI = ShardedKB.ingest(parts, tbox=S.tbox, n_shards=n_shards)
+    t_ingest = time.perf_counter() - t0
+    total = sum((K.kb.n + (K._delta.logs["rewrite"].n if K._delta else 0))
+                for K in SI.shards)
+    name = ("sharded/ingest_1e7" if rows_target >= 9_000_000
+            else "sharded/ingest_scaled")
+    emit(name, t_ingest, n_triples=total, shards=n_shards,
+         triples_per_s=int(total / max(t_ingest, 1e-9)))
+    q = PAPER_QUERIES["Q1"]
+    t0 = time.perf_counter()
+    n_ans = len(SI.answers(q, mode="litemat"))
+    t_first = time.perf_counter() - t0  # pays per-shard lazy derivation
+    t_warm, _ = timeit(lambda: SI.query(q, mode="litemat"), repeats=3)
+    emit(f"{name}_first_query", t_first, n_answers=n_ans)
+    emit(f"{name}_warm_query", t_warm, n_answers=n_ans)
+    # drop the stores before the later bench modules (benchmarks.run calls
+    # bench_updates in this same process) time anything: a 1e7-row KB left
+    # alive skews their allocator behavior.  srv/eng hold S, so they go too.
+    del SI, S, srv, eng
+    import gc
+
+    gc.collect()
+
 
 if __name__ == "__main__":
     main()

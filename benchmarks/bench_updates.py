@@ -107,6 +107,64 @@ def _warmup_section(emit):
          passed=bool(all(flat.values())))
 
 
+def _sharded_warmup_section(emit):
+    """Per-SHARD post-mutation warmup must be O(delta), base-size free.
+
+    Two ShardedKBs, one 4x the other, absorb the same-shaped disjoint
+    delta; after the insert, every shard's device-cache transfer rows
+    (litemat) must equal EXACTLY the pow2 bucket its own delta log
+    predicts — a pure function of the delta, at either base scale (an
+    O(base) leak would show up as base-sized transfer terms).  The raw
+    per-shard numbers are not comparable across scales: the dictionary
+    ranks the delta's new ids differently over different bases, so the
+    subject-hash partition of the same delta differs.
+    ``REPRO_BENCH_SHARDED=0`` skips.
+    """
+    import os
+    import time
+
+    import numpy as np
+
+    from repro.core.index import pow2_bucket
+    from repro.core.query import Pattern
+    from repro.core.shard import ShardedKB
+    from repro.rdf.generator import generate_random_abox
+    from repro.rdf.vocab import lubm_ontology
+
+    if os.environ.get("REPRO_BENCH_SHARDED", "1") != "1":
+        return
+    n_shards = int(os.environ.get("REPRO_BENCH_SHARDS", "8"))
+    onto = lubm_ontology()
+    q = [Pattern("?x", "rdf:type", "Professor")]
+    flat = {}
+    for scale in (1, 4):
+        raw = generate_random_abox(
+            onto, n_instances=2000 * scale, n_type_triples=6000 * scale,
+            n_prop_triples=5000 * scale, seed=5)
+        S = ShardedKB.build(raw, n_shards=n_shards)
+        S.prewarm([q], modes=("litemat",))
+        S.warm_device("litemat", keys=("pos",))
+        rows0 = [K.dev_cache("litemat").stats["upload_delta_rows"]
+                 for K in S.shards]
+        delta = generate_random_abox(
+            onto, n_instances=256, n_type_triples=512, n_prop_triples=512,
+            seed=100, instance_offset=10_000_000)
+        S.insert(delta, auto_compact=False)
+        t0 = time.perf_counter()
+        S.warm_device("litemat", keys=("pos",))
+        t_warm = time.perf_counter() - t0
+        got = [K.dev_cache("litemat").stats["upload_delta_rows"] - b
+               for K, b in zip(S.shards, rows0)]
+        want = [pow2_bucket(K.delta.log("litemat").n)
+                if K.delta.log("litemat").n else 0 for K in S.shards]
+        flat[scale] = got == want
+        emit(f"updates/sharded_warmup_base_{scale}x", t_warm,
+             n_base_triples=raw.n_triples, transfer_rows=int(np.sum(got)))
+    emit("updates/sharded_warmup_flatness", 0.0,
+         transfer_rows_delta_exact=all(flat.values()), shards=n_shards,
+         passed=bool(all(flat.values())))
+
+
 def main(json_path: str = "BENCH_updates.json"):
     import numpy as np
 
@@ -171,6 +229,7 @@ def main(json_path: str = "BENCH_updates.json"):
 
     # post-mutation warmup must be O(delta): flat across base scales
     _warmup_section(emit)
+    _sharded_warmup_section(emit)
 
     if json_path:
         rows = all_records()[records_before:]

@@ -11,7 +11,6 @@ Sections (paper table -> module):
     updates -> bench_updates      incremental insert/delete/compact vs
                                   rebuild (writes BENCH_updates.json)
     kernels -> bench_kernels      Pallas kernels vs refs
-    roofline -> roofline          dry-run aggregation (reads reports/dryrun)
 
 Scale via env: REPRO_BENCH_UNIV (default 4 universities ~ 0.5M triples).
 """
@@ -33,7 +32,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_abox, bench_kernels, bench_materialize, bench_queries,
-        bench_tbox, bench_updates, roofline,
+        bench_tbox, bench_updates,
     )
 
     sections = {
@@ -43,7 +42,6 @@ def main() -> None:
         "table6": bench_queries.main,
         "updates": bench_updates.main,
         "kernels": bench_kernels.main,
-        "roofline": roofline.main,
     }
     chosen = (
         {k.strip() for k in args.only.split(",")} if args.only else set(sections)

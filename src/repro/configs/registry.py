@@ -3,18 +3,18 @@ from __future__ import annotations
 
 from repro.configs import (
     deepseek_v2_236b, equiformer_v2, gat_cora, gatedgcn, gemma3_12b,
-    gemma_2b, mind, olmo_1b, olmoe_1b_7b, schnet,
+    gemma_2b, olmo_1b, olmoe_1b_7b, schnet,
 )
-from repro.configs.shapes import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES
+from repro.configs.shapes import GNN_SHAPES, LM_SHAPES
 
 _MODULES = [
     olmo_1b, gemma_2b, gemma3_12b, olmoe_1b_7b, deepseek_v2_236b,
-    equiformer_v2, gat_cora, gatedgcn, schnet, mind,
+    equiformer_v2, gat_cora, gatedgcn, schnet,
 ]
 
 ARCHS = {m.ARCH_ID: m for m in _MODULES}
 
-SHAPE_TABLES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}
+SHAPE_TABLES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES}
 
 # documented skips (DESIGN.md §4): long_500k only for hybrid-attention archs
 SKIPS = {
@@ -26,13 +26,11 @@ SKIPS = {
 
 
 # beyond-paper optimization variants (per family config overrides); used by
-# the Perf hillclimb: dryrun --variant <name> lowers the optimized config.
+# the Perf hillclimb (hlo_analysis over lowered cells).
 VARIANTS = {
     "flash": {"lm": dict(attn_impl="blockwise")},
     "noattn": {"lm": dict(attn_impl="stub")},  # measurement surrogate
-    "pallas": {"lm": dict(attn_impl="pallas")},  # real-TPU path
     "mrestrict": {"gnn": dict(rotate_restrict=True, edge_dtype="bfloat16")},
-    "shardtopk": {"recsys": dict(serve_impl="sharded_topk")},
 }
 
 

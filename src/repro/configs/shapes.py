@@ -28,9 +28,3 @@ GNN_SHAPES = {
     ),
 }
 
-RECSYS_SHAPES = {
-    "train_batch": dict(kind="train", batch=65_536),
-    "serve_p99": dict(kind="serve", batch=512, n_candidates=8192),
-    "serve_bulk": dict(kind="serve", batch=262_144, n_candidates=8192),
-    "retrieval_cand": dict(kind="serve", batch=1, n_candidates=1_000_000),
-}

@@ -325,6 +325,82 @@ class KnowledgeBase:
             stats["compacted"] = self.compact()
         return stats
 
+    # -- sharded-reusable delete primitives (core/shard.py orchestrates the
+    # same three steps across shards; KnowledgeBase.delete below composes
+    # them into the single-store delete) --------------------------------------
+    def append_raw(self, rows: np.ndarray) -> None:
+        """Append pre-encoded raw rows to the rewrite delta log (no bump)."""
+        self.delta.log("rewrite").append(rows)
+
+    def append_derived(self, mode: str, rows: np.ndarray) -> None:
+        """Append pre-derived rows to one materialized store's delta log."""
+        if rows.shape[0]:
+            self.delta.log(mode).append(rows)
+
+    def kill_raw_rows(self, q: np.ndarray) -> np.ndarray:
+        """Tombstone exact encoded triples in the raw store (base + delta).
+
+        Returns the rows actually killed (live copies only); does NOT
+        repair the derived stores — callers follow up with
+        ``kill_derived_mentions`` + re-derivation of the affected
+        instances' ``live_raw_mentions``.
+        """
+        d = self.delta
+        deleted = []
+        base_h = self._base_index("rewrite")._h
+        hits = self._raw_locator().find(q)
+        if hits.size:
+            alive = d.base_alive["rewrite"]
+            if alive is not None:
+                hits = hits[alive[hits]]
+            if hits.size:
+                deleted.append(base_h[hits])
+                d.kill_base("rewrite", base_h.shape[0], hits)
+        rlog = d.log("rewrite")
+        if rlog.n:
+            dhits = RowLocator.build(rlog.rows).find(q)
+            if dhits.size:
+                dhits = dhits[rlog.alive[dhits]]
+                if dhits.size:
+                    deleted.append(rlog.rows[dhits])
+                    rlog.tombstone(dhits)
+        if not deleted:
+            return np.zeros((0, 3), dtype=np.int32)
+        return np.concatenate(deleted)
+
+    def kill_derived_mentions(self, inst: np.ndarray) -> None:
+        """Tombstone every derived row mentioning an affected instance.
+
+        The instance-keyed SPO/OSP lookup touches only the hit runs, so
+        this is O(k log N + hits) in the base size, not an O(N) scan.
+        """
+        d = self.delta
+        for mode in ("litemat", "full"):
+            idx = self._base_index(mode)
+            d.kill_base(mode, idx.n, mention_rows(idx, inst))
+            log = d.log(mode)
+            if log.n:
+                log.tombstone(mentions_mask(log.rows, inst))
+
+    def live_raw_mentions(self, inst: np.ndarray) -> np.ndarray:
+        """Live raw triples mentioning any affected instance (s or o).
+
+        The re-derivation frontier of a delete: materializing these rows
+        and keeping the derived rows that mention an affected instance is
+        an exact repair of the derived stores.
+        """
+        d = self.delta
+        base_h = self._base_index("rewrite")._h
+        raw_alive = d.base_alive["rewrite"]
+        raw_rows = mention_rows(self._base_index("rewrite"), inst)
+        if raw_alive is not None:
+            raw_rows = raw_rows[raw_alive[raw_rows]]
+        parts = [base_h[raw_rows]]
+        rlog = d.log("rewrite")
+        if rlog.n:
+            parts.append(rlog.rows[mentions_mask(rlog.rows, inst) & rlog.alive])
+        return np.concatenate(parts)
+
     def delete(self, raw, auto_compact: bool = True) -> dict:
         """Remove raw triples (all copies) and repair the derived stores.
 
@@ -345,54 +421,18 @@ class KnowledgeBase:
         ids = np.stack([dyn.lookup(s_fp), dyn.lookup(p_fp),
                         dyn.lookup(o_fp)], axis=1)
         q = ids[(ids >= 0).all(axis=1)]  # triples with unknown terms: absent
-        d = self.delta
-        deleted = []
 
-        base_h = self._base_index("rewrite")._h
-        hits = self._raw_locator().find(q)
-        if hits.size:
-            alive = d.base_alive["rewrite"]
-            if alive is not None:
-                hits = hits[alive[hits]]
-            if hits.size:
-                deleted.append(base_h[hits])
-                d.kill_base("rewrite", base_h.shape[0], hits)
-        rlog = d.log("rewrite")
-        if rlog.n:
-            dhits = RowLocator.build(rlog.rows).find(q)
-            if dhits.size:
-                dhits = dhits[rlog.alive[dhits]]
-                if dhits.size:
-                    deleted.append(rlog.rows[dhits])
-                    rlog.tombstone(dhits)
-
-        if not deleted:
+        deleted = self.kill_raw_rows(q)
+        if deleted.shape[0] == 0:
             return dict(n_deleted=0)
-        deleted = np.concatenate(deleted)
         inst = affected_instances(deleted, self.kb.tbox.instance_base)
-
-        # tombstone every derived row mentioning an affected instance: the
-        # instance-keyed SPO/OSP lookup touches only the hit runs, so this
-        # is O(k log N + hits) in the base size, not an O(N) np.isin scan
-        for mode in ("litemat", "full"):
-            idx = self._base_index(mode)
-            d.kill_base(mode, idx.n, mention_rows(idx, inst))
-            log = d.log(mode)
-            if log.n:
-                log.tombstone(mentions_mask(log.rows, inst))
+        self.kill_derived_mentions(inst)
 
         # re-derive the affected instances from their live raw triples
-        raw_alive = d.base_alive["rewrite"]
-        raw_rows = mention_rows(self._base_index("rewrite"), inst)
-        if raw_alive is not None:
-            raw_rows = raw_rows[raw_alive[raw_rows]]
-        parts = [base_h[raw_rows]]
-        if rlog.n:
-            parts.append(rlog.rows[mentions_mask(rlog.rows, inst) & rlog.alive])
-        frontier = np.concatenate(parts)
+        frontier = self.live_raw_mentions(inst)
         for mode in ("litemat", "full"):
             derived = materialize_delta_mode(frontier, self.dtb, mode)
-            d.log(mode).append(derived[mentions_mask(derived, inst)])
+            self.append_derived(mode, derived[mentions_mask(derived, inst)])
         self._bump()
         stats = dict(
             n_deleted=int(deleted.shape[0]),

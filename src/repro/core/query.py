@@ -407,6 +407,14 @@ def _eval_pattern(sig: PatternSig, cap: int, stores, dyn):
                            cap), total
 
 
+# Above this many rows, INL probes take the windowed pair search (the
+# merge-path-partitioned reuse in kernels/ops.py) instead of the resident
+# kernel whose table planes must fit in VMEM — the last whole-table VMEM
+# residency in the query path, now a dispatch bound instead of a planner
+# disqualifier.
+INL_RESIDENT_MAX = 1 << 20
+
+
 def _inl_ranges(ds, prim: int, sec: int, qhi, qlo, valid):
     """Probe one source's key planes -> (starts, lens), all pids batched.
 
@@ -416,11 +424,15 @@ def _inl_ranges(ds, prim: int, sec: int, qhi, qlo, valid):
     (pid, key + 1).  ``qhi``/``qlo``/``valid`` carry ALL pid groups
     concatenated (k probes per pid), so one source costs exactly two
     pair-search launches regardless of how many pids are probed.
-    Invalid probe rows get zero-length ranges.
+    Invalid probe rows get zero-length ranges.  Tables past
+    ``INL_RESIDENT_MAX`` rows probe through the windowed (merge-path
+    partitioned) search — O(block) VMEM at any table size.
     """
     t_hi, t_lo = ds[:, prim], ds[:, sec]
-    starts = ops.pair_search(t_hi, t_lo, qhi, qlo)
-    ends = ops.pair_search(t_hi, t_lo, qhi, qlo + 1)
+    search = (ops.pair_search_windowed if ds.shape[0] > INL_RESIDENT_MAX
+              else ops.pair_search)
+    starts = search(t_hi, t_lo, qhi, qlo)
+    ends = search(t_hi, t_lo, qhi, qlo + 1)
     lens = jnp.where(valid, jnp.maximum(ends - starts, 0), 0)
     return starts, lens
 
@@ -546,8 +558,13 @@ def _lower_scan(pvars, terms, extra, mode: str):
                       o_sig=o_sig, fused=fused), dyn
 
 
-def join(a: Relation, b: Relation, cap: int) -> Relation:
-    """Sort-merge equi-join on all shared vars (first var = sort key)."""
+def join(a: Relation, b: Relation, cap: int, a_sorted: bool = False) -> Relation:
+    """Sort-merge equi-join on all shared vars (first var = sort key).
+
+    ``a_sorted=True`` asserts the build side already sits in ascending
+    ``shared[0]`` order with invalid rows last (the shard combine produces
+    exactly that via the partitioned-merge kernel), skipping the argsort.
+    """
     shared = [v for v in a.vars if v in b.vars]
     if not shared:
         raise ValueError("cartesian products not supported — reorder the plan")
@@ -555,9 +572,12 @@ def join(a: Relation, b: Relation, cap: int) -> Relation:
 
     # sort build side (a) by key; invalid rows sink
     ka = jnp.where(a.valid, a.col(key), INVALID)
-    aperm = jnp.argsort(ka)
-    a_cols = a.cols[:, aperm]
-    ka_s = ka[aperm]
+    if a_sorted:
+        a_cols, ka_s = a.cols, ka
+    else:
+        aperm = jnp.argsort(ka)
+        a_cols = a.cols[:, aperm]
+        ka_s = ka[aperm]
 
     kb_ = jnp.where(b.valid, b.col(key), INVALID)
     L = jnp.searchsorted(ka_s, kb_, side="left")
@@ -625,11 +645,6 @@ class QueryEngine:
     use_inl: bool = True  # index-nested-loop joins when one side is tiny
     inl_factor: int = 8  # pattern must outweigh the probe side by this much
     inl_max_probe: int = 4096  # never INL above this probe-side estimate
-    # pair_search keeps its table planes VMEM-resident (constant index
-    # maps), so INL is capped at stores that fit comfortably: past this the
-    # planner keeps the merge join (whose partitioned kernels have no
-    # ceiling).  A window-partitioned pair search would lift this (ROADMAP).
-    inl_max_table: int = 1 << 20
     view: StoreView | None = None  # live base+delta view (None: static store)
     _exec_cache: dict = field(default_factory=dict, repr=False)
     cache_stats: dict = field(default_factory=lambda: {"hits": 0, "misses": 0},
@@ -811,6 +826,8 @@ class QueryEngine:
 
     def _pattern_count(self, sig: PatternSig, dyn) -> int:
         """Planning cardinality of a scan pattern (cached jitted reduction)."""
+        if self.view.n == 0:  # empty store (e.g. a fresh shard): no device pass
+            return 0
         key = ("count", sig)
         fn = self._exec_cache.get(key)
         if fn is None:
@@ -923,8 +940,7 @@ class QueryEngine:
         still protect underestimates).
         """
         indexable = (self.use_inl and self.use_index
-                     and self.mode in ("litemat", "full")
-                     and self.view.n <= self.inl_max_table)
+                     and self.mode in ("litemat", "full"))
         if not indexable or len(order) < 2:
             return
         bound = {v for v in prepared[order[0]][0] if v}

@@ -1,0 +1,951 @@
+"""Sharded multi-device stores: the ABox subject-hash partitioned.
+
+LiteMat's headline claim is that the encoding is computed and served by a
+scalable *parallel* algorithm; this module supplies the partitioned store
+layer.  A :class:`ShardedKB` splits every ABox store across ``n_shards``
+shards (one per device when the host has several) while replicating the
+things that make RDFS inference shard-local:
+
+Partitioning invariants
+-----------------------
+  * Every ABox row lives on ``shard_of(subject id)``: raw triples by their
+    subject, *derived* rows by THEIR subject — range-derived type rows
+    ``(o rdf:type C)`` migrate to ``shard(o)`` in the post-materialization
+    exchange, so the subject-hash invariant holds for all three stores
+    (rewrite / litemat / full).
+  * The TBox (interval tables, DeviceTBox) and the term dictionary are
+    REPLICATED: every interval containment test, MSC selection, and
+    closure gather is shard-local; the dictionary grows through ONE shared
+    :class:`DynamicDictionary` whose new-term chunks are absorbed into
+    every shard's ``EncodedKB``.
+  * Each shard is a full single-device :class:`KnowledgeBase` — its own
+    POS/PSO/SPO/OSP :class:`StoreIndex`, :class:`DeviceStoreCache`, and
+    pow2 delta buckets — so the whole incremental lifecycle (insert /
+    delete / compact, version bumps, O(delta) post-mutation warmup) runs
+    per shard, unchanged.
+
+Join locality rules
+-------------------
+Two patterns' matching rows are guaranteed co-resident iff they bind a
+shared variable from their SUBJECT position on both sides (both sides then
+hash the binding to the same shard).  A chain of such links forces one
+common subject variable, so the group planner simply buckets patterns by
+subject variable: each group evaluates *entirely shard-local* through the
+ordinary per-shard ``QueryEngine`` plans (slice / scan / INL, plan caches
+and all).  Cross-group joins — object-keyed, e.g. Q4's ``?y`` — all-gather
+the groups' compacted per-shard relations and combine them with the
+partitioned-merge kernel (``ops.merge_gather`` across shard outputs feeds
+a presorted build side into the sort-merge join).  Rewrite-mode type
+patterns bind ``?x`` from BOTH endpoints (the range branch binds the
+object), so they are never treated as co-hashed.
+
+Execution lowers through ``jax.shard_map`` when the host actually has
+``n_shards`` devices (the CI leg forces 8 with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``): per-shard stores
+stack into ``[n_shards, ...]`` device buffers (a :class:`ShardStack`
+mirrors the per-shard views with O(delta) refresh) and one shard-mapped
+executable runs the group plan on every shard at once.  With fewer
+devices the engine falls back to a per-shard dispatch loop — bit-identical
+results, pinned by tests/test_shard.py.
+
+Bulk ingest (``ShardedKB.ingest``) loads LUBM-100-class synthetic stores
+(~1e7 triples): each part is encoded against the shared dictionary (host
+searchsorted — the driver side of the paper's Spark pipeline), partitioned
+by subject hash, and appended to the per-shard delta logs; lite/full
+derivation happens lazily PER SHARD on first service of a mode, so no
+single device ever materializes the whole store.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.abox import EncodedKB, encode_obe, tbox_term_map
+from repro.core.closure import full_materialize
+from repro.core.delta import DevStore, MODES, _delta_host
+from repro.core.dictionary import table_from_host
+from repro.core.engine import KnowledgeBase, PAPER_QUERIES, _raw_columns
+from repro.core.index import pow2_bucket as _pow2
+from repro.core.materialize import DeviceTBox, compact_rows, lite_materialize
+from repro.core.query import Pattern, Relation, distinct, is_var, join
+from repro.core.tbox import TBox, build_tbox
+from repro.core.update import (
+    DynamicDictionary, affected_instances, encode_delta,
+    materialize_delta_mode, mentions_mask,
+)
+from repro.kernels import ops
+from repro.utils.jaxcompat import make_mesh, shard_map
+
+_EMPTY = np.zeros((0, 3), dtype=np.int32)
+_HASH_MULT = np.uint64(0x9E3779B1)  # Fibonacci multiplicative hash
+
+
+def shard_of(ids, n_shards: int) -> np.ndarray:
+    """Subject id -> shard id (deterministic multiplicative hash).
+
+    Instance ids are dense ranks, so a plain modulo would couple shard
+    choice to allocation order; the golden-ratio multiply decorrelates it.
+    """
+    h = (np.asarray(ids).astype(np.uint64) * _HASH_MULT) >> np.uint64(16)
+    return (h % np.uint64(max(n_shards, 1))).astype(np.int64)
+
+
+def partition_rows(rows: np.ndarray, n_shards: int) -> list:
+    """Split (N, 3) encoded rows into per-shard arrays by subject hash."""
+    rows = np.asarray(rows, dtype=np.int32).reshape(-1, 3)
+    if rows.shape[0] == 0:
+        return [_EMPTY] * n_shards
+    sh = shard_of(rows[:, 0], n_shards)
+    order = np.argsort(sh, kind="stable")
+    rows_s, sh_s = rows[order], sh[order]
+    bounds = np.searchsorted(sh_s, np.arange(n_shards + 1))
+    return [rows_s[bounds[i]:bounds[i + 1]] for i in range(n_shards)]
+
+
+def _exchange(parts_by_src: list, n_shards: int) -> list:
+    """All-to-all: re-partition per-source derived rows by subject hash."""
+    outs = [[] for _ in range(n_shards)]
+    for rows in parts_by_src:
+        for j, pr in enumerate(partition_rows(rows, n_shards)):
+            if pr.shape[0]:
+                outs[j].append(pr)
+    return [np.concatenate(o) if o else _EMPTY for o in outs]
+
+
+# ---------------------------------------------------------------------------
+# ShardedKB: the partitioned KnowledgeBase facade
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ShardedKB:
+    """Subject-hash partitioned KnowledgeBase with replicated TBox/dictionary.
+
+    Mirrors the :class:`KnowledgeBase` surface (query / answers / insert /
+    delete / compact / prewarm / warm_device / sizes) so servers and tests
+    swap between the two; every result is pinned bit-identical to the
+    single-device store in tests/test_shard.py.
+    """
+
+    shards: list  # per-shard KnowledgeBase
+    dtb: DeviceTBox
+    n_shards: int
+    compact_threshold: float = 0.25
+    version: int = 0
+    n_new_terms: int = 0
+    mat_counts: dict = field(
+        default_factory=lambda: {"litemat": 0, "full": 0})
+    _dyn: DynamicDictionary | None = field(default=None, repr=False)
+    _engines: dict = field(default_factory=dict, repr=False)
+    _pending: list = field(default_factory=list, repr=False)  # per-shard parts
+    _mat_cursor: dict = field(
+        default_factory=lambda: {"litemat": 0, "full": 0}, repr=False)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, raw, tbox: TBox | None = None, n_shards: int | None = None,
+              parallel_tbox: bool = False) -> "ShardedKB":
+        """Encode + partition + per-shard materialize (with exchange).
+
+        The encode is the shared driver step (ids identical to the
+        single-device build, so parity tests compare raw id sets); the
+        lite/full materializers then run per shard over that shard's raw
+        partition, and the derived rows are exchanged to THEIR subject's
+        shard.  Per-shard MSC may keep a concept alongside a descendant
+        held by another shard — answer-equivalent under interval
+        evaluation, the same invariant the incremental-insert path pins.
+        """
+        tbox = tbox or build_tbox(raw.onto, parallel=parallel_tbox)
+        n_shards = n_shards or max(jax.device_count(), 1)
+        kbg = encode_obe(raw, tbox)
+        dtb = DeviceTBox.build(tbox)
+        parts = partition_rows(np.asarray(kbg.spo), n_shards)
+
+        skb = cls(shards=[], dtb=dtb, n_shards=n_shards)
+        lite_src, full_src, built = [], [], []
+        for i, part in enumerate(parts):
+            with skb._device_ctx(i):
+                kb_i = EncodedKB(
+                    spo=jnp.asarray(part), tables=kbg.tables, tbox=tbox,
+                    n_instance_terms=kbg.n_instance_terms,
+                    term_strings=kbg.term_strings)
+                if part.shape[0]:
+                    lite, lv, lstats = lite_materialize(kb_i, dtb)
+                    full, fv, fstats = full_materialize(kb_i, dtb)
+                    lite_src.append(np.asarray(compact_rows(lite, lv)))
+                    full_src.append(np.asarray(compact_rows(full, fv)))
+                else:
+                    lstats = fstats = {}
+                    lite_src.append(_EMPTY)
+                    full_src.append(_EMPTY)
+                built.append((kb_i, lstats, fstats))
+        lite_parts = _exchange(lite_src, n_shards)
+        full_parts = _exchange(full_src, n_shards)
+        for i, (kb_i, lstats, fstats) in enumerate(built):
+            with skb._device_ctx(i):
+                K = KnowledgeBase(
+                    kb=kb_i, dtb=dtb,
+                    lite_spo=jnp.asarray(lite_parts[i]),
+                    full_spo=jnp.asarray(full_parts[i]),
+                    lite_stats=lstats, full_stats=fstats)
+                skb.shards.append(K)
+        skb._dyn = DynamicDictionary.from_kb(kbg)
+        for K in skb.shards:
+            K._dyn = skb._dyn  # one replicated growable dictionary
+        return skb
+
+    @classmethod
+    def empty(cls, tbox: TBox, n_shards: int | None = None) -> "ShardedKB":
+        """Shards over an empty ABox — the bulk-ingest starting point."""
+        n_shards = n_shards or max(jax.device_count(), 1)
+        fps, ids = tbox_term_map(tbox)
+        ttable = table_from_host(fps, ids)
+        dtb = DeviceTBox.build(tbox)
+        skb = cls(shards=[], dtb=dtb, n_shards=n_shards)
+        for i in range(n_shards):
+            with skb._device_ctx(i):
+                kb_i = EncodedKB(spo=jnp.asarray(_EMPTY), tables=(ttable,),
+                                 tbox=tbox, n_instance_terms=0)
+                skb.shards.append(KnowledgeBase(
+                    kb=kb_i, dtb=dtb, lite_spo=jnp.asarray(_EMPTY),
+                    full_spo=jnp.asarray(_EMPTY),
+                    lite_stats={}, full_stats={}))
+        skb._dyn = DynamicDictionary.from_kb(skb.shards[0].kb)
+        for K in skb.shards:
+            K._dyn = skb._dyn
+        return skb
+
+    @classmethod
+    def ingest(cls, parts, tbox: TBox | None = None, onto=None,
+               n_shards: int | None = None) -> "ShardedKB":
+        """Bulk-load an iterable of raw parts, never materializing globally.
+
+        Each part (RawDataset or (s, p, o) fingerprint columns) is encoded
+        against the growing replicated dictionary, hash-partitioned by
+        subject, and appended to the per-shard raw logs; per-shard sorted
+        indexes build lazily on first query and lite/full derivation is
+        lazy per mode AND per shard (`_flush` derives each shard's backlog
+        on its own device and exchanges the output) — the ROADMAP's
+        LUBM-100-class loads stay out of single-device memory.
+        """
+        parts = iter(parts)
+        if tbox is None:
+            first = next(parts)
+            tbox = build_tbox(onto or first.onto)
+            parts = iter([first, *parts])
+        skb = cls.empty(tbox, n_shards=n_shards)
+        for part in parts:
+            skb.insert(part, auto_compact=False)
+        return skb
+
+    # -- shard plumbing ------------------------------------------------------
+    @property
+    def kb(self) -> EncodedKB:
+        """Replicated dictionary/TBox handle (shard 0's EncodedKB)."""
+        return self.shards[0].kb
+
+    @property
+    def tbox(self) -> TBox:
+        return self.kb.tbox
+
+    def _device_ctx(self, i: int):
+        devs = jax.devices()
+        return jax.default_device(devs[i % len(devs)])
+
+    def shard_devices(self) -> list:
+        devs = jax.devices()
+        return [devs[i % len(devs)] for i in range(self.n_shards)]
+
+    def _absorb(self, strings=None) -> int:
+        """Fold freshly allocated dictionary terms into EVERY shard."""
+        chunk = self._dyn.take_new_terms()
+        if chunk is None:
+            return 0
+        fps, ids = chunk
+        tbl = table_from_host(fps, ids)
+        for K in self.shards:
+            K.kb.tables = (*K.kb.tables, tbl)
+            K.kb._merged = None
+            K.kb.n_instance_terms += int(ids.shape[0])
+        if strings:
+            if self.kb.term_strings is None:
+                shared = {}  # ONE dict, replicated by reference — every
+                for K in self.shards:  # shard's extract sees every IRI
+                    K.kb.term_strings = shared
+            self.kb.term_strings.update(strings)
+        return int(ids.shape[0])
+
+    # -- lazy per-mode, per-shard derivation ---------------------------------
+    def _flush(self, *modes: str) -> None:
+        """Derive pending insert batches per shard, exchange, append.
+
+        Each shard's share of the backlog is materialized on that shard's
+        device (row-local derivation), then the derived rows are exchanged
+        to their own subject's shard — range-derived type rows migrate,
+        keeping the partition invariant.  Lazy per mode: a lite-only
+        deployment never runs the full closure of its ingest.
+        """
+        n = len(self._pending)
+        for mode in modes:
+            if mode not in self._mat_cursor:
+                continue
+            cur = self._mat_cursor[mode]
+            if cur >= n:
+                continue
+            for parts in self._pending[cur:]:
+                derived_src = []
+                for i, part in enumerate(parts):
+                    if part.shape[0] == 0:
+                        derived_src.append(_EMPTY)
+                        continue
+                    with self._device_ctx(i):
+                        derived_src.append(
+                            materialize_delta_mode(part, self.dtb, mode))
+                for j, rows in enumerate(_exchange(derived_src, self.n_shards)):
+                    self.shards[j].append_derived(mode, rows)
+                self.mat_counts[mode] += 1
+            self._mat_cursor[mode] = n
+            for K in self.shards:
+                K._bump()
+        if self._pending and all(
+                c >= n for c in self._mat_cursor.values()):
+            self._pending.clear()
+            self._mat_cursor = {m: 0 for m in self._mat_cursor}
+
+    def _pending_rows(self, mode: str) -> int:
+        if mode not in self._mat_cursor:
+            return 0
+        return sum(sum(int(p.shape[0]) for p in parts)
+                   for parts in self._pending[self._mat_cursor[mode]:])
+
+    # -- mutations -----------------------------------------------------------
+    @property
+    def delta_ratio(self) -> float:
+        num = sum(self._pending_rows(m) for m in ("litemat", "full"))
+        den = 0
+        for K in self.shards:
+            sizes = {"rewrite": K.kb.n,
+                     "litemat": int(K.lite_spo.shape[0]),
+                     "full": int(K.full_spo.shape[0])}
+            den += sum(sizes.values())
+            if K._delta is not None:
+                for m in MODES:
+                    num += K._delta.logs[m].n
+                    if K._delta.base_alive[m] is not None:
+                        num += sizes[m] - int(K._delta.base_alive[m].sum())
+        return num / max(den, 1)
+
+    def insert(self, raw, auto_compact: bool = True) -> dict:
+        """Encode once (replicated dictionary), partition, append per shard."""
+        s_fp, p_fp, o_fp, strings = _raw_columns(raw)
+        if s_fp.shape[0] == 0:
+            return dict(n_inserted=0, n_new_terms=0)
+        spo, n_new = encode_delta(self._dyn, s_fp, p_fp, o_fp)
+        self._absorb(strings)
+        parts = partition_rows(spo, self.n_shards)
+        for i, part in enumerate(parts):
+            if part.shape[0]:
+                with self._device_ctx(i):
+                    self.shards[i].append_raw(part)
+            self.shards[i]._bump()
+        self._pending.append(parts)
+        self.n_new_terms += n_new
+        self.version += 1
+        stats = dict(
+            n_inserted=int(spo.shape[0]), n_new_terms=n_new,
+            n_pending_mat=sum(
+                self._pending_rows(m) for m in ("litemat", "full")),
+            delta_ratio=round(self.delta_ratio, 4), version=self.version,
+        )
+        if auto_compact and self.delta_ratio > self.compact_threshold:
+            stats["compacted"] = self.compact()
+        return stats
+
+    def delete(self, raw, auto_compact: bool = True) -> dict:
+        """Coordinated delete: local tombstones, global repair frontier.
+
+        Raw kills are shard-local (the triples live on their subject's
+        shard); the affected-instance set is global, so every shard
+        tombstones its derived mentions and contributes its live raw
+        mentions to the frontier; the re-derived rows are exchanged back
+        to their subjects' shards — the same exact-repair argument as the
+        single-store delete, distributed.
+        """
+        s_fp, p_fp, o_fp, _ = _raw_columns(raw)
+        if s_fp.shape[0] == 0:
+            return dict(n_deleted=0)
+        self._flush("litemat", "full")
+        ids = np.stack([self._dyn.lookup(s_fp), self._dyn.lookup(p_fp),
+                        self._dyn.lookup(o_fp)], axis=1)
+        q = ids[(ids >= 0).all(axis=1)]
+        deleted = []
+        for i, part in enumerate(partition_rows(q, self.n_shards)):
+            if part.shape[0]:
+                with self._device_ctx(i):
+                    d = self.shards[i].kill_raw_rows(part)
+                if d.shape[0]:
+                    deleted.append(d)
+        if not deleted:
+            return dict(n_deleted=0)
+        deleted = np.concatenate(deleted)
+        inst = affected_instances(deleted, self.tbox.instance_base)
+
+        frontier_src = []
+        for i, K in enumerate(self.shards):
+            with self._device_ctx(i):
+                K.kill_derived_mentions(inst)
+                frontier_src.append(K.live_raw_mentions(inst))
+        for mode in ("litemat", "full"):
+            derived_src = []
+            for i, rows in enumerate(frontier_src):
+                if rows.shape[0] == 0:
+                    derived_src.append(_EMPTY)
+                    continue
+                with self._device_ctx(i):
+                    derived = materialize_delta_mode(rows, self.dtb, mode)
+                    derived_src.append(derived[mentions_mask(derived, inst)])
+            for j, rows in enumerate(_exchange(derived_src, self.n_shards)):
+                self.shards[j].append_derived(mode, rows)
+        for K in self.shards:
+            K._bump()
+        self.version += 1
+        stats = dict(
+            n_deleted=int(deleted.shape[0]),
+            n_affected_instances=int(inst.shape[0]),
+            delta_ratio=round(self.delta_ratio, 4), version=self.version,
+        )
+        if auto_compact and self.delta_ratio > self.compact_threshold:
+            stats["compacted"] = self.compact()
+        return stats
+
+    def compact(self, device: bool | None = None) -> dict:
+        """Fold every shard's overlay into fresh per-shard bases."""
+        if (all(K._delta is None or K._delta.empty for K in self.shards)
+                and not self._pending):
+            return dict(compacted=False)
+        self._flush("litemat", "full")
+        sizes = {m: 0 for m in MODES}
+        for i, K in enumerate(self.shards):
+            with self._device_ctx(i):
+                out = K.compact(device=device)
+            for m in MODES:
+                sizes[m] += int(out.get(m, 0))
+        self.version += 1
+        return dict(compacted=True, version=self.version, **sizes)
+
+    # -- query surface -------------------------------------------------------
+    def engine(self, mode: str = "litemat",
+               use_index: bool = True) -> "ShardedQueryEngine":
+        key = (mode, use_index)
+        if key not in self._engines:
+            self._engines[key] = ShardedQueryEngine(
+                skb=self, mode=mode, use_index=use_index)
+        return self._engines[key]
+
+    def query(self, patterns, select=None, mode: str = "litemat",
+              use_index: bool = True):
+        return self.engine(mode, use_index).run(patterns, select=select)
+
+    def answers(self, patterns, select=None, mode: str = "litemat",
+                use_index: bool = True) -> set:
+        rows, _ = self.query(patterns, select=select, mode=mode,
+                             use_index=use_index)
+        return {tuple(r) for r in rows.tolist()}
+
+    def prewarm(self, queries=None, modes=("litemat",), buckets=(),
+                use_index: bool = True) -> int:
+        queries = (list(queries) if queries is not None
+                   else list(PAPER_QUERIES.values()))
+        return sum(self.engine(m, use_index).prewarm(queries, buckets=buckets)
+                   for m in modes)
+
+    def warm_device(self, mode: str = "litemat", keys=("scan", "pos")):
+        """Per-shard device warmup (the O(delta)-per-shard unit)."""
+        if mode in ("litemat", "full"):
+            self._flush(mode)
+        out = []
+        for i, K in enumerate(self.shards):
+            with self._device_ctx(i):
+                out.append(K.warm_device(mode, keys=keys))
+        return out
+
+    def store_rows(self, mode: str = "litemat") -> np.ndarray:
+        """Live rows of one store, all shards concatenated (host order)."""
+        if mode in ("litemat", "full"):
+            self._flush(mode)
+        return np.concatenate(
+            [np.asarray(K.store_rows(mode)) for K in self.shards])
+
+    def sizes(self) -> dict:
+        out = {"original": 0, "lite": 0, "full": 0}
+        for K in self.shards:
+            s = K.sizes()
+            out["original"] += s["original"]
+            out["lite"] += s["lite"]
+            out["full"] += s["full"]
+        pending = sum(self._pending_rows(m) for m in ("litemat", "full"))
+        delta = sum(K._delta.logs[m].n for K in self.shards
+                    for m in MODES if K._delta is not None)
+        if delta:
+            out["delta_rows"] = delta
+        if pending:
+            out["delta_rows_pending_mat"] = pending
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Group planning: which joins stay shard-local
+# ---------------------------------------------------------------------------
+
+
+def _is_type_pattern(pat: Pattern, tbox) -> bool:
+    return (not is_var(pat.p)) and (
+        pat.p in ("rdf:type", "a") or pat.p == tbox.rdf_type_id)
+
+
+def plan_groups(patterns, mode: str, tbox) -> list:
+    """Bucket pattern indices by co-hashed subject variable.
+
+    A pattern binds its subject variable from the co-hashed subject column
+    — EXCEPT rewrite-mode type patterns, whose range branch binds the
+    object — so patterns sharing a subject variable evaluate and join
+    entirely shard-local; everything else is a singleton group combined
+    globally.
+    """
+    groups: dict = {}
+    for idx, pat in enumerate(patterns):
+        local = is_var(pat.s) and not (
+            mode == "rewrite" and _is_type_pattern(pat, tbox)
+            and not is_var(pat.o))
+        key = ("var", pat.s) if local else ("solo", idx)
+        groups.setdefault(key, []).append(idx)
+    return list(groups.values())
+
+
+def _merge_shard_parts(parts: list, key_col: int):
+    """Fold per-shard result rows into one key-sorted array on device.
+
+    Each shard's rows sort locally (small — post-distinct relations), then
+    fold pairwise through ``ops.merge_gather`` — the partitioned-merge
+    kernel across shard outputs — so the combined relation arrives
+    presorted for the join's build side without a global re-sort.
+    """
+    live = [p for p in parts if p.shape[0]]
+    if not live:
+        return np.zeros((0, parts[0].shape[1]), np.int32)
+    live = [p[np.argsort(p[:, key_col], kind="stable")] for p in live]
+    cur = jnp.asarray(live[0])
+    cur_key = cur[:, key_col]
+    for nxt_h in live[1:]:
+        nxt = jnp.asarray(nxt_h)
+        nxt_key = nxt[:, key_col]
+        z = jnp.zeros_like(cur_key)
+        zn = jnp.zeros_like(nxt_key)
+        g = ops.merge_gather(cur_key, z, nxt_key, zn)
+        cur = ops.two_source_gather(cur, nxt, g)
+        cur_key = cur[:, key_col]
+    return np.asarray(cur)
+
+
+def _host_relation(gvars: tuple, rows: np.ndarray, cap: int) -> Relation:
+    """(N, k) host rows -> INVALID-padded device Relation of capacity cap."""
+    n = rows.shape[0]
+    cols = np.full((len(gvars), cap), np.iinfo(np.int32).max, np.int32)
+    cols[:, :n] = rows.T
+    return Relation(
+        vars=gvars, cols=jnp.asarray(cols),
+        valid=jnp.arange(cap) < n, overflow=jnp.int32(max(n - cap, 0)))
+
+
+# ---------------------------------------------------------------------------
+# ShardStack: stacked [n_shards, ...] device buffers for shard_map plans
+# ---------------------------------------------------------------------------
+
+
+class ShardStack:
+    """Per-key stacked device buffers mirroring every shard's StoreView.
+
+    The shard_map executables take ONE array per view key with a leading
+    shard axis; this cache keeps those stacks resident and refreshes them
+    with work independent of the base sizes: delta buckets re-upload
+    O(n_shards * delta cap) rows, base tombstones land as point scatters,
+    and base slabs re-upload only when a shard's base token changes
+    (compaction) or the common pow2 capacity grows.
+    """
+
+    def __init__(self):
+        self._states: dict = {}
+        self.stats = {"base_rebuilds": 0, "upload_base_rows": 0,
+                      "upload_delta_rows": 0, "kill_scatter_rows": 0}
+
+    def _base_host(self, view, key):
+        if key == "scan":
+            return np.asarray(view.base_h)
+        return view.base_index._h[view.base_index.perm(key).perm]
+
+    def sync(self, views: list, key: str):
+        S = len(views)
+        ncap = _pow2(max(v.base_n for v in views))
+        has_delta = any(v.has_delta for v in views)
+        dcap = _pow2(max(v.delta_n for v in views)) if has_delta else 0
+        tokens = tuple(v.base_index.token for v in views)
+        st = self._states.get(key)
+
+        if st is None or st["ncap"] != ncap or st["tokens"] != tokens:
+            self.stats["base_rebuilds"] += 1
+            base = np.full((S, ncap, 3), np.iinfo(np.int32).max, np.int32)
+            alive = np.zeros((S, ncap), bool)
+            for i, v in enumerate(views):
+                h = self._base_host(v, key)
+                base[i, :h.shape[0]] = h
+                if v.base_alive_h is None:
+                    alive[i, :h.shape[0]] = True
+                else:
+                    ah = (v.base_alive_h if key == "scan"
+                          else v.base_alive_h[v.base_index.perm(key).perm])
+                    alive[i, :ah.shape[0]] = ah
+                self.stats["upload_base_rows"] += int(h.shape[0])
+            st = {"ncap": ncap, "tokens": tokens,
+                  "base": jnp.asarray(base), "alive": jnp.asarray(alive),
+                  "n_kills": [len(v.kills) for v in views],
+                  "dcap": -1, "delta": None, "dalive": None,
+                  "dstate": [None] * S}
+            self._states[key] = st
+        else:
+            for i, v in enumerate(views):
+                if len(v.kills) > st["n_kills"][i]:
+                    idx = np.concatenate(v.kills[st["n_kills"][i]:])
+                    if key != "scan":
+                        idx = v.base_index.inv_perm(key)[idx]
+                    pad = _pow2(idx.shape[0])
+                    full = np.full(pad, ncap, np.int64)
+                    full[:idx.shape[0]] = idx
+                    st["alive"] = st["alive"].at[
+                        i, jnp.asarray(full.astype(np.int32))].set(
+                        False, mode="drop")
+                    self.stats["kill_scatter_rows"] += int(idx.shape[0])
+                    st["n_kills"][i] = len(v.kills)
+
+        dstate = [(v.delta_n, v.delta_mut) for v in views]
+        if dcap != st["dcap"] or dstate != st["dstate"]:
+            if not has_delta:
+                st["delta"] = st["dalive"] = None
+            else:
+                drows = np.full((S, dcap, 3), np.iinfo(np.int32).max,
+                                np.int32)
+                dalive = np.zeros((S, dcap), bool)
+                for i, v in enumerate(views):
+                    if not v.has_delta:
+                        continue
+                    rows, al = _delta_host(v, key)
+                    drows[i, :rows.shape[0]] = rows
+                    dalive[i, :al.shape[0]] = al
+                    self.stats["upload_delta_rows"] += dcap
+                st["delta"] = jnp.asarray(drows)
+                st["dalive"] = jnp.asarray(dalive)
+            st["dcap"] = dcap
+            st["dstate"] = dstate
+        return DevStore(base=st["base"], base_alive=st["alive"],
+                        delta=st["delta"], delta_alive=st["dalive"])
+
+
+# ---------------------------------------------------------------------------
+# ShardedQueryEngine: group-local plans, global combine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ShardedQueryEngine:
+    """Executes conjunctive plans across a ShardedKB's shards.
+
+    Subject-co-hashed groups run the full per-shard QueryEngine plans —
+    through ONE shard_mapped executable when the host has a device per
+    shard (per-shard sigs must agree; capacities unify to the max), else a
+    per-shard dispatch loop (async across devices).  Cross-group joins
+    all-gather the per-shard relations, fold them key-sorted with the
+    partitioned-merge kernel, and finish with the ordinary sort-merge join
+    + distinct — bit-identical to the single-store engine.
+    """
+
+    skb: ShardedKB
+    mode: str = "litemat"
+    use_index: bool = True
+    use_shard_map: bool | None = None  # None: auto (device per shard)
+    _exec_cache: dict = field(default_factory=dict, repr=False)
+    _stacks: dict = field(default_factory=dict, repr=False)
+    _mesh: object = field(default=None, repr=False)
+    cache_stats: dict = field(
+        default_factory=lambda: {"hits": 0, "misses": 0,
+                                 "shard_map_runs": 0, "loop_runs": 0},
+        repr=False)
+
+    def _engines(self):
+        return [K.engine(self.mode, self.use_index) for K in self.skb.shards]
+
+    def _shard_map_on(self) -> bool:
+        if self.use_shard_map is not None:
+            return self.use_shard_map
+        return jax.device_count() >= self.skb.n_shards > 1
+
+    def prewarm(self, queries, buckets=(), select=None) -> int:
+        n = 0
+        if self.mode in ("litemat", "full"):
+            self.skb._flush(self.mode)  # derive backlog: plans must see
+        for pats in queries:  # the stores run() will execute against
+            groups = plan_groups(pats, self.mode, self.skb.tbox)
+            for g in groups:
+                gpats = [pats[i] for i in g]
+                gvars = _group_vars(gpats)
+                for i, eng in enumerate(self._engines()):
+                    if self.skb.shards[i].view(self.mode).n == 0:
+                        continue
+                    with self.skb._device_ctx(i):
+                        n += eng.prewarm([gpats], buckets=buckets,
+                                         select=gvars)
+                if self._shard_map_on():
+                    # the multi-device run() path executes the shard_mapped
+                    # executable, not the per-shard plans — compile it too
+                    before = self.cache_stats["misses"]
+                    self._run_group_shard_map(gpats, gvars)
+                    n += self.cache_stats["misses"] - before
+        return n
+
+    # -- group evaluation ----------------------------------------------------
+    def _route_shards(self, gpats):
+        """Constant-subject singleton groups touch only their owner shard."""
+        if len(gpats) == 1 and not is_var(gpats[0].s):
+            engines = self._engines()
+            try:
+                t = engines[0]._resolve(
+                    gpats[0].s, "s",
+                    _is_type_pattern(gpats[0], self.skb.tbox))
+            except KeyError:
+                return list(range(self.skb.n_shards))
+            if t.hi == t.lo + 1 and not t.spills and t.members is None:
+                return [int(shard_of(np.asarray([t.lo]),
+                                     self.skb.n_shards)[0])]
+        return list(range(self.skb.n_shards))
+
+    def _run_group_loop(self, gpats, gvars):
+        """Per-shard dispatch: each shard's own engine runs the group plan."""
+        self.cache_stats["loop_runs"] += 1
+        engines = self._engines()
+        parts = []
+        for i in self._route_shards(gpats):
+            if self.skb.shards[i].view(self.mode).n == 0:
+                continue
+            with self.skb._device_ctx(i):
+                rows, _ = engines[i].run(gpats, select=gvars)
+            if rows.shape[0]:
+                parts.append(np.asarray(rows, dtype=np.int32))
+        return parts
+
+    def _run_group_shard_map(self, gpats, gvars):
+        """One shard_mapped executable evaluating the group plan per shard.
+
+        Returns None (caller falls back to the loop) when per-shard plans
+        disagree on signatures — data-dependent strategy choices (single-
+        predicate-run detection, INL conversion) can differ across shards.
+        """
+        engines = self._engines()
+        plans = []
+        for i, eng in enumerate(engines):
+            with self.skb._device_ctx(i):
+                plans.append(eng._plan(gpats, gvars))
+        sigs0 = plans[0][0]
+        if any(p[0] != sigs0 for p in plans[1:]):
+            return None
+        caps = tuple(max(p[2][j] for p in plans)
+                     for j in range(len(plans[0][2])))
+        join_cap = max(p[3] for p in plans)
+        sel = plans[0][4]
+        views = [K.view(self.mode) for K in self.skb.shards]
+        ncap = _pow2(max(v.base_n for v in views))
+        # slice-plan ranges address each shard's [real base | delta]
+        # combined coordinates; the stacked slabs pad every base to ncap
+        # rows, so per-shard delta ranges shift to start at ncap
+        dyns_h = []
+        for p, v in zip(plans, views):
+            dyn = list(p[1])
+            for j, sig in enumerate(sigs0):
+                if sig.strategy == "slice" and v.base_n < ncap:
+                    d = dict(dyn[j])
+                    d["starts"] = jnp.where(
+                        d["starts"] >= v.base_n,
+                        d["starts"] + (ncap - v.base_n), d["starts"])
+                    dyn[j] = d
+            dyns_h.append(tuple(dyn))
+        for _ in range(6):
+            stores = {}
+            for k in {s.store for s in sigs0 if s.strategy in ("slice", "inl")}:
+                stores[k] = self._stack(k).sync(views, k)
+            if any(s.strategy == "scan" for s in sigs0):
+                stores["scan"] = self._stack("scan").sync(views, "scan")
+            has_delta = stores[next(iter(stores))].delta is not None
+            dyns = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *dyns_h)
+            fn = self._sm_executable(sigs0, caps, join_cap, sel, has_delta)
+            cols, valid, overflow = fn(stores, dyns)
+            if int(jnp.max(overflow)) == 0:
+                self.cache_stats["shard_map_runs"] += 1
+                parts = []
+                for i in range(self.skb.n_shards):
+                    n = int(valid[i].sum())
+                    if n:
+                        parts.append(np.asarray(cols[i])[:, :n].T.astype(
+                            np.int32))
+                return parts
+            caps = tuple(c * 2 for c in caps)
+            join_cap *= 2
+        raise RuntimeError("sharded query kept overflowing its buckets")
+
+    def _stack(self, key: str) -> ShardStack:
+        if key not in self._stacks:
+            self._stacks[key] = ShardStack()
+        return self._stacks[key]
+
+    def _sm_executable(self, sigs, caps, join_cap, sel, has_delta):
+        from repro.core.query import _eval_inl, _eval_pattern
+
+        key = ("sm", sigs, caps, join_cap, sel, has_delta)
+        fn = self._exec_cache.get(key)
+        if fn is not None:
+            self.cache_stats["hits"] += 1
+            return fn
+        self.cache_stats["misses"] += 1
+        if self._mesh is None:
+            self._mesh = make_mesh((self.skb.n_shards,), ("shard",))
+
+        def body(stores, dyns):
+            st1 = {k: DevStore(
+                base=v.base[0], base_alive=v.base_alive[0],
+                delta=None if v.delta is None else v.delta[0],
+                delta_alive=(None if v.delta_alive is None
+                             else v.delta_alive[0]))
+                for k, v in stores.items()}
+            dyns1 = jax.tree_util.tree_map(lambda x: x[0], dyns)
+            rel = None
+            for sig, cap, dyn in zip(sigs, caps, dyns1):
+                if sig.strategy == "inl":
+                    rel = _eval_inl(sig, cap, st1, dyn, rel)
+                    continue
+                r, _ = _eval_pattern(sig, cap, st1, dyn)
+                rel = r if rel is None else join(rel, r, join_cap)
+            out = distinct(rel, sel, join_cap)
+            return out.cols[None], out.valid[None], out.overflow[None]
+
+        f = shard_map(body, mesh=self._mesh,
+                      in_specs=(P("shard"), P("shard")),
+                      out_specs=(P("shard"), P("shard"), P("shard")),
+                      check_vma=False)
+        fn = jax.jit(f)
+        self._exec_cache[key] = fn
+        return fn
+
+    def _run_group(self, gpats, gvars):
+        if self._shard_map_on():
+            parts = self._run_group_shard_map(gpats, gvars)
+            if parts is not None:
+                return parts
+        return self._run_group_loop(gpats, gvars)
+
+    # -- the full query ------------------------------------------------------
+    def run(self, patterns, select=None, max_retries: int = 6):
+        """Execute; returns (rows int32[k, n_select], select var names).
+
+        Same contract as QueryEngine.run: rows are DISTINCT bindings of the
+        selected variables, in the global lexicographic order the distinct
+        pass produces — bit-identical to the single-device engine given the
+        same ``select``.
+        """
+        patterns = list(patterns)
+        if self.mode in ("litemat", "full"):
+            self.skb._flush(self.mode)
+        groups = plan_groups(patterns, self.mode, self.skb.tbox)
+        evaluated = []
+        for g in groups:
+            gpats = [patterns[i] for i in g]
+            gvars = _group_vars(gpats)
+            evaluated.append((gvars, self._run_group(gpats, gvars)))
+
+        all_vars = tuple(dict.fromkeys(
+            v for pat in patterns for v in (pat.s, pat.p, pat.o)
+            if is_var(v)))
+        sel = tuple(select) if select else all_vars
+
+        # combine: fold groups through presorted merge joins, then one
+        # global distinct (cross-shard duplicates of object-keyed bindings
+        # collapse here)
+        order = sorted(range(len(evaluated)),
+                       key=lambda i: sum(p.shape[0] for p in evaluated[i][1]))
+        acc = None
+        done = set()
+        while len(done) < len(order):
+            pick = None
+            for i in order:
+                if i in done:
+                    continue
+                gvars = evaluated[i][0]
+                if acc is None or set(gvars) & set(acc.vars):
+                    pick = i
+                    break
+            if pick is None:
+                raise ValueError(
+                    "cartesian products not supported — reorder the plan")
+            done.add(pick)
+            gvars, parts = evaluated[pick]
+            total = sum(p.shape[0] for p in parts)
+            if acc is None:
+                cap = _pow2(total, floor=256)
+                rows = (np.concatenate(parts) if parts
+                        else np.zeros((0, len(gvars)), np.int32))
+                acc = _host_relation(gvars, rows, cap)
+                continue
+            key = next(v for v in gvars if v in acc.vars)
+            merged = _merge_shard_parts(
+                parts, gvars.index(key)) if parts else np.zeros(
+                (0, len(gvars)), np.int32)
+            rel = _host_relation(gvars, merged, _pow2(total, floor=256))
+            jcap = _pow2(max(total, _acc_rows(acc), 1) * 2, floor=256)
+            for _ in range(max_retries):
+                out = join(rel, acc, jcap, a_sorted=True)
+                if int(out.overflow) == 0:
+                    break
+                jcap *= 2
+            else:
+                raise RuntimeError("sharded join kept overflowing")
+            acc = out
+        out = distinct(acc, sel, _pow2(_acc_rows(acc), floor=256))
+        n = int(out.valid.sum())
+        rows = np.asarray(out.cols)[:, :n].T
+        return rows, sel
+
+
+def _acc_rows(rel: Relation) -> int:
+    return int(rel.valid.sum())
+
+
+def _group_vars(gpats) -> tuple:
+    return tuple(dict.fromkeys(
+        v for pat in gpats for v in (pat.s, pat.p, pat.o) if is_var(v)))
+
+
+def assert_partitioned(skb: ShardedKB) -> None:
+    """Test hook: every live row of every store sits on its subject's shard."""
+    for mode in MODES:
+        skb._flush(mode) if mode in ("litemat", "full") else None
+        for i, K in enumerate(skb.shards):
+            rows = np.asarray(K.store_rows(mode))
+            if rows.shape[0] == 0:
+                continue
+            sh = shard_of(rows[:, 0], skb.n_shards)
+            assert (sh == i).all(), (mode, i, rows[sh != i][:5])
+
+
+__all__ = ["ShardedKB", "ShardedQueryEngine", "ShardStack", "shard_of",
+           "partition_rows", "plan_groups", "assert_partitioned"]

@@ -16,8 +16,6 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.closure_expand import closure_expand_pallas
-from repro.kernels.ell_spmm import ell_spmm_pallas
-from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.interval_filter import interval_filter_pallas
 from repro.kernels.merge_sorted import (
     merge_path_pallas, merge_path_partitioned_pallas,
@@ -69,6 +67,9 @@ def auto_block(n: int) -> int:
 def _pad1(x, m, fill):
     n = x.shape[0]
     p = (-n) % m
+    if n == 0:
+        p = m  # empty inputs still launch one (all-padding) tile: kernel
+        # grids must be non-empty, and a delta-only store has a 0-row base
     if p == 0:
         return x
     return jnp.concatenate([x, jnp.full((p, *x.shape[1:]), fill, x.dtype)])
@@ -104,25 +105,6 @@ def closure_expand(conc, sorted_ids, anc_table, block: int = 1024):
     return out[:n]
 
 
-@jax.jit
-def embedding_bag(table, indices):
-    """Bag-sum lookup; table f32[V, E], indices int32[B, L] (-1 pad) -> f32[B, E]."""
-    return embedding_bag_pallas(table, indices, interpret=_interpret())
-
-
-@jax.jit
-def embedding_bag_mean(table, indices):
-    s = embedding_bag(table, indices)
-    cnt = jnp.maximum((indices >= 0).sum(axis=1, keepdims=True), 1).astype(table.dtype)
-    return s / cnt
-
-
-@jax.jit
-def ell_spmm(x, neighbors, weights):
-    """Padded-neighbor SpMM; x f32[Ns,F], nbr int32[N,K], w f32[N,K] -> f32[N,F]."""
-    return ell_spmm_pallas(x, neighbors, weights, interpret=_interpret())
-
-
 @partial(jax.jit, static_argnames=("block",))
 def pair_search(table_hi, table_lo, qhi, qlo, block: int = 1024):
     """Lexicographic binary search (left); -> int32 positions."""
@@ -133,6 +115,38 @@ def pair_search(table_hi, table_lo, qhi, qlo, block: int = 1024):
     out = pair_search_pallas(table_hi, table_lo, ph, pl_, block=block,
                              interpret=_interpret())
     return out[:n]
+
+
+@partial(jax.jit, static_argnames=("block",))
+def pair_search_windowed(table_hi, table_lo, qhi, qlo, block: int = 1024):
+    """Lexicographic binary search with NO whole-table VMEM residency.
+
+    ``pair_search`` keeps both table planes VMEM-resident (constant index
+    maps) — fine up to ~1M rows, the ceiling that used to disqualify the
+    index-nested-loop join on large stores.  This path re-expresses the
+    batch search as a stable merge, reusing the diagonal-partitioned
+    merge-path kernel: sort the queries (the probe side is small), merge
+    the sorted query run against the table run (per-tile DMA'd windows,
+    O(block) VMEM at any table size), and read each query's position off
+    its merge slot — query rank ``r`` landing at merged slot ``i`` has
+    exactly ``i - r`` table keys before it.  Ties keep queries before
+    equal table keys (run A first), so positions match the 'left' contract
+    of ``pair_search`` / ``ref.ref_pair_search`` bit-exactly.
+    """
+    n = qhi.shape[0]
+    perm = jnp.lexsort((qlo, qhi))
+    qh_s, ql_s = qhi[perm], qlo[perm]
+    pad = max(block - n, 0)  # static: >= block queries forces the
+    if pad:  # partitioned dispatch whenever the table reaches block too
+        qh_s = jnp.concatenate([qh_s, jnp.full((pad,), INVALID, jnp.int32)])
+        ql_s = jnp.concatenate([ql_s, jnp.full((pad,), INVALID, jnp.int32)])
+    nq = n + pad
+    g = merge_gather(qh_s, ql_s, table_hi, table_lo, block=block)
+    idx = jnp.arange(g.shape[0], dtype=jnp.int32)
+    slots = jnp.zeros((nq,), jnp.int32).at[
+        jnp.where(g < nq, g, nq)].set(idx, mode="drop")
+    pos = slots - jnp.arange(nq, dtype=jnp.int32)
+    return jnp.zeros((n,), jnp.int32).at[perm].set(pos[:n])
 
 
 @partial(jax.jit, static_argnames=("block",))
@@ -292,10 +306,9 @@ def masked_interval_compact(p, o, alive, params, cap: int, block: int = 512):
 
 
 __all__ = [
-    "interval_filter", "msc_select", "closure_expand",
-    "embedding_bag", "embedding_bag_mean", "ell_spmm", "pair_search",
-    "compact_indices", "dual_compact_indices", "interval_compact",
-    "masked_interval_compact", "merge_gather", "two_source_gather",
-    "segment_positions", "auto_block", "LARGE_BLOCK",
+    "interval_filter", "msc_select", "closure_expand", "pair_search",
+    "pair_search_windowed", "compact_indices", "dual_compact_indices",
+    "interval_compact", "masked_interval_compact", "merge_gather",
+    "two_source_gather", "segment_positions", "auto_block", "LARGE_BLOCK",
     "pass_counters", "reset_pass_counters", "ref",
 ]

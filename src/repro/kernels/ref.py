@@ -51,26 +51,6 @@ def ref_closure_expand(conc, sorted_ids, anc_table):
     return jnp.where(hit[:, None], anc_table[pos], -1)
 
 
-def ref_embedding_bag(table, indices, mode: str = "sum"):
-    """Bags of fixed width L with -1 padding: out[b] = reduce(table[idx])."""
-    valid = indices >= 0
-    rows = table[jnp.clip(indices, 0, table.shape[0] - 1)]  # (B, L, E)
-    rows = rows * valid[..., None].astype(table.dtype)
-    out = rows.sum(axis=1)
-    if mode == "mean":
-        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(table.dtype)
-        out = out / cnt
-    return out
-
-
-def ref_ell_spmm(x, neighbors, weights):
-    """Padded-neighbor SpMM: out[n] = sum_k w[n,k] * x[nbr[n,k]] (-1 pad)."""
-    valid = neighbors >= 0
-    rows = x[jnp.clip(neighbors, 0, x.shape[0] - 1)]  # (N, K, F)
-    w = jnp.where(valid, weights, 0.0).astype(x.dtype)
-    return (rows * w[..., None]).sum(axis=1)
-
-
 def ref_stream_compact(mask, block: int):
     """Tile-local stable compaction: (global match indices, per-tile counts).
 

@@ -24,7 +24,6 @@ from repro.models.gnn import gat as gat_lib
 from repro.models.gnn import gatedgcn as ggcn_lib
 from repro.models.gnn import schnet as schnet_lib
 from repro.models.gnn.common import cross_entropy_nodes, seg_sum
-from repro.models.recsys import mind as mind_lib
 from repro.train.optimizer import init_opt_state
 
 F32 = jnp.float32
@@ -240,50 +239,6 @@ def _gnn_cell(mod, shape_id, mesh, overrides=None) -> Cell:
                 meta=dict(n_nodes=N, n_edges=E))
 
 
-# ---------------------------------------------------------------------------
-# recsys cells
-# ---------------------------------------------------------------------------
-
-
-def _recsys_cell(mod, shape_id, mesh, overrides=None) -> Cell:
-    from repro.configs.shapes import RECSYS_SHAPES
-
-    shp = RECSYS_SHAPES[shape_id]
-    cfg = _apply_overrides(mod.full_config(), overrides)
-    key = jax.random.key(0)
-    params_shape = jax.eval_shape(lambda k: mind_lib.init_params(k, cfg), key)
-    pspecs = shd.recsys_param_specs(params_shape, mesh)
-    B = shp["batch"]
-    K, D, L = cfg.n_interests, cfg.embed_dim, cfg.hist_len
-    route_flops = 2 * B * L * D * D + cfg.capsule_iters * 4 * B * L * K * D
-
-    if shp["kind"] == "train":
-        batch = {"hist": sds((B, L), I32), "target": sds((B,), I32)}
-        bspecs = {"hist": P(dp_axes(mesh), None), "target": P(dp_axes(mesh))}
-        fn = mind_lib.make_train_step(cfg)
-        flops = 3.0 * (route_flops + 2 * B * B * D)  # + in-batch softmax
-        return Cell(mod.ARCH_ID, shape_id, "recsys", "train", fn,
-                    (params_shape, batch), (pspecs, bspecs),
-                    model_flops=flops, meta=dict(batch=B))
-    C = _pad_up(shp["n_candidates"], int(mesh.devices.size))
-    args = (
-        params_shape,
-        sds((B, L), I32),  # hist
-        sds((C,), I32),  # candidate ids
-        sds((C,), I32),  # candidate LiteMat category ids
-        sds((), I32), sds((), I32),  # category interval
-    )
-    hist_spec = P(dp_axes(mesh), None) if B >= 32 else P()
-    specs = (pspecs, hist_spec, P(all_axes(mesh)), P(all_axes(mesh)), P(), P())
-    if getattr(cfg, "serve_impl", "gather") == "sharded_topk":
-        fn = mind_lib.make_serve_step_sharded(cfg, mesh)
-    else:
-        fn = mind_lib.make_serve_step(cfg)
-    flops = route_flops + 2 * B * C * K * D
-    return Cell(mod.ARCH_ID, shape_id, "recsys", "serve", fn, args, specs,
-                model_flops=flops, meta=dict(batch=B, candidates=C))
-
-
 def build_cell(arch_id: str, shape_id: str, mesh, variant: str | None = None) -> Cell:
     mod = get_arch(arch_id)
     overrides = None
@@ -295,4 +250,4 @@ def build_cell(arch_id: str, shape_id: str, mesh, variant: str | None = None) ->
         return _lm_cell(mod, shape_id, mesh, overrides)
     if mod.FAMILY == "gnn":
         return _gnn_cell(mod, shape_id, mesh, overrides)
-    return _recsys_cell(mod, shape_id, mesh, overrides)
+    raise KeyError(f"unknown cell family {mod.FAMILY!r}")

@@ -1,7 +1,7 @@
 """Sharding rules per model family (GSPMD PartitionSpecs).
 
 LM: FSDP over the data-parallel axes + tensor/expert parallel over 'model'.
-GNN: edge/node row sharding.  recsys: row-sharded embedding tables.
+GNN: edge/node row sharding.
 Every rule guards divisibility — a dimension is only sharded when the axis
 size divides it, so one rule set covers gemma-2b (kv=1) and dsv2 (kv=128)
 alike.
@@ -138,18 +138,6 @@ def gnn_graph_specs(graph_shape, mesh, shard_nodes: bool):
         return P()
 
     return jax.tree_util.tree_map_with_path(rule, graph_shape)
-
-
-def recsys_param_specs(params_shape, mesh):
-    ax = all_axes(mesh)
-
-    def rule(path, leaf):
-        name = str(getattr(path[-1], "key", path[-1]))
-        if name == "embed":
-            return P(ax, None)
-        return P()
-
-    return jax.tree_util.tree_map_with_path(rule, params_shape)
 
 
 def opt_state_specs(param_specs):

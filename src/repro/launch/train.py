@@ -33,7 +33,7 @@ def main():
 
     mod = get_arch(args.arch)
     if mod.FAMILY != "lm":
-        raise SystemExit("launch.train drives LM archs; see examples/ for GNN/recsys")
+        raise SystemExit("launch.train drives LM archs; see examples/ for GNN")
     cfg = mod.reduced_config()
     print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab}")
 

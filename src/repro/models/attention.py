@@ -135,10 +135,6 @@ def gqa_forward_flagged(params, x, positions, window: int, is_global,
     k = apply_rope(k, positions)
     if impl == "blockwise":
         out = _sdpa_blockwise(q, k, v, positions, window, is_global)
-    elif impl == "pallas":
-        from repro.kernels.flash_attention import flash_mha
-
-        out = flash_mha(q, k, v, is_global, window)
     elif impl == "stub":
         # measurement surrogate: one pass over v with the attention output's
         # shape/sharding — used to isolate attention-tile HBM traffic in the

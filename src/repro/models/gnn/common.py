@@ -4,7 +4,7 @@ JAX sparse is BCOO-only, so message passing is implemented the idiomatic
 way: gather source features by edge index, transform, ``segment_sum`` /
 ``segment_max`` into destinations.  All ops take ``num_nodes`` statically so
 they jit/shard cleanly (edges row-sharded, nodes replicated or psum-reduced;
-see launch/dryrun shardings).
+see launch/shardings.py).
 
 Graphs are plain dicts:
   nodes: f32[N, F]   edges: int32[E, 2] (src, dst)   plus optional fields

@@ -99,43 +99,3 @@ def test_gnn_training_learns():
         params, loss = step(params, gj)
         losses.append(float(loss))
     assert losses[-1] < losses[0] * 0.9, losses[::20]
-
-
-def test_mind_reduced_train_and_serve():
-    from repro.models.recsys import mind
-
-    cfg = get_arch("mind").reduced_config()
-    params = mind.init_params(jax.random.key(0), cfg)
-    rng = np.random.default_rng(0)
-    hist = jnp.asarray(rng.integers(-1, cfg.n_items, (16, cfg.hist_len)), jnp.int32)
-    batch = {"hist": hist,
-             "target": jnp.asarray(rng.integers(0, cfg.n_items, 16), jnp.int32)}
-    # squash() scales cubically at small norms, so reduced configs need an
-    # aggressive LR for the smoke check to show movement
-    step = jax.jit(mind.make_train_step(cfg, lr=20.0))
-    losses = []
-    for _ in range(60):
-        params, loss = step(params, batch)
-        losses.append(float(loss))
-    assert np.isfinite(losses).all() and losses[-1] < losses[0] * 0.8
-    serve = jax.jit(mind.make_serve_step(cfg, topk=8))
-    cand = jnp.asarray(rng.choice(cfg.n_items, 64, replace=False), jnp.int32)
-    cat = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
-    vals, ids = serve(params, hist, cand, cat, jnp.int32(0), jnp.int32(128))
-    assert vals.shape == (16, 8) and ids.shape == (16, 8)
-    # LiteMat category filter: everything returned is inside the interval
-    cat_of = dict(zip(cand.tolist(), cat.tolist()))
-    for row_v, row_i in zip(np.asarray(vals), np.asarray(ids)):
-        for v, i in zip(row_v, row_i):
-            if np.isfinite(v):
-                assert 0 <= cat_of[int(i)] < 128
-
-
-def test_mind_interests_shape():
-    from repro.models.recsys import mind
-
-    cfg = get_arch("mind").reduced_config()
-    params = mind.init_params(jax.random.key(0), cfg)
-    hist = jnp.zeros((4, cfg.hist_len), jnp.int32)
-    v = mind.user_interests(params, hist, cfg)
-    assert v.shape == (4, cfg.n_interests, cfg.embed_dim)

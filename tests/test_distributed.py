@@ -77,58 +77,52 @@ print('sharded dictionary OK', len(m))
     assert "sharded dictionary OK" in out
 
 
-def test_compressed_psum_close_to_mean():
+def test_sharded_kb_shard_map_path_subprocess():
+    """ShardedKB's shard_map execution (one device per shard) must equal the
+    per-shard dispatch loop AND the single-device KnowledgeBase bit-exactly;
+    the serving fan-out merges the same counts."""
     out = _run(
         """
-import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-from repro.utils.jaxcompat import make_mesh, shard_map
-from repro.distributed.compression import compressed_psum, init_error_state
+import numpy as np, jax
+from repro.core.engine import KnowledgeBase
+from repro.core.query import Pattern
+from repro.core.shard import ShardedKB
+from repro.rdf.generator import generate_random_abox
+from repro.rdf.vocab import lubm_ontology
+from repro.serving.engine import QueryServer, ShardedQueryServer
 
-mesh = make_mesh((8,), ('d',))
-g = jnp.asarray(np.random.default_rng(0).normal(size=(8, 128)).astype(np.float32))
-err = jnp.zeros((8, 128), jnp.float32)
-f = shard_map(compressed_psum('d'), mesh=mesh, in_specs=(P('d'), P('d')),
-              out_specs=(P('d'), P('d')), check_vma=False)
-mean, new_err = f(g, err)
-want = np.asarray(g).mean(axis=0)
-got = np.asarray(mean)[0]
-scale = np.abs(np.asarray(g)).max() / 127
-assert np.abs(got - want).max() < scale * 1.5, (np.abs(got-want).max(), scale)
-print('compressed psum OK')
+assert jax.device_count() == 8
+onto = lubm_ontology()
+raw = generate_random_abox(onto, n_instances=800, n_type_triples=1500,
+                           n_prop_triples=1500, seed=3)
+K = KnowledgeBase.build(raw)
+S = ShardedKB.build(raw, n_shards=8)
+eng = S.engine('litemat')
+assert eng._shard_map_on()
+q1 = [Pattern('?x', 'rdf:type', 'Professor')]
+want1, _ = K.query(q1, select=('?x',), mode='litemat')
+got1, _ = eng.run(q1, select=('?x',))
+assert np.array_equal(want1, got1)
+# single-pattern plans have uniform per-shard signatures: must lower
+# through the shard_mapped executable, never the dispatch loop
+assert eng.cache_stats['shard_map_runs'] > 0, eng.cache_stats
+q = [Pattern('?x', 'rdf:type', 'Professor'), Pattern('?x', 'worksFor', '?y')]
+sel = ('?x', '?y')
+want, _ = K.query(q, select=sel, mode='litemat')
+got, _ = eng.run(q, select=sel)
+assert np.array_equal(want, got)
+eng.use_shard_map = False
+loop, _ = eng.run(q, select=sel)
+assert np.array_equal(want, loop)
+c1, m1 = QueryServer(K, topk=8).class_members(['Professor', 'Student'])
+qss = ShardedQueryServer(S, topk=8)
+assert qss._sm()
+c2, m2 = qss.class_members(['Professor', 'Student'])
+assert np.array_equal(c1, c2) and np.array_equal(m1, m2)
+print('sharded shard_map OK', c1.tolist())
 """
     )
-    assert "compressed psum OK" in out
-
-
-def test_gpipe_pipeline_matches_sequential():
-    out = _run(
-        """
-import numpy as np, jax, jax.numpy as jnp
-from repro.distributed.pipeline import make_pipelined_step
-from repro.utils.jaxcompat import make_mesh
-
-mesh = make_mesh((4, 2), ('pod', 'data'))
-D, M, mb = 16, 6, 4
-rng = np.random.default_rng(0)
-Ws = jnp.asarray(rng.normal(size=(4, D, D)).astype(np.float32) * 0.3)
-x = jnp.asarray(rng.normal(size=(M, mb, D)).astype(np.float32))
-
-def apply_fn(W, h):  # one stage = one matmul + gelu
-    return jax.nn.gelu(h @ W[0])
-
-pipe = make_pipelined_step(apply_fn, mesh, n_micro=M)
-got = np.asarray(jax.jit(pipe)(Ws, x))
-
-ref = np.asarray(x)
-for i in range(4):
-    ref = jax.nn.gelu(jnp.asarray(ref) @ Ws[i])
-    ref = np.asarray(ref)
-np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
-print('gpipe OK')
-""",
-    )
-    assert "gpipe OK" in out
+    assert "sharded shard_map OK" in out
 
 
 def test_mini_dryrun_lm_cell():

@@ -1,13 +1,10 @@
-"""Checkpoint/restart, preemption, elastic restore, gradient compression."""
+"""Checkpoint/restart, preemption, elastic restore."""
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.checkpoint import CheckpointManager
-from repro.distributed.compression import (
-    dequantize_int8, ef_compress_tree, init_error_state, quantize_int8,
-)
 
 
 def _toy_state(seed=0):
@@ -84,24 +81,3 @@ def test_train_resume_bit_exact(tmp_path):
     assert s2 == 6
     for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pc)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
-
-
-def test_quantize_roundtrip_error_bounded(rng):
-    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32)) * 3.0
-    q, s = quantize_int8(x)
-    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
-    assert err.max() <= float(s) / 2 + 1e-6
-
-
-def test_error_feedback_converges(rng):
-    """With a CONSTANT gradient, EF-compressed updates average to the true
-    gradient: cumulative dequantized sum / steps -> g."""
-    g = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
-    err = init_error_state(g)
-    total = jnp.zeros_like(g["w"])
-    steps = 60
-    for _ in range(steps):
-        q, s, err = ef_compress_tree(g, err)
-        total = total + dequantize_int8(q["w"], s["w"])
-    mean = np.asarray(total) / steps
-    np.testing.assert_allclose(mean, np.asarray(g["w"]), rtol=0.05, atol=0.02)

@@ -24,35 +24,6 @@ def test_blockwise_attention_matches_naive():
     np.testing.assert_allclose(np.asarray(xn), np.asarray(xb), atol=2e-4)
 
 
-@pytest.mark.parametrize("window,is_global", [(0, True), (64, False), (64, True)])
-def test_flash_kernel_fwd_bwd(window, is_global, rng):
-    from repro.kernels.flash_attention import flash_mha
-    from repro.models.attention import _causal_mask, _sdpa
-
-    B, S, H, KV, hd = 2, 128, 4, 2, 16
-    q = jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32))
-    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
-    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
-
-    def ref(q, k, v):
-        mask = _causal_mask(S, S)
-        if window > 0:
-            qi = jnp.arange(S)[:, None]
-            kj = jnp.arange(S)[None, :]
-            mask = mask & (jnp.bool_(is_global) | (kj > qi - window))
-        return _sdpa(q, k, v, mask)
-
-    got = flash_mha(q, k, v, jnp.bool_(is_global), window, 32, 64)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref(q, k, v)),
-                               atol=2e-5)
-    w = jnp.asarray(rng.normal(size=(hd,)).astype(np.float32))
-    g1 = jax.grad(lambda *a: (flash_mha(*a, jnp.bool_(is_global), window, 32, 64) * w).sum(),
-                  argnums=(0, 1, 2))(q, k, v)
-    g2 = jax.grad(lambda *a: (ref(*a) * w).sum(), argnums=(0, 1, 2))(q, k, v)
-    for a, b in zip(g1, g2):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
-
-
 def test_equiformer_restrict_exact(rng):
     from repro.data.graphs import make_molecules
     from repro.models.gnn import equiformer
@@ -73,37 +44,3 @@ def test_equiformer_restrict_exact(rng):
     rel = np.abs(np.asarray(o0) - np.asarray(o2)).max() / (
         np.abs(np.asarray(o0)).max() + 1e-9)
     assert rel < 0.05
-
-
-def test_mind_sharded_topk_subprocess():
-    """Sharded two-stage retrieval == single-device reference (8 devices)."""
-    from tests.test_distributed import _NEW_JAX, _run
-
-    if not _NEW_JAX:
-        pytest.skip("multi-device subprocess test needs jax>=0.6 "
-                    "(0.4.x compat path too slow for tier-1)")
-
-    out = _run(
-        """
-import numpy as np, jax, jax.numpy as jnp
-from repro.models.recsys import mind
-from repro.utils.jaxcompat import make_mesh
-cfg = mind.MINDConfig(n_items=1024, embed_dim=16, hist_len=10)
-mesh = make_mesh((2, 4), ('data', 'model'))
-params = mind.init_params(jax.random.key(0), cfg)
-rng = np.random.default_rng(0)
-hist = jnp.asarray(rng.integers(-1, 1024, (2, 10)), jnp.int32)
-cand = jnp.asarray(rng.choice(1024, 512, replace=False), jnp.int32)
-cat = jnp.asarray(rng.integers(0, 64, 512), jnp.int32)
-rv, ri = jax.jit(mind.make_serve_step(cfg, topk=16))(
-    params, hist, cand, cat, jnp.int32(0), jnp.int32(32))
-sv, si = jax.jit(mind.make_serve_step_sharded(cfg, mesh, topk=16))(
-    params, hist, cand, cat, jnp.int32(0), jnp.int32(32))
-np.testing.assert_allclose(np.sort(np.asarray(rv), axis=1),
-                           np.sort(np.asarray(sv), axis=1), rtol=1e-5)
-for r, s in zip(np.asarray(ri), np.asarray(si)):
-    assert set(r.tolist()) == set(s.tolist())
-print('sharded retrieval OK')
-"""
-    )
-    assert "sharded retrieval OK" in out
