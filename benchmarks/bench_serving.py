@@ -1,0 +1,149 @@
+"""Serving-runtime latency under concurrent reads + background updates.
+
+Drives the snapshot-isolated request runtime (serving/runtime.py) over a
+LUBM store with CLOSED-LOOP clients — each client thread issues its next
+request only after the previous outcome lands, so the reported p50/p99 is
+service latency (pin + pinned-plan execution + any fresh snapshot
+capture), not open-loop queue depth:
+
+    serving/read_only        4 clients x Q1-Q4, no writer — pins are all
+                             fast-path reuses of the published snapshot
+    serving/mixed_workload   the same read stream racing a writer thread
+                             that streams 64-row insert batches (each one
+                             bumping the version and republishing), so
+                             reads keep paying fresh snapshot captures;
+                             also reports reader and writer throughput
+    serving/mixed_slo        pass/fail row gated by scripts/bench_diff.py:
+                             at this baseline load NOTHING sheds, NOTHING
+                             misses its deadline, and every request is ok
+                             — admission control must be invisible until
+                             overload
+
+A short unmeasured mixed warmup epoch runs first so the delta-bucket plan
+compilations (pow2 capacity transitions) mostly land outside the measured
+window.  Writes ``BENCH_serving.json`` for the CI bench-diff gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+
+def _percentiles(outs):
+    import numpy as np
+
+    lat = np.asarray(sorted(o.latency_s for o in outs if o.ok))
+    if lat.size == 0:
+        return 0.0, 0.0
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
+
+
+def _closed_loop(rt, queries, n_clients: int, per_client: int):
+    """n_clients threads, each serving its next request only after the
+    last one resolved — latency reflects service time, not queue depth."""
+    outs_by_client = [[] for _ in range(n_clients)]
+
+    def client(c: int):
+        for i in range(per_client):
+            q = queries[(c + i * n_clients) % len(queries)]
+            outs_by_client[c].append(rt.serve(q, deadline_s=30.0))
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return [o for outs in outs_by_client for o in outs], wall
+
+
+def main(json_path: str = "BENCH_serving.json"):
+    import numpy as np
+
+    from benchmarks.common import all_records, emit
+    from repro.core.engine import PAPER_QUERIES, KnowledgeBase
+    from repro.rdf.generator import generate_lubm
+    from repro.serving.runtime import ServingRuntime
+
+    records_before = len(all_records())
+    n_clients = int(os.environ.get("REPRO_BENCH_SERVE_CLIENTS", "4"))
+    per_client = int(os.environ.get("REPRO_BENCH_SERVE_PER_CLIENT", "40"))
+    queries = list(PAPER_QUERIES.values())
+
+    raw = generate_lubm(1, seed=0)
+    K = KnowledgeBase.build(raw)
+    s, p, o = np.asarray(raw.s), np.asarray(raw.p), np.asarray(raw.o)
+
+    # -- read-only baseline: pins are all fast-path, plans prewarmed --------
+    rt = ServingRuntime(K, modes=("litemat",), n_workers=n_clients,
+                        max_queue=256)
+    with rt:
+        rt.registry.prewarm(queries)
+        outs, wall = _closed_loop(rt, queries, n_clients, per_client)
+    p50, p99 = _percentiles(outs)
+    emit("serving/read_only", p50, p99_ms=round(p99 * 1e3, 2),
+         requests_per_s=int(len(outs) / max(wall, 1e-9)),
+         n_ok=sum(o.ok for o in outs), n_triples=raw.n_triples)
+
+    # -- mixed workload: the same read stream racing a background writer ----
+    rt = ServingRuntime(K, modes=("litemat",), n_workers=n_clients,
+                        max_queue=256, pin_lock_timeout_s=0.05)
+    with rt:
+        rt.registry.prewarm(queries)
+        stop = threading.Event()
+
+        def writer():
+            rng = np.random.default_rng(1)
+            while not stop.is_set():
+                i = int(rng.integers(0, max(s.shape[0] - 64, 1)))
+                rt.insert((s[i:i + 64], p[i:i + 64], o[i:i + 64]),
+                          auto_compact=False)
+                if stop.wait(0.02):
+                    return
+
+        w = threading.Thread(target=writer, daemon=True)
+        t0 = time.perf_counter()
+        w.start()
+        # warmup epoch: grow the delta past its first pow2 bucket
+        # transitions so their plan compiles land outside the measurement
+        _closed_loop(rt, queries, n_clients, 8)
+        warm_stats = dict(rt.stats)
+        outs, wall = _closed_loop(rt, queries, n_clients, per_client)
+        stop.set()
+        w.join()
+        write_wall = time.perf_counter() - t0
+        stats = dict(rt.stats)
+    p50, p99 = _percentiles(outs)
+    n_ok = sum(o.ok for o in outs)
+    n_measured_stale = (stats["stale_served"] - warm_stats["stale_served"])
+    emit("serving/mixed_workload", p50, p99_ms=round(p99 * 1e3, 2),
+         requests_per_s=int(len(outs) / max(wall, 1e-9)),
+         update_rows_per_s=int(64 * stats["updates"]
+                               / max(write_wall, 1e-9)),
+         n_ok=n_ok, n_updates=stats["updates"],
+         n_stale_served=n_measured_stale, n_retries=stats["retries"])
+    slo_ok = (stats["shed"] == 0 and stats["deadline"] == 0
+              and n_ok == len(outs))
+    emit("serving/mixed_slo", 0.0, shed=stats["shed"],
+         deadline_missed=stats["deadline"], errors=stats["errors"],
+         passed=bool(slo_ok))
+
+    if json_path:
+        rows = all_records()[records_before:]
+        artifact = {
+            "n_base_triples": raw.n_triples,
+            "n_requests": n_clients * per_client,
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"# wrote {json_path} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -10,6 +10,9 @@ Sections (paper table -> module):
     table6 -> bench_queries       Q1-Q4 across lite/full/rewrite (+serving)
     updates -> bench_updates      incremental insert/delete/compact vs
                                   rebuild (writes BENCH_updates.json)
+    serving -> bench_serving      snapshot-isolated runtime latency under
+                                  concurrent reads + background updates
+                                  (writes BENCH_serving.json)
     kernels -> bench_kernels      Pallas kernels vs refs
 
 Scale via env: REPRO_BENCH_UNIV (default 4 universities ~ 0.5M triples).
@@ -32,7 +35,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_abox, bench_kernels, bench_materialize, bench_queries,
-        bench_tbox, bench_updates,
+        bench_serving, bench_tbox, bench_updates,
     )
 
     sections = {
@@ -41,6 +44,7 @@ def main() -> None:
         "table45": bench_materialize.main,
         "table6": bench_queries.main,
         "updates": bench_updates.main,
+        "serving": bench_serving.main,
         "kernels": bench_kernels.main,
     }
     chosen = (

@@ -43,7 +43,8 @@ import os
 import subprocess
 import sys
 
-DEFAULT_FILES = ("BENCH_queries.json", "BENCH_updates.json")
+DEFAULT_FILES = ("BENCH_queries.json", "BENCH_updates.json",
+                 "BENCH_serving.json")
 
 
 def _load_current(path: str) -> dict | None:

@@ -40,6 +40,7 @@ final array once to mirror it into the new StoreIndex's search keys.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from functools import partial
 
@@ -214,6 +215,9 @@ class _DevState:
     delta_len: int
     tombstone_mut: int
     owns_alive: bool = False  # True once base_alive is a private buffer
+    leased: bool = False  # True while a pinned snapshot may still hold
+    # this base_alive buffer: the next kill batch must copy-then-donate
+    # instead of donating the leased buffer out from under the snapshot
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -250,6 +254,7 @@ class DeviceStoreCache:
     def __init__(self):
         self._states: dict = {}
         self._ones: dict = {}  # (token, n) -> shared all-alive mask
+        self._lock = threading.RLock()  # sync() is reader-reentrant
         self.stats = {
             "base_rebuilds": 0,  # fresh states (new base / first touch)
             "delta_allocs": 0,  # delta bucket (re)allocations
@@ -260,6 +265,8 @@ class DeviceStoreCache:
             "alive_privatize_rows": 0,  # one-time shared-mask copies (first
             # delete against a key whose resident mask is the SHARED
             # all-alive buffer; donation needs a private one)
+            "lease_copy_rows": 0,  # copies forced by a pinned snapshot
+            # leasing the resident mask (donation would invalidate it)
             "stale_view_builds": 0,  # one-off builds for out-of-date views
         }
 
@@ -309,6 +316,13 @@ class DeviceStoreCache:
         )
 
     def sync(self, view: "StoreView", key: str) -> DevStore:
+        # one writer xor many readers reach here concurrently only through
+        # pinned snapshots; the lock makes resident-state updates atomic so
+        # a reader can never observe a half-applied delta splice
+        with self._lock:
+            return self._sync_locked(view, key)
+
+    def _sync_locked(self, view: "StoreView", key: str) -> DevStore:
         base = self._base_arrays(view, key)
         token = view.base_index.token
         cap = _pow2(view.delta_n) if view.has_delta else 0
@@ -366,20 +380,29 @@ class DeviceStoreCache:
                 idx = np.concatenate(view.kills[st.n_kills:])
                 if key != "scan":
                     idx = view.base_index.inv_perm(key)[idx]
-                if not st.owns_alive:
-                    # resident mask is the SHARED all-alive buffer: copy it
-                    # once (first delete against this key+base) so every
-                    # later kill batch can donate it back in place
+                if not st.owns_alive or st.leased:
+                    # resident mask is either the SHARED all-alive buffer or
+                    # LEASED to a pinned snapshot: copy it once so the kill
+                    # batch donates a private buffer — the snapshot (or the
+                    # shared mask) keeps the original, and every later kill
+                    # donates the copy back in place at zero extra cost
+                    stat = ("lease_copy_rows" if st.owns_alive
+                            else "alive_privatize_rows")
                     st.base_alive = jnp.array(st.base_alive)
                     st.owns_alive = True
-                    self.stats["alive_privatize_rows"] += int(
-                        st.base_alive.shape[0])
+                    st.leased = False
+                    self.stats[stat] += int(st.base_alive.shape[0])
                 st.base_alive = _kill_scatter(
                     st.base_alive,
                     _pad_kill_idx(idx, int(st.base_alive.shape[0])))
                 self.stats["kill_scatter_rows"] += int(idx.shape[0])
                 st.n_kills = len(view.kills)
 
+        if view.pinned:
+            # a pinned snapshot now references the resident buffers: mark
+            # the base mask leased so the next delete copies instead of
+            # donating it out from under the snapshot's DevStore
+            st.leased = True
         return DevStore(base=base, base_alive=st.base_alive,
                         delta=st.delta, delta_alive=st.delta_alive)
 
@@ -439,6 +462,8 @@ class StoreView:
     cache: DeviceStoreCache | None = None  # persistent device buffers
     kills: tuple = ()  # snapshot of DeltaKB.kills[mode] (original coords)
     delta_mut: int = 0  # DeltaLog.tombstone_mut at snapshot time
+    pinned: bool = False  # held by a Snapshot: cache leases (never donates)
+    # any resident buffer it hands this view — see DeviceStoreCache.sync
     _delta_index: StoreIndex | None = field(default=None, repr=False)
     _dev: dict = field(default_factory=dict, repr=False)
 

@@ -29,6 +29,7 @@ is no manual invalidation step.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -50,6 +51,7 @@ from repro.core.update import (
     encode_delta, materialize_delta_mode, mention_rows, mentions_mask,
 )
 from repro.rdf.generator import RawDataset
+from repro.testing import faults
 
 # The paper's appendix queries (over the LUBM vocabulary).
 PAPER_QUERIES = {
@@ -96,6 +98,10 @@ class KnowledgeBase:
     _pending_raw: list = field(default_factory=list, repr=False)
     _mat_cursor: dict = field(
         default_factory=lambda: {"litemat": 0, "full": 0}, repr=False)
+    # writers (insert/delete/compact) serialize here; snapshot captures
+    # (core/snapshot.py) take it briefly to see a quiescent version
+    write_lock: threading.RLock = field(
+        default_factory=threading.RLock, repr=False, compare=False)
 
     @classmethod
     def build(cls, raw: RawDataset, tbox: TBox | None = None,
@@ -147,14 +153,24 @@ class KnowledgeBase:
         delete's repair, a compaction — its share of the queue is derived
         here.  A lite-only deployment therefore never runs the full
         closure of its inserts (and vice versa).
+
+        Crash-atomic per mode: every pending batch is derived BEFORE any
+        of them is appended, so a failure mid-derivation (fault site
+        ``engine.flush_mat``) leaves the log and cursor untouched — the
+        published store stays consistent and a later flush simply retries
+        the whole backlog.
         """
         n = len(self._pending_raw)
         for mode in modes:
             cur = self._mat_cursor[mode]
             if cur >= n:
                 continue
+            derived = []
             for spo in self._pending_raw[cur:]:
-                rows = materialize_delta_mode(spo, self.dtb, mode)
+                faults.fire("engine.flush_mat", mode=mode,
+                            batch=cur + len(derived))
+                derived.append(materialize_delta_mode(spo, self.dtb, mode))
+            for rows in derived:
                 self.delta.log(mode).append(rows)
                 self.mat_counts[mode] += 1
             self._mat_cursor[mode] = n
@@ -303,27 +319,28 @@ class KnowledgeBase:
         s_fp, p_fp, o_fp, strings = _raw_columns(raw)
         if s_fp.shape[0] == 0:
             return dict(n_inserted=0, n_new_terms=0)
-        dyn = self._dynamic()
-        spo, n_new = encode_delta(dyn, s_fp, p_fp, o_fp)
-        absorb_new_terms(self.kb, dyn, strings)
-        d = self.delta
-        d.log("rewrite").append(spo)
-        self._pending_raw.append(spo)
-        if not self.lazy_materialize:
-            self._flush_mat("litemat", "full")
-        d.n_new_terms += n_new
-        self._bump()
-        stats = dict(
-            n_inserted=int(spo.shape[0]),
-            n_new_terms=n_new,
-            n_pending_mat=sum(
-                self._pending_rows(m) for m in ("litemat", "full")),
-            delta_ratio=round(self.delta_ratio, 4),
-            version=self.version,
-        )
-        if auto_compact and self.delta_ratio > self.compact_threshold:
-            stats["compacted"] = self.compact()
-        return stats
+        with self.write_lock:
+            dyn = self._dynamic()
+            spo, n_new = encode_delta(dyn, s_fp, p_fp, o_fp)
+            absorb_new_terms(self.kb, dyn, strings)
+            d = self.delta
+            d.log("rewrite").append(spo)
+            self._pending_raw.append(spo)
+            if not self.lazy_materialize:
+                self._flush_mat("litemat", "full")
+            d.n_new_terms += n_new
+            self._bump()
+            stats = dict(
+                n_inserted=int(spo.shape[0]),
+                n_new_terms=n_new,
+                n_pending_mat=sum(
+                    self._pending_rows(m) for m in ("litemat", "full")),
+                delta_ratio=round(self.delta_ratio, 4),
+                version=self.version,
+            )
+            if auto_compact and self.delta_ratio > self.compact_threshold:
+                stats["compacted"] = self.compact()
+            return stats
 
     # -- sharded-reusable delete primitives (core/shard.py orchestrates the
     # same three steps across shards; KnowledgeBase.delete below composes
@@ -414,35 +431,37 @@ class KnowledgeBase:
         s_fp, p_fp, o_fp, _ = _raw_columns(raw)
         if s_fp.shape[0] == 0:
             return dict(n_deleted=0)
-        # the repair below tombstones + re-appends derived delta rows, so any
-        # lazily queued materialization must land first
-        self._flush_mat("litemat", "full")
-        dyn = self._dynamic()
-        ids = np.stack([dyn.lookup(s_fp), dyn.lookup(p_fp),
-                        dyn.lookup(o_fp)], axis=1)
-        q = ids[(ids >= 0).all(axis=1)]  # triples with unknown terms: absent
+        with self.write_lock:
+            # the repair below tombstones + re-appends derived delta rows,
+            # so any lazily queued materialization must land first
+            self._flush_mat("litemat", "full")
+            dyn = self._dynamic()
+            ids = np.stack([dyn.lookup(s_fp), dyn.lookup(p_fp),
+                            dyn.lookup(o_fp)], axis=1)
+            q = ids[(ids >= 0).all(axis=1)]  # unknown-term triples: absent
 
-        deleted = self.kill_raw_rows(q)
-        if deleted.shape[0] == 0:
-            return dict(n_deleted=0)
-        inst = affected_instances(deleted, self.kb.tbox.instance_base)
-        self.kill_derived_mentions(inst)
+            deleted = self.kill_raw_rows(q)
+            if deleted.shape[0] == 0:
+                return dict(n_deleted=0)
+            inst = affected_instances(deleted, self.kb.tbox.instance_base)
+            self.kill_derived_mentions(inst)
 
-        # re-derive the affected instances from their live raw triples
-        frontier = self.live_raw_mentions(inst)
-        for mode in ("litemat", "full"):
-            derived = materialize_delta_mode(frontier, self.dtb, mode)
-            self.append_derived(mode, derived[mentions_mask(derived, inst)])
-        self._bump()
-        stats = dict(
-            n_deleted=int(deleted.shape[0]),
-            n_affected_instances=int(inst.shape[0]),
-            delta_ratio=round(self.delta_ratio, 4),
-            version=self.version,
-        )
-        if auto_compact and self.delta_ratio > self.compact_threshold:
-            stats["compacted"] = self.compact()
-        return stats
+            # re-derive the affected instances from their live raw triples
+            frontier = self.live_raw_mentions(inst)
+            for mode in ("litemat", "full"):
+                derived = materialize_delta_mode(frontier, self.dtb, mode)
+                self.append_derived(
+                    mode, derived[mentions_mask(derived, inst)])
+            self._bump()
+            stats = dict(
+                n_deleted=int(deleted.shape[0]),
+                n_affected_instances=int(inst.shape[0]),
+                delta_ratio=round(self.delta_ratio, 4),
+                version=self.version,
+            )
+            if auto_compact and self.delta_ratio > self.compact_threshold:
+                stats["compacted"] = self.compact()
+            return stats
 
     def compact(self, device: bool | None = None) -> dict:
         """Fold the delta overlay into fresh base stores (sorted merges).
@@ -459,23 +478,25 @@ class KnowledgeBase:
         merge; default on TPU backends) or the host searchsorted interleave
         (default elsewhere, where 'device' arrays live in host RAM anyway).
         """
-        if (self._delta is None or self._delta.empty) and not self._pending_raw:
-            return dict(compacted=False)
-        self._flush_mat("litemat", "full")
-        if device is None:
-            device = jax.default_backend() == "tpu"
-        sizes = {}
-        for mode in MODES:
-            dev, idx = compact_view(self.view(mode), device=device)
-            if mode == "rewrite":
-                self.kb.spo = dev
-            elif mode == "litemat":
-                self.lite_spo = dev
-            else:
-                self.full_spo = dev
-            self._base_indexes[mode] = idx
-            sizes[mode] = int(dev.shape[0])
-        self._delta = DeltaKB()
-        self._raw_loc = None
-        self._bump()
-        return dict(compacted=True, version=self.version, **sizes)
+        with self.write_lock:
+            if ((self._delta is None or self._delta.empty)
+                    and not self._pending_raw):
+                return dict(compacted=False)
+            self._flush_mat("litemat", "full")
+            if device is None:
+                device = jax.default_backend() == "tpu"
+            sizes = {}
+            for mode in MODES:
+                dev, idx = compact_view(self.view(mode), device=device)
+                if mode == "rewrite":
+                    self.kb.spo = dev
+                elif mode == "litemat":
+                    self.lite_spo = dev
+                else:
+                    self.full_spo = dev
+                self._base_indexes[mode] = idx
+                sizes[mode] = int(dev.shape[0])
+            self._delta = DeltaKB()
+            self._raw_loc = None
+            self._bump()
+            return dict(compacted=True, version=self.version, **sizes)

@@ -57,6 +57,8 @@ single device ever materializes the whole store.
 """
 from __future__ import annotations
 
+import threading
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -79,10 +81,20 @@ from repro.core.update import (
     materialize_delta_mode, mentions_mask,
 )
 from repro.kernels import ops
+from repro.testing import faults
+from repro.testing.faults import FaultCrash, FaultError
 from repro.utils.jaxcompat import make_mesh, shard_map
 
 _EMPTY = np.zeros((0, 3), dtype=np.int32)
 _HASH_MULT = np.uint64(0x9E3779B1)  # Fibonacci multiplicative hash
+
+# failures the stacked shard_map path treats as "device down, fall back to
+# the per-shard dispatch loop": injected transients + XLA runtime errors
+try:
+    from jax.errors import JaxRuntimeError as _JaxRuntimeError
+    _DEVICE_FAILURES = (FaultError, _JaxRuntimeError)
+except ImportError:  # older jax: no public runtime-error class
+    _DEVICE_FAILURES = (FaultError,)
 
 
 def shard_of(ids, n_shards: int) -> np.ndarray:
@@ -123,6 +135,34 @@ def _exchange(parts_by_src: list, n_shards: int) -> list:
 
 
 @dataclass
+class IngestReport:
+    """Structured per-part outcome of a streaming ingest.
+
+    One entry per input part: ``dict(part=, ok=, attempts=, n_inserted=,
+    version=)`` on success, ``dict(part=, ok=False, attempts=, error=)``
+    after the retry budget is spent.  A failed part is *skipped* — the
+    store stays at the consistent version the last successful part
+    published — so callers inspect ``ok`` / ``failed`` instead of fishing
+    a half-ingested store out of an exception.
+    """
+
+    parts: list = field(default_factory=list)
+    n_retries: int = 0
+
+    @property
+    def failed(self) -> list:
+        return [p for p in self.parts if not p["ok"]]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failed
+
+    @property
+    def n_rows(self) -> int:
+        return sum(p.get("n_inserted", 0) for p in self.parts if p["ok"])
+
+
+@dataclass
 class ShardedKB:
     """Subject-hash partitioned KnowledgeBase with replicated TBox/dictionary.
 
@@ -145,6 +185,11 @@ class ShardedKB:
     _pending: list = field(default_factory=list, repr=False)  # per-shard parts
     _mat_cursor: dict = field(
         default_factory=lambda: {"litemat": 0, "full": 0}, repr=False)
+    # writers serialize here (same contract as KnowledgeBase.write_lock);
+    # snapshot captures take it briefly to see a quiescent global version
+    write_lock: threading.RLock = field(
+        default_factory=threading.RLock, repr=False, compare=False)
+    ingest_report: "IngestReport | None" = field(default=None, repr=False)
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -222,7 +267,9 @@ class ShardedKB:
 
     @classmethod
     def ingest(cls, parts, tbox: TBox | None = None, onto=None,
-               n_shards: int | None = None) -> "ShardedKB":
+               n_shards: int | None = None, max_part_retries: int = 3,
+               backoff_s: float = 0.01, backoff_cap_s: float = 0.5,
+               seed: int = 0) -> "ShardedKB":
         """Bulk-load an iterable of raw parts, never materializing globally.
 
         Each part (RawDataset or (s, p, o) fingerprint columns) is encoded
@@ -232,6 +279,15 @@ class ShardedKB:
         lazy per mode AND per shard (`_flush` derives each shard's backlog
         on its own device and exchanges the output) — the ROADMAP's
         LUBM-100-class loads stay out of single-device memory.
+
+        The streaming loop is fault-tolerant: a part whose encode/partition
+        fails transiently is retried up to ``max_part_retries`` times with
+        jittered exponential backoff; a part that exhausts its budget (or
+        hard-crashes with :class:`FaultCrash`) is recorded in the returned
+        store's ``ingest_report`` and *skipped*, so a 10k-part stream never
+        dies at part 7k — and because ``insert`` commits atomically (all
+        fallible work precedes any store mutation), a failed part leaves
+        the store at the consistent version the previous part published.
         """
         parts = iter(parts)
         if tbox is None:
@@ -239,8 +295,33 @@ class ShardedKB:
             tbox = build_tbox(onto or first.onto)
             parts = iter([first, *parts])
         skb = cls.empty(tbox, n_shards=n_shards)
-        for part in parts:
-            skb.insert(part, auto_compact=False)
+        report = IngestReport()
+        rng = np.random.default_rng(seed)
+        for k, part in enumerate(parts):
+            attempt = 0
+            while True:
+                v0 = skb.version
+                try:
+                    stats = skb.insert(part, auto_compact=False)
+                    report.parts.append(dict(
+                        part=k, ok=True, attempts=attempt + 1,
+                        n_inserted=stats["n_inserted"],
+                        version=skb.version))
+                    break
+                except Exception as e:  # noqa: BLE001 — classified below
+                    retryable = (not isinstance(e, FaultCrash)
+                                 and skb.version == v0  # nothing committed
+                                 and attempt < max_part_retries)
+                    if not retryable:
+                        report.parts.append(dict(
+                            part=k, ok=False, attempts=attempt + 1,
+                            error=f"{type(e).__name__}: {e}"))
+                        break
+                    report.n_retries += 1
+                    delay = min(backoff_cap_s, backoff_s * (2 ** attempt))
+                    time.sleep(delay * (0.5 + 0.5 * rng.random()))
+                    attempt += 1
+        skb.ingest_report = report
         return skb
 
     # -- shard plumbing ------------------------------------------------------
@@ -289,6 +370,12 @@ class ShardedKB:
         to their own subject's shard — range-derived type rows migrate,
         keeping the partition invariant.  Lazy per mode: a lite-only
         deployment never runs the full closure of its ingest.
+
+        Crash-atomic per mode (same contract as KnowledgeBase._flush_mat):
+        every batch is derived AND exchanged before any shard's log is
+        appended, so a failure mid-derivation (fault site
+        ``shard.flush_mat``) leaves every shard's published store
+        consistent and a later flush retries the whole backlog.
         """
         n = len(self._pending)
         for mode in modes:
@@ -297,16 +384,21 @@ class ShardedKB:
             cur = self._mat_cursor[mode]
             if cur >= n:
                 continue
-            for parts in self._pending[cur:]:
+            staged = []
+            for b, parts in enumerate(self._pending[cur:]):
                 derived_src = []
                 for i, part in enumerate(parts):
                     if part.shape[0] == 0:
                         derived_src.append(_EMPTY)
                         continue
+                    faults.fire("shard.flush_mat", mode=mode, shard=i,
+                                batch=cur + b)
                     with self._device_ctx(i):
                         derived_src.append(
                             materialize_delta_mode(part, self.dtb, mode))
-                for j, rows in enumerate(_exchange(derived_src, self.n_shards)):
+                staged.append(_exchange(derived_src, self.n_shards))
+            for exchanged in staged:
+                for j, rows in enumerate(exchanged):
                     self.shards[j].append_derived(mode, rows)
                 self.mat_counts[mode] += 1
             self._mat_cursor[mode] = n
@@ -341,30 +433,40 @@ class ShardedKB:
         return num / max(den, 1)
 
     def insert(self, raw, auto_compact: bool = True) -> dict:
-        """Encode once (replicated dictionary), partition, append per shard."""
+        """Encode once (replicated dictionary), partition, append per shard.
+
+        Commit-atomic: everything that can fail — the ``shard.ingest_encode``
+        fault site, the host encode, the partition — runs BEFORE any shard
+        log is touched; the per-shard appends are plain array concats.  The
+        ingest retry loop relies on this: an exception here means nothing
+        was committed and the published version is unchanged.
+        """
         s_fp, p_fp, o_fp, strings = _raw_columns(raw)
         if s_fp.shape[0] == 0:
             return dict(n_inserted=0, n_new_terms=0)
-        spo, n_new = encode_delta(self._dyn, s_fp, p_fp, o_fp)
-        self._absorb(strings)
-        parts = partition_rows(spo, self.n_shards)
-        for i, part in enumerate(parts):
-            if part.shape[0]:
-                with self._device_ctx(i):
-                    self.shards[i].append_raw(part)
-            self.shards[i]._bump()
-        self._pending.append(parts)
-        self.n_new_terms += n_new
-        self.version += 1
-        stats = dict(
-            n_inserted=int(spo.shape[0]), n_new_terms=n_new,
-            n_pending_mat=sum(
-                self._pending_rows(m) for m in ("litemat", "full")),
-            delta_ratio=round(self.delta_ratio, 4), version=self.version,
-        )
-        if auto_compact and self.delta_ratio > self.compact_threshold:
-            stats["compacted"] = self.compact()
-        return stats
+        with self.write_lock:
+            faults.fire("shard.ingest_encode", n=int(s_fp.shape[0]))
+            spo, n_new = encode_delta(self._dyn, s_fp, p_fp, o_fp)
+            parts = partition_rows(spo, self.n_shards)
+            # -- commit point: nothing below raises -------------------------
+            self._absorb(strings)
+            for i, part in enumerate(parts):
+                if part.shape[0]:
+                    with self._device_ctx(i):
+                        self.shards[i].append_raw(part)
+                self.shards[i]._bump()
+            self._pending.append(parts)
+            self.n_new_terms += n_new
+            self.version += 1
+            stats = dict(
+                n_inserted=int(spo.shape[0]), n_new_terms=n_new,
+                n_pending_mat=sum(
+                    self._pending_rows(m) for m in ("litemat", "full")),
+                delta_ratio=round(self.delta_ratio, 4), version=self.version,
+            )
+            if auto_compact and self.delta_ratio > self.compact_threshold:
+                stats["compacted"] = self.compact()
+            return stats
 
     def delete(self, raw, auto_compact: bool = True) -> dict:
         """Coordinated delete: local tombstones, global repair frontier.
@@ -379,64 +481,68 @@ class ShardedKB:
         s_fp, p_fp, o_fp, _ = _raw_columns(raw)
         if s_fp.shape[0] == 0:
             return dict(n_deleted=0)
-        self._flush("litemat", "full")
-        ids = np.stack([self._dyn.lookup(s_fp), self._dyn.lookup(p_fp),
-                        self._dyn.lookup(o_fp)], axis=1)
-        q = ids[(ids >= 0).all(axis=1)]
-        deleted = []
-        for i, part in enumerate(partition_rows(q, self.n_shards)):
-            if part.shape[0]:
-                with self._device_ctx(i):
-                    d = self.shards[i].kill_raw_rows(part)
-                if d.shape[0]:
-                    deleted.append(d)
-        if not deleted:
-            return dict(n_deleted=0)
-        deleted = np.concatenate(deleted)
-        inst = affected_instances(deleted, self.tbox.instance_base)
+        with self.write_lock:
+            self._flush("litemat", "full")
+            ids = np.stack([self._dyn.lookup(s_fp), self._dyn.lookup(p_fp),
+                            self._dyn.lookup(o_fp)], axis=1)
+            q = ids[(ids >= 0).all(axis=1)]
+            deleted = []
+            for i, part in enumerate(partition_rows(q, self.n_shards)):
+                if part.shape[0]:
+                    with self._device_ctx(i):
+                        d = self.shards[i].kill_raw_rows(part)
+                    if d.shape[0]:
+                        deleted.append(d)
+            if not deleted:
+                return dict(n_deleted=0)
+            deleted = np.concatenate(deleted)
+            inst = affected_instances(deleted, self.tbox.instance_base)
 
-        frontier_src = []
-        for i, K in enumerate(self.shards):
-            with self._device_ctx(i):
-                K.kill_derived_mentions(inst)
-                frontier_src.append(K.live_raw_mentions(inst))
-        for mode in ("litemat", "full"):
-            derived_src = []
-            for i, rows in enumerate(frontier_src):
-                if rows.shape[0] == 0:
-                    derived_src.append(_EMPTY)
-                    continue
+            frontier_src = []
+            for i, K in enumerate(self.shards):
                 with self._device_ctx(i):
-                    derived = materialize_delta_mode(rows, self.dtb, mode)
-                    derived_src.append(derived[mentions_mask(derived, inst)])
-            for j, rows in enumerate(_exchange(derived_src, self.n_shards)):
-                self.shards[j].append_derived(mode, rows)
-        for K in self.shards:
-            K._bump()
-        self.version += 1
-        stats = dict(
-            n_deleted=int(deleted.shape[0]),
-            n_affected_instances=int(inst.shape[0]),
-            delta_ratio=round(self.delta_ratio, 4), version=self.version,
-        )
-        if auto_compact and self.delta_ratio > self.compact_threshold:
-            stats["compacted"] = self.compact()
-        return stats
+                    K.kill_derived_mentions(inst)
+                    frontier_src.append(K.live_raw_mentions(inst))
+            for mode in ("litemat", "full"):
+                derived_src = []
+                for i, rows in enumerate(frontier_src):
+                    if rows.shape[0] == 0:
+                        derived_src.append(_EMPTY)
+                        continue
+                    with self._device_ctx(i):
+                        derived = materialize_delta_mode(rows, self.dtb, mode)
+                        derived_src.append(
+                            derived[mentions_mask(derived, inst)])
+                for j, rows in enumerate(
+                        _exchange(derived_src, self.n_shards)):
+                    self.shards[j].append_derived(mode, rows)
+            for K in self.shards:
+                K._bump()
+            self.version += 1
+            stats = dict(
+                n_deleted=int(deleted.shape[0]),
+                n_affected_instances=int(inst.shape[0]),
+                delta_ratio=round(self.delta_ratio, 4), version=self.version,
+            )
+            if auto_compact and self.delta_ratio > self.compact_threshold:
+                stats["compacted"] = self.compact()
+            return stats
 
     def compact(self, device: bool | None = None) -> dict:
         """Fold every shard's overlay into fresh per-shard bases."""
-        if (all(K._delta is None or K._delta.empty for K in self.shards)
-                and not self._pending):
-            return dict(compacted=False)
-        self._flush("litemat", "full")
-        sizes = {m: 0 for m in MODES}
-        for i, K in enumerate(self.shards):
-            with self._device_ctx(i):
-                out = K.compact(device=device)
-            for m in MODES:
-                sizes[m] += int(out.get(m, 0))
-        self.version += 1
-        return dict(compacted=True, version=self.version, **sizes)
+        with self.write_lock:
+            if (all(K._delta is None or K._delta.empty for K in self.shards)
+                    and not self._pending):
+                return dict(compacted=False)
+            self._flush("litemat", "full")
+            sizes = {m: 0 for m in MODES}
+            for i, K in enumerate(self.shards):
+                with self._device_ctx(i):
+                    out = K.compact(device=device)
+                for m in MODES:
+                    sizes[m] += int(out.get(m, 0))
+            self.version += 1
+            return dict(compacted=True, version=self.version, **sizes)
 
     # -- query surface -------------------------------------------------------
     def engine(self, mode: str = "litemat",
@@ -580,6 +686,7 @@ class ShardStack:
 
     def __init__(self):
         self._states: dict = {}
+        self._lock = threading.RLock()  # same contract as DeviceStoreCache
         self.stats = {"base_rebuilds": 0, "upload_base_rows": 0,
                       "upload_delta_rows": 0, "kill_scatter_rows": 0}
 
@@ -589,6 +696,10 @@ class ShardStack:
         return view.base_index._h[view.base_index.perm(key).perm]
 
     def sync(self, views: list, key: str):
+        with self._lock:
+            return self._sync_locked(views, key)
+
+    def _sync_locked(self, views: list, key: str):
         S = len(views)
         ncap = _pow2(max(v.base_n for v in views))
         has_delta = any(v.has_delta for v in views)
@@ -681,7 +792,8 @@ class ShardedQueryEngine:
     _mesh: object = field(default=None, repr=False)
     cache_stats: dict = field(
         default_factory=lambda: {"hits": 0, "misses": 0,
-                                 "shard_map_runs": 0, "loop_runs": 0},
+                                 "shard_map_runs": 0, "loop_runs": 0,
+                                 "shard_map_faults": 0},
         repr=False)
 
     def _engines(self):
@@ -739,6 +851,7 @@ class ShardedQueryEngine:
         for i in self._route_shards(gpats):
             if self.skb.shards[i].view(self.mode).n == 0:
                 continue
+            faults.fire("shard.query_shard", shard=i)
             with self.skb._device_ctx(i):
                 rows, _ = engines[i].run(gpats, select=gvars)
             if rows.shape[0]:
@@ -849,7 +962,15 @@ class ShardedQueryEngine:
 
     def _run_group(self, gpats, gvars):
         if self._shard_map_on():
-            parts = self._run_group_shard_map(gpats, gvars)
+            try:
+                faults.fire("shard.shard_map")
+                parts = self._run_group_shard_map(gpats, gvars)
+            except _DEVICE_FAILURES:
+                # a device died under the stacked executable (or a test
+                # injected one dying): degrade to the per-shard dispatch
+                # loop, which re-syncs each shard independently
+                self.cache_stats["shard_map_faults"] += 1
+                parts = None
             if parts is not None:
                 return parts
         return self._run_group_loop(gpats, gvars)
@@ -872,58 +993,68 @@ class ShardedQueryEngine:
             gpats = [patterns[i] for i in g]
             gvars = _group_vars(gpats)
             evaluated.append((gvars, self._run_group(gpats, gvars)))
+        return combine_groups(evaluated, patterns, select,
+                              max_retries=max_retries)
 
-        all_vars = tuple(dict.fromkeys(
-            v for pat in patterns for v in (pat.s, pat.p, pat.o)
-            if is_var(v)))
-        sel = tuple(select) if select else all_vars
 
-        # combine: fold groups through presorted merge joins, then one
-        # global distinct (cross-shard duplicates of object-keyed bindings
-        # collapse here)
-        order = sorted(range(len(evaluated)),
-                       key=lambda i: sum(p.shape[0] for p in evaluated[i][1]))
-        acc = None
-        done = set()
-        while len(done) < len(order):
-            pick = None
-            for i in order:
-                if i in done:
-                    continue
-                gvars = evaluated[i][0]
-                if acc is None or set(gvars) & set(acc.vars):
-                    pick = i
-                    break
-            if pick is None:
-                raise ValueError(
-                    "cartesian products not supported — reorder the plan")
-            done.add(pick)
-            gvars, parts = evaluated[pick]
-            total = sum(p.shape[0] for p in parts)
-            if acc is None:
-                cap = _pow2(total, floor=256)
-                rows = (np.concatenate(parts) if parts
-                        else np.zeros((0, len(gvars)), np.int32))
-                acc = _host_relation(gvars, rows, cap)
+def combine_groups(evaluated, patterns, select=None, max_retries: int = 6):
+    """Fold per-group, per-shard result parts into the final distinct rows.
+
+    ``evaluated`` is ``[(group_vars, [int32[k_i, |vars|] per shard]), ...]``
+    in plan-group order.  Groups fold through presorted merge joins, then
+    one global distinct (cross-shard duplicates of object-keyed bindings
+    collapse here) — shared by the live ShardedQueryEngine and the pinned
+    per-shard snapshot reads (core/snapshot.py), so both produce
+    bit-identical rows from identical parts.
+    """
+    all_vars = tuple(dict.fromkeys(
+        v for pat in patterns for v in (pat.s, pat.p, pat.o)
+        if is_var(v)))
+    sel = tuple(select) if select else all_vars
+
+    order = sorted(range(len(evaluated)),
+                   key=lambda i: sum(p.shape[0] for p in evaluated[i][1]))
+    acc = None
+    done = set()
+    while len(done) < len(order):
+        pick = None
+        for i in order:
+            if i in done:
                 continue
-            key = next(v for v in gvars if v in acc.vars)
-            merged = _merge_shard_parts(
-                parts, gvars.index(key)) if parts else np.zeros(
-                (0, len(gvars)), np.int32)
-            rel = _host_relation(gvars, merged, _pow2(total, floor=256))
-            jcap = _pow2(max(total, _acc_rows(acc), 1) * 2, floor=256)
-            for _ in range(max_retries):
-                out = join(rel, acc, jcap, a_sorted=True)
-                if int(out.overflow) == 0:
-                    break
-                jcap *= 2
-            else:
-                raise RuntimeError("sharded join kept overflowing")
-            acc = out
-        out = distinct(acc, sel, _pow2(_acc_rows(acc), floor=256))
-        n = int(out.valid.sum())
-        rows = np.asarray(out.cols)[:, :n].T
-        return rows, sel
+            gvars = evaluated[i][0]
+            if acc is None or set(gvars) & set(acc.vars):
+                pick = i
+                break
+        if pick is None:
+            raise ValueError(
+                "cartesian products not supported — reorder the plan")
+        done.add(pick)
+        gvars, parts = evaluated[pick]
+        total = sum(p.shape[0] for p in parts)
+        if acc is None:
+            cap = _pow2(total, floor=256)
+            rows = (np.concatenate(parts) if parts
+                    else np.zeros((0, len(gvars)), np.int32))
+            acc = _host_relation(gvars, rows, cap)
+            continue
+        key = next(v for v in gvars if v in acc.vars)
+        merged = _merge_shard_parts(
+            parts, gvars.index(key)) if parts else np.zeros(
+            (0, len(gvars)), np.int32)
+        rel = _host_relation(gvars, merged, _pow2(total, floor=256))
+        jcap = _pow2(max(total, _acc_rows(acc), 1) * 2, floor=256)
+        for _ in range(max_retries):
+            out = join(rel, acc, jcap, a_sorted=True)
+            if int(out.overflow) == 0:
+                break
+            jcap *= 2
+        else:
+            raise RuntimeError("sharded join kept overflowing")
+        acc = out
+    out = distinct(acc, sel, _pow2(_acc_rows(acc), floor=256))
+    n = int(out.valid.sum())
+    rows = np.asarray(out.cols)[:, :n].T
+    return rows, sel
 
 
 def _acc_rows(rel: Relation) -> int:
@@ -947,5 +1078,6 @@ def assert_partitioned(skb: ShardedKB) -> None:
             assert (sh == i).all(), (mode, i, rows[sh != i][:5])
 
 
-__all__ = ["ShardedKB", "ShardedQueryEngine", "ShardStack", "shard_of",
-           "partition_rows", "plan_groups", "assert_partitioned"]
+__all__ = ["ShardedKB", "ShardedQueryEngine", "ShardStack", "IngestReport",
+           "shard_of", "partition_rows", "plan_groups", "combine_groups",
+           "assert_partitioned"]

@@ -1,1 +1,2 @@
 from repro.serving.engine import QueryServer
+from repro.serving.runtime import Outcome, ServingRuntime

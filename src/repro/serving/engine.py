@@ -144,10 +144,28 @@ class QueryServer:
         self._seen_version = self.K.version
 
     def _sync(self):
-        """Auto-invalidate when the KnowledgeBase has moved past our views."""
-        if self._seen_version != self.K.version:
+        """Rebuild every derived view atomically against ONE store version.
+
+        The old pattern — compare the version, clear, let views rebuild
+        lazily on first use — raced the writer: the type index could build
+        at version v and the property view at v+1, silently mixing two
+        stores in one batch.  Now a detected change rebuilds ALL views
+        eagerly under the store's write lock (writers are excluded, so the
+        version provably cannot move between the capture and the builds);
+        the version-equality fast path stays lock-free.
+        """
+        if self._seen_version == self.K.version:
+            return
+        with self.K.write_lock:
+            v = self.K.version
             self._views.clear()
-            self._seen_version = self.K.version
+            self._build_views()
+            self._seen_version = v
+
+    def _build_views(self):
+        """Eagerly materialize every derived view (write lock held)."""
+        self._type_index()
+        self._prop_view()
 
     def _store(self):
         """The live lite store (base ∪ delta, tombstones dropped)."""
@@ -280,9 +298,23 @@ class ShardedQueryServer:
         self._seen_version = self.K.version
 
     def _sync(self):
-        if self._seen_version != self.K.version:
+        """Atomic resync — same contract as :meth:`QueryServer._sync`."""
+        if self._seen_version == self.K.version:
+            return
+        with self.K.write_lock:
+            v = self.K.version
             self._views.clear()
-            self._seen_version = self.K.version
+            self._build_views()
+            self._seen_version = v
+
+    def _build_views(self):
+        """Eagerly materialize every derived view (write lock held)."""
+        tis = self._type_indexes()
+        self._prop_views()
+        if "subj" not in self._views:
+            self._views["subj"] = jnp.asarray(_pad_plane(
+                [np.asarray(ti.subj) for ti in tis],
+                np.int32(np.iinfo(np.int32).max)))
 
     def _sm(self) -> bool:
         if self.use_shard_map is not None:

@@ -1,0 +1,296 @@
+"""Request runtime: deadlines, admission control, retries, degradation.
+
+This is the layer between clients and the MVCC substrate
+(core/snapshot.py).  Every read executes against a **pinned snapshot** —
+writers (``insert`` / ``delete`` / ``compact`` on the runtime) mutate the
+live store under its write lock and publish the new version when done — so
+a burst of concurrent readers racing a background update stream each see
+one consistent version end to end.
+
+Request lifecycle (the degradation ladder, best outcome first):
+
+  1. **ok** — admitted, pinned, answered before its deadline.  The outcome
+     carries ``version`` (what the answer is consistent with) and
+     ``stale=True`` when the pin was degraded (a writer held the flush
+     lock past the pin timeout, so the *last published* version served).
+  2. **retry** — a transient failure (:class:`~repro.testing.faults.FaultError`
+     — injected churn, a device hiccup) inside the attempt is retried with
+     jittered exponential backoff while the deadline allows; the sharded
+     engine additionally degrades from the stacked shard_map executable to
+     the per-shard dispatch loop on device failure (core/shard.py).
+  3. **deadline** — admitted but out of time (before or during execution).
+  4. **error** — a non-transient failure; reported, never raised into the
+     worker loop.
+  5. **shed** — the bounded admission queue is full; the request is
+     rejected *at submit time* (backpressure), before consuming any
+     execution resources.
+
+All knobs are constructor arguments; ``stats`` / ``latency_stats()``
+expose counts and p50/p99 for benchmarks (benchmarks/bench_serving.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.snapshot import SnapshotRegistry
+from repro.testing import faults
+from repro.testing.faults import FaultError
+
+_STOP = object()  # worker-loop sentinel
+
+
+@dataclass
+class Outcome:
+    """What the runtime resolves a request's Future to (never an exception)."""
+
+    status: str  # "ok" | "shed" | "deadline" | "error"
+    answers: set | None = None
+    version: int | None = None  # store version the answer is consistent with
+    stale: bool = False  # True: degraded pin served the last published version
+    retries: int = 0
+    latency_s: float = 0.0
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+@dataclass
+class _Request:
+    patterns: list
+    select: object
+    mode: str | None
+    deadline_t: float | None  # absolute monotonic deadline (None: unbounded)
+    submitted_t: float
+    future: Future = field(default_factory=Future)
+
+
+class ServingRuntime:
+    """Thread-pooled snapshot-isolated serving over one (Sharded)KnowledgeBase.
+
+    >>> rt = ServingRuntime(K, modes=("litemat", "rewrite"))
+    >>> with rt:
+    ...     out = rt.serve(PAPER_QUERIES["Q3"])          # sync
+    ...     fut = rt.submit(PAPER_QUERIES["Q1"])          # async
+    ...     rt.insert(more_triples)                       # publishes new version
+    ...     assert fut.result().ok
+    """
+
+    def __init__(self, kb, modes=("litemat",), use_index: bool = True,
+                 n_workers: int = 2, max_queue: int = 64,
+                 default_deadline_s: float | None = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.005,
+                 retry_backoff_cap_s: float = 0.1,
+                 pin_lock_timeout_s: float = 0.05, seed: int = 0):
+        self.kb = kb
+        self.registry = SnapshotRegistry(
+            kb, modes=modes, use_index=use_index,
+            lock_timeout_s=pin_lock_timeout_s)
+        self.n_workers = n_workers
+        self.default_deadline_s = default_deadline_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
+        self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._workers: list = []
+        self._started = False
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self._latencies: list = []  # (status, latency_s) per finished request
+        self.stats = {
+            "submitted": 0, "ok": 0, "shed": 0, "deadline": 0, "errors": 0,
+            "retries": 0, "stale_served": 0, "updates": 0,
+            "publish_failures": 0,
+        }
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "ServingRuntime":
+        if not self._started:
+            self._started = True
+            self.registry.publish()
+            for i in range(self.n_workers):
+                t = threading.Thread(target=self._worker_loop,
+                                     name=f"serve-worker-{i}", daemon=True)
+                t.start()
+                self._workers.append(t)
+        return self
+
+    def stop(self) -> None:
+        if self._started:
+            for _ in self._workers:
+                self._queue.put(_STOP)
+            for t in self._workers:
+                t.join()
+            self._workers.clear()
+            self._started = False
+
+    def __enter__(self) -> "ServingRuntime":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- read path -----------------------------------------------------------
+    def submit(self, patterns, select=None, mode: str | None = None,
+               deadline_s: float | None = None) -> Future:
+        """Admit a query (or shed it) and return a Future[Outcome].
+
+        The Future always resolves to an :class:`Outcome` — shed and
+        failed requests report through ``status``, they never raise.
+        """
+        if not self._started:
+            self.start()
+        now = time.monotonic()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        req = _Request(
+            patterns=list(patterns), select=select, mode=mode,
+            deadline_t=None if deadline_s is None else now + deadline_s,
+            submitted_t=now)
+        with self._lock:
+            self.stats["submitted"] += 1
+        try:
+            self._queue.put_nowait(req)
+        except queue.Full:
+            # backpressure: reject at admission, before any execution cost
+            out = Outcome(status="shed", latency_s=time.monotonic() - now)
+            self._finish(req, out)
+        return req.future
+
+    def serve(self, patterns, select=None, mode: str | None = None,
+              deadline_s: float | None = None) -> Outcome:
+        """Synchronous submit: blocks for this request's Outcome."""
+        return self.submit(patterns, select=select, mode=mode,
+                           deadline_s=deadline_s).result()
+
+    # -- write path ----------------------------------------------------------
+    def _write(self, op, *a, **kw) -> dict:
+        with self.kb.write_lock:
+            stats = op(*a, **kw)
+            try:
+                self.registry.publish()
+            except Exception:  # noqa: BLE001 — degrade, don't fail the write
+                # capture crashed (e.g. mid-flush): the mutation is
+                # committed but unpublished — readers keep degrading to the
+                # last published snapshot (stale tag) until a later pin or
+                # publish captures this version successfully
+                with self._lock:
+                    self.stats["publish_failures"] += 1
+        with self._lock:
+            self.stats["updates"] += 1
+        return stats
+
+    def insert(self, raw, **kw) -> dict:
+        return self._write(self.kb.insert, raw, **kw)
+
+    def delete(self, raw, **kw) -> dict:
+        return self._write(self.kb.delete, raw, **kw)
+
+    def compact(self, **kw) -> dict:
+        return self._write(self.kb.compact, **kw)
+
+    # -- worker internals ----------------------------------------------------
+    def _finish(self, req: _Request, out: Outcome) -> None:
+        with self._lock:
+            self.stats[out.status if out.status != "error" else "errors"] \
+                += 1
+            if out.stale and out.ok:
+                self.stats["stale_served"] += 1
+            self._latencies.append((out.status, out.latency_s))
+        req.future.set_result(out)
+
+    def _jitter(self, attempt: int) -> float:
+        base = min(self.retry_backoff_cap_s,
+                   self.retry_backoff_s * (2 ** attempt))
+        with self._lock:
+            u = float(self._rng.random())
+        return base * (0.5 + 0.5 * u)
+
+    def _worker_loop(self) -> None:
+        while True:
+            req = self._queue.get()
+            if req is _STOP:
+                return
+            try:
+                out = self._execute(req)
+            except Exception as e:  # noqa: BLE001 — workers must survive
+                out = Outcome(status="error",
+                              latency_s=time.monotonic() - req.submitted_t,
+                              error=f"{type(e).__name__}: {e}")
+            self._finish(req, out)
+
+    def _time_left(self, req: _Request) -> float:
+        if req.deadline_t is None:
+            return float("inf")
+        return req.deadline_t - time.monotonic()
+
+    def _execute(self, req: _Request) -> Outcome:
+        retries = 0
+        last_err: Exception | None = None
+        while True:
+            if self._time_left(req) <= 0:
+                return Outcome(
+                    status="deadline", retries=retries,
+                    latency_s=time.monotonic() - req.submitted_t,
+                    error=None if last_err is None else
+                    f"{type(last_err).__name__}: {last_err}")
+            pin = self.registry.pin()
+            try:
+                faults.fire("serving.execute", attempt=retries)
+                answers = pin.answers(req.patterns, select=req.select,
+                                      mode=req.mode)
+                if self._time_left(req) < 0:
+                    # finished late (e.g. a slow shard): the answer is
+                    # useless to a deadlined caller — report the miss
+                    return Outcome(
+                        status="deadline", retries=retries,
+                        latency_s=time.monotonic() - req.submitted_t)
+                return Outcome(
+                    status="ok", answers=answers, version=pin.version,
+                    stale=pin.stale, retries=retries,
+                    latency_s=time.monotonic() - req.submitted_t)
+            except FaultError as e:
+                # transient churn: back off with jitter and retry while
+                # the deadline and the retry budget allow
+                last_err = e
+                if retries >= self.max_retries:
+                    return Outcome(
+                        status="error", retries=retries,
+                        latency_s=time.monotonic() - req.submitted_t,
+                        error=f"{type(e).__name__}: {e}")
+                delay = self._jitter(retries)
+                retries += 1
+                with self._lock:
+                    self.stats["retries"] += 1
+                if self._time_left(req) <= delay:
+                    return Outcome(
+                        status="deadline", retries=retries,
+                        latency_s=time.monotonic() - req.submitted_t,
+                        error=f"{type(e).__name__}: {e}")
+                time.sleep(delay)
+            finally:
+                pin.release()
+
+    # -- reporting -----------------------------------------------------------
+    def latency_stats(self, status: str = "ok") -> dict:
+        with self._lock:
+            lat = sorted(l for s, l in self._latencies if s == status)
+        if not lat:
+            return dict(n=0)
+        arr = np.asarray(lat)
+        return dict(
+            n=len(lat),
+            p50_ms=float(np.percentile(arr, 50) * 1e3),
+            p99_ms=float(np.percentile(arr, 99) * 1e3),
+            mean_ms=float(arr.mean() * 1e3),
+        )
+
+
+__all__ = ["ServingRuntime", "Outcome"]

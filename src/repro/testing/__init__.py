@@ -1,0 +1,7 @@
+"""Test-support runtime pieces importable from production code paths.
+
+The only module here with production call sites is :mod:`repro.testing.faults`
+— the deterministic fault-injection harness.  Its instrumented sites compile
+down to one global read + one ``is None`` branch when no injector is armed,
+so shipping them inside the serving/update paths costs nothing.
+"""

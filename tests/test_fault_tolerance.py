@@ -1,10 +1,24 @@
-"""Checkpoint/restart, preemption, elastic restore."""
+"""Checkpoint/restart, preemption, elastic restore — and the concurrent
+read/write stress test: threaded readers pinned against a mutating store
+must match the differential oracle AT THEIR PINNED VERSION, bit-identical.
+"""
+import threading
+import time
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from oracle import NaiveKB, query_vars
+
+from repro.core.engine import KnowledgeBase, PAPER_QUERIES
+from repro.core.shard import ShardedKB
+from repro.core.snapshot import SnapshotRegistry
 from repro.distributed.checkpoint import CheckpointManager
+from repro.rdf.generator import generate_lubm
+from repro.serving.runtime import ServingRuntime
+from repro.utils import pair64
 
 
 def _toy_state(seed=0):
@@ -81,3 +95,188 @@ def test_train_resume_bit_exact(tmp_path):
     assert s2 == 6
     for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pc)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Threaded mixed workload: pinned readers vs a mutating writer
+# ---------------------------------------------------------------------------
+
+QUERIES = {n: PAPER_QUERIES[n] for n in ("Q1", "Q2", "Q3", "Q4")}
+SEL = {n: query_vars(q) for n, q in QUERIES.items()}
+
+
+def _fp_set(kb, rows) -> set:
+    """Result rows -> fingerprint space (the oracle's identity)."""
+    rows = np.asarray(rows)
+    if rows.size == 0:
+        return set()
+    ids = jnp.asarray(rows.reshape(-1).astype(np.int32))
+    hi, lo, hit = kb.kb.table.extract_fp(ids)
+    fps = pair64.combine_np(np.asarray(hi), np.asarray(lo))
+    fps = np.where(np.asarray(hit), fps, rows.reshape(-1))
+    return {tuple(r) for r in fps.reshape(rows.shape).tolist()}
+
+
+def _record(kb, oracle, expected) -> None:
+    """Write-lock-held: oracle answers for the CURRENT version.
+
+    The writer calls this before releasing the lock after every mutation,
+    so any version a reader can possibly pin (published fast path, fresh
+    capture — both see only post-critical-section versions) already has
+    its expected answer set.
+    """
+    expected[kb.version] = {
+        n: oracle.answers(q, SEL[n]) for n, q in QUERIES.items()}
+
+
+def _writer_script(raw):
+    s, p, o = np.asarray(raw.s), np.asarray(raw.p), np.asarray(raw.o)
+
+    def tr(a, b):
+        return (s[a:b], p[a:b], o[a:b])
+
+    return [
+        ("delete", tr(0, 100)),
+        ("insert", tr(0, 50)),  # re-insert half the deleted rows
+        ("compact", None),
+        ("delete", tr(300, 360)),
+        ("insert", tr(1000, 1040)),
+        ("compact", None),
+    ]
+
+
+def _apply(kb, oracle, op, payload):
+    if op == "insert":
+        kb.insert(payload, auto_compact=False)
+        oracle.insert(payload)
+    elif op == "delete":
+        kb.delete(payload, auto_compact=False)
+        oracle.delete(payload)
+    else:
+        kb.compact()
+        oracle.compact()
+
+
+def test_threaded_readers_match_oracle_at_pinned_version():
+    """N pinned readers racing 1 writer: every answer exact at its version.
+
+    The writer applies insert/delete/compact to the store AND the NaiveKB
+    oracle inside one write-lock critical section, recording the oracle's
+    answers keyed by the new version before releasing; readers concurrently
+    pin snapshots (Q1–Q4 x litemat/rewrite round-robin) and every answer
+    set must equal the oracle's at the READER'S pinned version — the MVCC
+    contract under real thread interleaving, including stale degraded pins.
+    """
+    raw = generate_lubm(1, seed=7)
+    K = KnowledgeBase.build(raw)
+    oracle = NaiveKB(raw.onto)
+    oracle.insert(raw)
+    reg = SnapshotRegistry(K, modes=("litemat", "rewrite"),
+                           lock_timeout_s=0.05)
+    expected: dict = {}
+    with K.write_lock:
+        _record(K, oracle, expected)
+    reg.publish()
+    reg.prewarm(list(QUERIES.values()))
+
+    failures: list = []
+    pairs = [(n, m) for n in QUERIES for m in ("litemat", "rewrite")]
+
+    def reader(rid: int, iters: int = 6):
+        try:
+            for i in range(iters):
+                name, mode = pairs[(rid + 3 * i) % len(pairs)]
+                with reg.pin() as pin:
+                    rows, _ = pin.query(QUERIES[name], select=SEL[name],
+                                        mode=mode)
+                    got = _fp_set(K, rows)
+                    want = expected[pin.version][name]
+                    if got != want:
+                        failures.append(
+                            (rid, i, name, mode, pin.version, pin.stale,
+                             len(got), len(want)))
+        except Exception as e:  # noqa: BLE001 — surfaced by the assert
+            failures.append((rid, "exception", repr(e)))
+
+    def writer():
+        try:
+            for op, payload in _writer_script(raw):
+                with K.write_lock:
+                    _apply(K, oracle, op, payload)
+                    _record(K, oracle, expected)
+                reg.publish()
+        except Exception as e:  # noqa: BLE001
+            failures.append(("writer", "exception", repr(e)))
+
+    threads = [threading.Thread(target=reader, args=(r,)) for r in range(3)]
+    threads.append(threading.Thread(target=writer))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert not failures, failures[:5]
+    assert len(expected) == 7  # v0 + six writer ops all recorded
+    # quiesced: one final fresh pin sees the final version exactly
+    with reg.pin() as pin:
+        assert pin.version == K.version and not pin.stale
+        rows, _ = pin.query(QUERIES["Q3"], select=SEL["Q3"])
+        assert _fp_set(K, rows) == expected[K.version]["Q3"]
+
+
+def test_sharded_runtime_mixed_workload_matches_oracle():
+    """The same contract through the ServingRuntime over a ShardedKB.
+
+    Requests stream through the bounded admission queue while a writer
+    thread mutates the shards; outcomes are compared post-hoc against the
+    oracle at each outcome's reported version.  At this baseline load
+    nothing sheds and nothing misses its (generous) deadline.
+    """
+    raw = generate_lubm(1, seed=7)
+    skb = ShardedKB.build(raw, n_shards=2)
+    oracle = NaiveKB(raw.onto)
+    oracle.insert(raw)
+    rt = ServingRuntime(skb, modes=("litemat",), n_workers=2, max_queue=64,
+                        pin_lock_timeout_s=0.1)
+    expected: dict = {}
+    with skb.write_lock:
+        _record(skb, oracle, expected)
+    with rt:
+        rt.registry.prewarm(list(QUERIES.values()))
+        done = threading.Event()
+
+        def writer():
+            try:
+                for op, payload in _writer_script(raw)[:4]:
+                    with skb.write_lock:
+                        _apply(skb, oracle, op, payload)
+                        _record(skb, oracle, expected)
+                    rt.registry.publish()
+            finally:
+                done.set()
+
+        w = threading.Thread(target=writer)
+        w.start()
+        names, futs = [], []
+        i = 0
+        while not done.is_set() or i < 8:  # keep reading past the last write
+            name = list(QUERIES)[i % len(QUERIES)]
+            names.append(name)
+            futs.append(rt.submit(QUERIES[name], select=SEL[name],
+                                  deadline_s=60.0))
+            i += 1
+            if i >= 48:
+                break
+            time.sleep(0.01)  # pace submissions across the writer's ops
+        outs = [f.result() for f in futs]
+        w.join()
+
+    assert all(o.ok for o in outs), [
+        (o.status, o.error) for o in outs if not o.ok][:3]
+    assert rt.stats["shed"] == 0 and rt.stats["deadline"] == 0
+    for name, out in zip(names, outs):
+        rows = np.asarray(sorted(out.answers)) if out.answers else \
+            np.zeros((0, len(SEL[name])), np.int32)
+        assert _fp_set(skb, rows) == expected[out.version][name], (
+            name, out.version, out.stale)
+    assert len(expected) == 5  # v0 + four writer ops

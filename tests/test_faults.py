@@ -1,0 +1,314 @@
+"""Fault-injection matrix for the concurrent read/write path.
+
+Every leg arms deterministic faults (tests/../src/repro/testing/faults.py)
+against instrumented production sites and pins the recovery behavior:
+
+  * mid-flush crash (single + sharded) — the derive-then-commit flush
+    leaves the published store consistent; the retried flush produces
+    answers bit-identical to the differential oracle;
+  * publish crash under the serving runtime — writers commit, readers
+    degrade to the last published snapshot with ``stale=True``, and the
+    next successful capture catches up;
+  * slow shard — a deadlined request reports a miss instead of hanging;
+  * shard_map device failure — the stacked path degrades to the per-shard
+    dispatch loop with identical answers;
+  * ingest part failures — transient ones retry with backoff, persistent
+    ones land in the structured report while the stream continues;
+  * serving transients — retry-with-jitter inside the request deadline;
+  * snapshot retirement — the widened retire window never drops a pinned
+    version.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from oracle import NaiveKB, query_vars
+
+from repro.core.engine import KnowledgeBase, PAPER_QUERIES
+from repro.core.shard import ShardedKB, assert_partitioned
+from repro.core.snapshot import SnapshotRegistry
+from repro.rdf.generator import generate_lubm
+from repro.serving.runtime import ServingRuntime
+from repro.testing import faults
+from repro.testing.faults import FaultCrash, FaultError, FaultInjector
+from test_update import answers_fp
+
+Q1, Q3 = PAPER_QUERIES["Q1"], PAPER_QUERIES["Q3"]
+
+
+@pytest.fixture(scope="module")
+def raw():
+    return generate_lubm(1, seed=7)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    yield
+    faults.uninstall()  # a failing test must not poison the next one
+
+
+# -- harness unit behavior ----------------------------------------------------
+
+def test_injector_windows_and_accounting():
+    inj = FaultInjector()
+    inj.arm("site.a", exc=FaultError, after=1, times=2)
+    inj.fire("site.a")  # hit 1: before the window
+    for _ in range(2):  # hits 2, 3: inside
+        with pytest.raises(FaultError):
+            inj.fire("site.a")
+    inj.fire("site.a")  # hit 4: window exhausted
+    assert inj.hit_count("site.a") == 4
+    assert inj.fired("site.a") == 2
+    kinds = [k for _, _, k, _ in inj.log]
+    assert kinds == ["hit", "fired", "fired", "hit"]
+
+
+def test_fire_is_noop_without_installed_injector():
+    faults.fire("anything.at.all", n=1)  # must not raise
+    with faults.inject() as inj:
+        inj.arm("site.b", exc=FaultCrash)
+        with pytest.raises(FaultCrash):
+            faults.fire("site.b")
+    faults.fire("site.b")  # uninstalled again
+
+
+# -- mid-flush crash ----------------------------------------------------------
+
+def test_mid_flush_crash_single_store_stays_consistent(raw):
+    K = KnowledgeBase.build(raw)
+    oracle = NaiveKB(raw.onto)
+    oracle.insert(raw)
+    s, p, o = np.asarray(raw.s), np.asarray(raw.p), np.asarray(raw.o)
+    extra = (s[:64], p[:64], o[:64])
+    K.insert(extra, auto_compact=False)  # queued, not yet derived
+    oracle.insert(extra)
+
+    with faults.inject() as inj:
+        inj.arm("engine.flush_mat", exc=FaultCrash, times=1)
+        with pytest.raises(FaultCrash):
+            K.view("litemat")  # lazy derivation crashes mid-flush
+        assert inj.fired("engine.flush_mat") == 1
+        # nothing committed: the retried flush derives the SAME backlog
+        # exactly once — answers match the oracle (no drop, no double)
+        sel = query_vars(Q3)
+        assert answers_fp(K, Q3, select=sel) == oracle.answers(Q3, sel)
+
+
+def test_mid_flush_crash_sharded_stays_consistent(raw):
+    skb = ShardedKB.build(raw, n_shards=2)
+    oracle = NaiveKB(raw.onto)
+    oracle.insert(raw)
+    s, p, o = np.asarray(raw.s), np.asarray(raw.p), np.asarray(raw.o)
+    extra = (s[:64], p[:64], o[:64])
+    skb.insert(extra, auto_compact=False)
+    oracle.insert(extra)
+
+    with faults.inject() as inj:
+        # crash on the SECOND shard's derivation: shard 0's derived rows
+        # are staged but must not have been committed
+        inj.arm("shard.flush_mat", exc=FaultCrash, after=1, times=1)
+        with pytest.raises(FaultCrash):
+            skb._flush("litemat")
+        assert inj.fired("shard.flush_mat") == 1
+    sel = query_vars(Q3)
+    assert answers_fp(skb, Q3, select=sel) == oracle.answers(Q3, sel)
+    assert_partitioned(skb)
+
+
+# -- serving runtime degradation ----------------------------------------------
+
+def test_publish_crash_serves_stale_snapshot_then_catches_up(raw):
+    K = KnowledgeBase.build(raw)
+    rt = ServingRuntime(K, modes=("litemat",), n_workers=1,
+                        pin_lock_timeout_s=0.05)
+    s, p, o = np.asarray(raw.s), np.asarray(raw.p), np.asarray(raw.o)
+    with rt:
+        v0 = rt.serve(Q1).version
+        with faults.inject() as inj:
+            # fire 1: the writer's publish after insert; fire 2: the first
+            # reader's own fresh-capture attempt — both crash, so the
+            # reader degrades to the stale published snapshot
+            inj.arm("engine.flush_mat", exc=FaultCrash, times=2)
+            assert rt.insert((s[:32], p[:32], o[:32]),
+                             auto_compact=False)["n_inserted"] == 32
+            assert rt.stats["publish_failures"] == 1
+            out_stale = rt.serve(Q1)
+            assert out_stale.ok and out_stale.stale
+            assert out_stale.version == v0
+            assert inj.fired("engine.flush_mat") == 2
+        out_fresh = rt.serve(Q1)  # fault exhausted: capture succeeds
+        assert out_fresh.ok and not out_fresh.stale
+        assert out_fresh.version == K.version != v0
+        assert rt.stats["stale_served"] == 1
+
+
+def test_slow_shard_becomes_deadline_miss(raw):
+    skb = ShardedKB.build(raw, n_shards=2)
+    rt = ServingRuntime(skb, modes=("litemat",), n_workers=1, max_retries=0)
+    with rt:
+        rt.registry.prewarm([Q1])
+        assert rt.serve(Q1).ok  # warm: comfortably under any sane deadline
+        with faults.inject() as inj:
+            inj.arm("shard.query_shard", exc=None, delay_s=0.25, times=-1)
+            out = rt.serve(Q1, deadline_s=0.2)
+            assert out.status == "deadline"
+            assert inj.fired("shard.query_shard") >= 1
+        assert rt.serve(Q1, deadline_s=30.0).ok
+
+
+def test_serving_transient_retries_with_jitter_inside_deadline(raw):
+    K = KnowledgeBase.build(raw)
+    rt = ServingRuntime(K, modes=("litemat",), n_workers=1, max_retries=3,
+                        retry_backoff_s=0.001)
+    with rt:
+        rt.registry.prewarm([Q1])
+        with faults.inject() as inj:
+            inj.arm("serving.execute", exc=FaultError, times=2)
+            out = rt.serve(Q1, deadline_s=30.0)
+            assert out.ok and out.retries == 2
+        assert rt.stats["retries"] == 2
+        with faults.inject() as inj:
+            inj.arm("serving.execute", exc=FaultError, times=-1)
+            out = rt.serve(Q1)  # budget exhausted -> reported, not raised
+            assert out.status == "error" and "FaultError" in out.error
+
+
+def test_admission_queue_sheds_past_capacity(raw):
+    K = KnowledgeBase.build(raw)
+    rt = ServingRuntime(K, modes=("litemat",), n_workers=1, max_queue=2)
+    with rt:
+        rt.registry.prewarm([Q1])
+        with faults.inject() as inj:
+            # park the worker inside its first request so the queue backs up
+            inj.arm("serving.execute", exc=None, delay_s=0.3, times=1)
+            futs = [rt.submit(Q1) for _ in range(8)]
+            outs = [f.result() for f in futs]
+        statuses = [o.status for o in outs]
+        assert statuses.count("shed") >= 5  # capacity 2 + 1 in flight
+        assert all(o.ok for o in outs if o.status == "ok")
+        assert rt.stats["shed"] == statuses.count("shed")
+
+
+# -- shard_map device failure -------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs multiple devices (forced-8 CI leg)")
+def test_shard_map_failure_falls_back_to_dispatch_loop(raw):
+    skb = ShardedKB.build(raw, n_shards=min(jax.device_count(), 4))
+    eng = skb.engine("litemat")
+    assert eng._shard_map_on()
+    want, sel = skb.query(Q3)
+    with faults.inject() as inj:
+        inj.arm("shard.shard_map", exc=FaultError, times=1)
+        rows, sel2 = skb.query(Q3)
+        assert inj.fired("shard.shard_map") == 1
+    assert eng.cache_stats["shard_map_faults"] == 1
+    assert eng.cache_stats["loop_runs"] >= 1
+    assert sel2 == sel and np.array_equal(np.asarray(rows), np.asarray(want))
+
+
+# -- ingest fault tolerance ---------------------------------------------------
+
+def _parts(raw, n_parts=4, rows_per=96):
+    s, p, o = np.asarray(raw.s), np.asarray(raw.p), np.asarray(raw.o)
+    return [(s[i * rows_per:(i + 1) * rows_per],
+             p[i * rows_per:(i + 1) * rows_per],
+             o[i * rows_per:(i + 1) * rows_per]) for i in range(n_parts)]
+
+
+def test_ingest_retries_transient_part_failures(raw):
+    from repro.core.tbox import build_tbox
+
+    tbox = build_tbox(raw.onto)
+    parts = _parts(raw)
+    with faults.inject() as inj:
+        # part 1's encode fails twice, then succeeds on the third attempt
+        inj.arm("shard.ingest_encode", exc=FaultError, after=1, times=2)
+        skb = ShardedKB.ingest(parts, tbox=tbox, n_shards=2,
+                               max_part_retries=3, backoff_s=0.001)
+    rep = skb.ingest_report
+    assert rep.ok and rep.n_retries == 2
+    assert [p["attempts"] for p in rep.parts] == [1, 3, 1, 1]
+    assert skb.version == len(parts)
+    assert rep.n_rows == sum(p[0].shape[0] for p in parts)
+    assert_partitioned(skb)
+
+
+def test_ingest_reports_persistent_failure_and_continues(raw):
+    from repro.core.tbox import build_tbox
+
+    tbox = build_tbox(raw.onto)
+    parts = _parts(raw)
+    with faults.inject() as inj:
+        # part 2 fails on every attempt (hits 3..5: first attempt + retries)
+        inj.arm("shard.ingest_encode", exc=FaultError, after=2, times=3)
+        skb = ShardedKB.ingest(parts, tbox=tbox, n_shards=2,
+                               max_part_retries=2, backoff_s=0.001)
+    rep = skb.ingest_report
+    assert not rep.ok
+    assert [p["part"] for p in rep.failed] == [2]
+    assert rep.failed[0]["attempts"] == 3 and "FaultError" in \
+        rep.failed[0]["error"]
+    # the stream continued past the bad part; the store is consistent at
+    # the version the successful parts published
+    assert [p["ok"] for p in rep.parts] == [True, True, False, True]
+    assert skb.version == 3
+    assert_partitioned(skb)
+
+
+def test_ingest_hard_crash_is_not_retried(raw):
+    from repro.core.tbox import build_tbox
+
+    tbox = build_tbox(raw.onto)
+    parts = _parts(raw, n_parts=2)
+    with faults.inject() as inj:
+        inj.arm("shard.ingest_encode", exc=FaultCrash, after=1, times=-1)
+        skb = ShardedKB.ingest(parts, tbox=tbox, n_shards=2,
+                               max_part_retries=5, backoff_s=0.001)
+        assert inj.fired("shard.ingest_encode") == 1  # no retry attempts
+    rep = skb.ingest_report
+    assert [p["ok"] for p in rep.parts] == [True, False]
+    assert rep.parts[1]["attempts"] == 1
+
+
+# -- snapshot-retire race -----------------------------------------------------
+
+def test_retire_window_never_drops_a_pinned_version(raw):
+    K = KnowledgeBase.build(raw)
+    reg = SnapshotRegistry(K, modes=("litemat",))
+    s, p, o = np.asarray(raw.s), np.asarray(raw.p), np.asarray(raw.o)
+    reg.publish()
+    errors = []
+
+    with faults.inject() as inj:
+        inj.arm("snapshot.retire", exc=None, delay_s=0.02,
+                times=-1)  # widen the race window
+
+        def reader():
+            try:
+                for _ in range(6):
+                    with reg.pin() as pin:
+                        assert pin.version in reg.live_versions()
+                        assert len(pin.answers(Q1)) > 0
+            except Exception as e:  # noqa: BLE001 — surfaced below
+                errors.append(e)
+
+        threads = [threading.Thread(target=reader) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for i in range(4):  # writer churns versions -> publish + retire
+            K.delete((s[i * 16:(i + 1) * 16], p[i * 16:(i + 1) * 16],
+                      o[i * 16:(i + 1) * 16]), auto_compact=False)
+            reg.publish()
+        for t in threads:
+            t.join()
+        assert inj.hit_count("snapshot.retire") > 0
+
+    assert not errors
+    # quiesced: only the published version remains
+    reg.retire()
+    assert reg.live_versions() == [reg.published.version]
+    assert reg.pinned_versions() == []
