@@ -28,6 +28,12 @@ Guards against CPU-runner noise:
     ``updates/warmup_flatness``) are compared on their ``passed`` flag
     instead: a True -> False flip is always a failure.
 
+Rows carrying a ``gate_max_pct`` field (e.g. ``serving/obs_overhead``,
+the <3% tracing-overhead budget) are ABSOLUTE gates: they fail on their
+own ``passed`` flag with no baseline needed — the bench computed the
+overhead against an untraced run in the same process, so cross-run
+hardware noise does not apply.
+
 Usage:
     python scripts/bench_diff.py [--baseline-dir prev-bench]
                                  [--baseline-ref HEAD~1] [--tolerance 0.2]
@@ -116,6 +122,20 @@ def diff_artifact(cur: dict, base: dict, tolerance: float, min_us: float):
     return regressions, improvements, notes
 
 
+def gate_failures(cur: dict) -> list:
+    """Baseline-independent failures: rows with a self-contained gate."""
+    failures = []
+    for name, row in sorted(_rows_by_name(cur).items()):
+        if "gate_max_pct" not in row:
+            continue
+        if row.get("passed") is False:
+            failures.append(
+                f"  {name}: GATE FAILED — "
+                f"{row.get('overhead_pct', '?')}% > "
+                f"{row['gate_max_pct']}% budget ({row})")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("files", nargs="*", default=list(DEFAULT_FILES))
@@ -131,16 +151,25 @@ def main(argv=None) -> int:
     ap.add_argument("--min-us", type=float, default=50_000,
                     help="noise floor: rows faster than this never fail")
     ap.add_argument("--warn-only", action="store_true",
-                    help="report regressions but exit 0")
+                    help="report baseline regressions but exit 0 "
+                         "(absolute gate_max_pct rows still fail: they "
+                         "compare within one process, so runner noise "
+                         "does not excuse them)")
     args = ap.parse_args(argv)
     files = args.files or list(DEFAULT_FILES)
 
-    failed = False
+    failed = gate_failed = False
     for path in files:
         cur = _load_current(path)
         if cur is None:
             print(f"# {path}: no current artifact (bench not run?) — skipped")
             continue
+        gates = gate_failures(cur)
+        if gates:
+            print(f"# {path} absolute gates:")
+            for line in gates:
+                print(line)
+            failed = gate_failed = True
         base = None
         provenance = args.baseline_ref
         hit = _load_baseline_dir(args.baseline_dir, path)
@@ -179,6 +208,9 @@ def main(argv=None) -> int:
         if not reg and not imp:
             print("  no significant changes")
 
+    if gate_failed:
+        print("bench_diff: FAILED (absolute gate violated)")
+        return 1
     if failed and not args.warn_only:
         print("bench_diff: FAILED (see REGRESSIONS above)")
         return 1

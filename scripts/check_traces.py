@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Validate every trace in an export file against the obs trace schema.
+
+CI's obs smoke leg runs the serving bench with ``REPRO_TRACE_EXPORT`` set,
+then holds the resulting file to the contract in
+``repro.obs.export.TRACE_SCHEMA`` plus the structural invariants
+(exactly one root span per trace, no dangling parent_ids, ordered
+[t0, t1] windows).  Any violation prints the offending trace/span and
+exits 1, failing the job.
+
+Usage:
+    PYTHONPATH=src python scripts/check_traces.py traces.json [more...]
+    PYTHONPATH=src python scripts/check_traces.py --min-traces 10 traces.json
+
+Exit codes: 0 all traces valid, 1 invalid trace / unreadable file /
+fewer traces than ``--min-traces`` (a silently-empty export must not
+pass the smoke leg).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.export import validate_trace
+
+
+def check_file(path: str, min_traces: int) -> int:
+    """Validate one export file; returns the number of errors printed."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable ({e})")
+        return 1
+    traces = doc.get("traces")
+    if not isinstance(traces, list):
+        print(f"{path}: no 'traces' array")
+        return 1
+    n_errors = 0
+    for i, trace in enumerate(traces):
+        errors = validate_trace(trace)
+        for err in errors:
+            print(f"{path}[{i}]: {err}")
+        n_errors += len(errors)
+    if len(traces) < min_traces:
+        print(f"{path}: only {len(traces)} traces, expected >= {min_traces}")
+        n_errors += 1
+    dropped = doc.get("dropped", 0)
+    print(f"# {path}: {len(traces)} traces checked, "
+          f"{n_errors} errors, {dropped} dropped by the ring")
+    return n_errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--min-traces", type=int, default=1,
+                    help="fail when a file holds fewer traces than this")
+    args = ap.parse_args(argv)
+    total = sum(check_file(p, args.min_traces) for p in args.files)
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

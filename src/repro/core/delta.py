@@ -55,6 +55,7 @@ from repro.core.index import (
     pow2_bucket as _pow2,
 )
 from repro.kernels import ops
+from repro.obs.metrics import REGISTRY
 
 MODES = ("rewrite", "litemat", "full")  # raw / lite / full store names
 
@@ -270,6 +271,22 @@ class DeviceStoreCache:
             "stale_view_builds": 0,  # one-off builds for out-of-date views
         }
 
+    def _stat(self, key: str, n: int = 1) -> None:
+        """Bump the local dict AND the process registry mirror.
+
+        Row-unit upload counters also feed ``device/transfer_bytes``
+        (12 B per [s,p,o] int32 row, 1 B per liveness bit) so the
+        observability layer sees host->device traffic in one unit.
+        """
+        self.stats[key] += n
+        REGISTRY.counter("device/" + key, src="store_cache").inc(n)
+        if key == "upload_delta_rows":
+            REGISTRY.counter("device/transfer_bytes",
+                             src="store_cache").inc(n * 12)
+        elif key in ("upload_alive_rows", "upload_base_alive_rows"):
+            REGISTRY.counter("device/transfer_bytes",
+                             src="store_cache").inc(n)
+
     def _all_alive(self, token: int, n: int) -> jnp.ndarray:
         key = (token, n)
         if key not in self._ones:
@@ -285,9 +302,9 @@ class DeviceStoreCache:
         if not view.has_delta:
             return None, None  # delta-free: single-source executables
         rows, alive = _delta_host(view, key)
-        self.stats["upload_delta_rows"] += cap
-        self.stats["upload_alive_rows"] += cap
-        self.stats["delta_allocs"] += 1
+        self._stat("upload_delta_rows", cap)
+        self._stat("upload_alive_rows", cap)
+        self._stat("delta_allocs")
         return (jnp.asarray(_pad_rows(rows, cap)),
                 jnp.asarray(_pad_alive(alive, cap)))
 
@@ -297,14 +314,14 @@ class DeviceStoreCache:
         return view.base_index.perm(key).rows
 
     def _fresh(self, view: "StoreView", key: str, cap: int) -> _DevState:
-        self.stats["base_rebuilds"] += 1
+        self._stat("base_rebuilds")
         token = view.base_index.token
         if view.base_alive_h is None:
             base_alive = self._all_alive(token, view.base_n)
         else:
             alive_h = (view.base_alive_h if key == "scan"
                        else view.base_alive_h[view.base_index.perm(key).perm])
-            self.stats["upload_base_alive_rows"] += view.base_n
+            self._stat("upload_base_alive_rows", view.base_n)
             base_alive = jnp.asarray(alive_h)
         delta, dalive = self._upload_delta(view, key, cap)
         return _DevState(
@@ -338,7 +355,7 @@ class DeviceStoreCache:
             # mutations or a compaction): serve it a one-off build, never
             # rewind the cache — rewinding would make alternating
             # old-snapshot/live queries thrash O(base) rebuilds
-            self.stats["stale_view_builds"] += 1
+            self._stat("stale_view_builds")
             return _one_off_dev(view, key, base)
 
         if st is None or st.base_token != token:
@@ -363,17 +380,17 @@ class DeviceStoreCache:
                                           dtype=np.int32)
                         st.delta = lax.dynamic_update_slice(
                             st.delta, jnp.asarray(tail), (st.delta_len, 0))
-                        self.stats["upload_delta_rows"] += grew
+                        self._stat("upload_delta_rows", grew)
                     else:
                         rows, _ = _delta_host(view, key)
                         st.delta = jnp.asarray(_pad_rows(rows, cap))
-                        self.stats["upload_delta_rows"] += cap
+                        self._stat("upload_delta_rows", cap)
                 # grew == 0 means a tombstone-only change: the log is
                 # append-only, so the resident ROW buckets are already
                 # correct in every order — refresh just the alive bits
                 _, alive = _delta_host(view, key)
                 st.delta_alive = jnp.asarray(_pad_alive(alive, cap))
-                self.stats["upload_alive_rows"] += cap
+                self._stat("upload_alive_rows", cap)
                 st.delta_len = view.delta_n
                 st.tombstone_mut = view.delta_mut
             if len(view.kills) > st.n_kills:
@@ -391,11 +408,11 @@ class DeviceStoreCache:
                     st.base_alive = jnp.array(st.base_alive)
                     st.owns_alive = True
                     st.leased = False
-                    self.stats[stat] += int(st.base_alive.shape[0])
+                    self._stat(stat, int(st.base_alive.shape[0]))
                 st.base_alive = _kill_scatter(
                     st.base_alive,
                     _pad_kill_idx(idx, int(st.base_alive.shape[0])))
-                self.stats["kill_scatter_rows"] += int(idx.shape[0])
+                self._stat("kill_scatter_rows", int(idx.shape[0]))
                 st.n_kills = len(view.kills)
 
         if view.pinned:

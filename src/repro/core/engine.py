@@ -30,6 +30,7 @@ is no manual invalidation step.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -50,6 +51,8 @@ from repro.core.update import (
     DynamicDictionary, RowLocator, absorb_new_terms, affected_instances,
     encode_delta, materialize_delta_mode, mention_rows, mentions_mask,
 )
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY
 from repro.rdf.generator import RawDataset
 from repro.testing import faults
 
@@ -165,15 +168,22 @@ class KnowledgeBase:
             cur = self._mat_cursor[mode]
             if cur >= n:
                 continue
-            derived = []
-            for spo in self._pending_raw[cur:]:
-                faults.fire("engine.flush_mat", mode=mode,
-                            batch=cur + len(derived))
-                derived.append(materialize_delta_mode(spo, self.dtb, mode))
-            for rows in derived:
-                self.delta.log(mode).append(rows)
-                self.mat_counts[mode] += 1
-            self._mat_cursor[mode] = n
+            with obs_trace.span("flush_mat", mode=mode, n_batches=n - cur):
+                t0 = time.perf_counter()
+                derived = []
+                for spo in self._pending_raw[cur:]:
+                    faults.fire("engine.flush_mat", mode=mode,
+                                batch=cur + len(derived))
+                    derived.append(
+                        materialize_delta_mode(spo, self.dtb, mode))
+                for rows in derived:
+                    self.delta.log(mode).append(rows)
+                    self.mat_counts[mode] += 1
+                self._mat_cursor[mode] = n
+                REGISTRY.histogram("engine/flush_s", mode=mode).observe(
+                    time.perf_counter() - t0)
+                REGISTRY.counter("engine/derived_rows", mode=mode).inc(
+                    sum(int(r.shape[0]) for r in derived))
         if self._pending_raw and all(
                 c >= n for c in self._mat_cursor.values()):
             self._pending_raw.clear()
@@ -330,6 +340,7 @@ class KnowledgeBase:
                 self._flush_mat("litemat", "full")
             d.n_new_terms += n_new
             self._bump()
+            REGISTRY.counter("engine/inserted_rows").inc(int(spo.shape[0]))
             stats = dict(
                 n_inserted=int(spo.shape[0]),
                 n_new_terms=n_new,
@@ -453,6 +464,8 @@ class KnowledgeBase:
                 self.append_derived(
                     mode, derived[mentions_mask(derived, inst)])
             self._bump()
+            REGISTRY.counter("engine/deleted_rows").inc(
+                int(deleted.shape[0]))
             stats = dict(
                 n_deleted=int(deleted.shape[0]),
                 n_affected_instances=int(inst.shape[0]),
@@ -482,21 +495,26 @@ class KnowledgeBase:
             if ((self._delta is None or self._delta.empty)
                     and not self._pending_raw):
                 return dict(compacted=False)
-            self._flush_mat("litemat", "full")
-            if device is None:
-                device = jax.default_backend() == "tpu"
-            sizes = {}
-            for mode in MODES:
-                dev, idx = compact_view(self.view(mode), device=device)
-                if mode == "rewrite":
-                    self.kb.spo = dev
-                elif mode == "litemat":
-                    self.lite_spo = dev
-                else:
-                    self.full_spo = dev
-                self._base_indexes[mode] = idx
-                sizes[mode] = int(dev.shape[0])
-            self._delta = DeltaKB()
-            self._raw_loc = None
-            self._bump()
+            with obs_trace.span("compact"):
+                t0 = time.perf_counter()
+                self._flush_mat("litemat", "full")
+                if device is None:
+                    device = jax.default_backend() == "tpu"
+                sizes = {}
+                for mode in MODES:
+                    dev, idx = compact_view(self.view(mode), device=device)
+                    if mode == "rewrite":
+                        self.kb.spo = dev
+                    elif mode == "litemat":
+                        self.lite_spo = dev
+                    else:
+                        self.full_spo = dev
+                    self._base_indexes[mode] = idx
+                    sizes[mode] = int(dev.shape[0])
+                self._delta = DeltaKB()
+                self._raw_loc = None
+                self._bump()
+                REGISTRY.counter("engine/compactions").inc()
+                REGISTRY.histogram("engine/compact_s").observe(
+                    time.perf_counter() - t0)
             return dict(compacted=True, version=self.version, **sizes)

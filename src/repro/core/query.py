@@ -67,6 +67,8 @@ from repro.core.delta import StoreView
 from repro.core.index import StoreIndex, key_cols, pow2_bucket as _pow2
 from repro.core.materialize import DeviceTBox
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY
 
 INVALID = jnp.int32(np.iinfo(np.int32).max)
 _I32_MIN = int(np.iinfo(np.int32).min)
@@ -440,6 +442,10 @@ def _inl_ranges(ds, prim: int, sec: int, qhi, qlo, valid):
 def _eval_inl(sig: PatternSig, cap: int, stores, dyn, rel: Relation):
     """Index-nested-loop join: probe a sorted store with the current relation.
 
+    Returns (joined Relation, match count) — the count is the expanded hit
+    total before capacity clipping, the INL analogue of ``_eval_pattern``'s
+    per-pattern total (EXPLAIN reads both through the executable).
+
     The Q4-style fallback: when the accumulated relation is tiny next to a
     pattern's row count, evaluating the pattern in full (a huge slice or
     scan) just to sort-merge-join it away is wasted work.  Instead, each
@@ -503,7 +509,7 @@ def _eval_inl(sig: PatternSig, cap: int, stores, dyn, rel: Relation):
         cols=jnp.stack(out_cols),
         valid=ok,
         overflow=rel.overflow + jnp.maximum(total - cap, 0),
-    )
+    ), total
 
 
 def scan_relation(spo, pattern_vars, pat_terms, mode: str, cap: int, extra=None):
@@ -649,6 +655,9 @@ class QueryEngine:
     _exec_cache: dict = field(default_factory=dict, repr=False)
     cache_stats: dict = field(default_factory=lambda: {"hits": 0, "misses": 0},
                               repr=False)
+    # PatternSig -> last observed selectivity (observed rows / store rows);
+    # filled by every successful run/explain, read by planner consumers
+    observed_selectivity: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         if self.dtb is None and self.kb.tbox is not None:
@@ -854,26 +863,39 @@ class QueryEngine:
         return int(fn(self.view.dev("scan"), dyn))
 
     def _executable(self, key, sigs, caps, join_cap: int, select):
-        """Memoized jitted plan: signature + buckets -> compiled function."""
+        """Memoized jitted plan: signature + buckets -> compiled function.
+
+        The executable returns (cols, valid, overflow, totals): ``totals``
+        is int32[n_patterns] — each pattern's OBSERVED match count before
+        capacity clipping, in plan order — computed inside the same trace
+        (no extra device pass; the scalars ride the overflow fetch).
+        EXPLAIN and the selectivity capture read their observed-vs-estimated
+        row counts off it.
+        """
         fn = self._exec_cache.get(key)
         if fn is None:
             self.cache_stats["misses"] += 1
+            REGISTRY.counter("query/plan_cache", event="miss").inc()
 
             def run_device(stores, dyns):
                 rel = None
+                totals = []
                 for sig, cap, dyn in zip(sigs, caps, dyns):
                     if sig.strategy == "inl":  # consumes the running relation
-                        rel = _eval_inl(sig, cap, stores, dyn, rel)
-                        continue
-                    r, _ = _eval_pattern(sig, cap, stores, dyn)
-                    rel = r if rel is None else join(rel, r, join_cap)
+                        rel, t = _eval_inl(sig, cap, stores, dyn, rel)
+                    else:
+                        r, t = _eval_pattern(sig, cap, stores, dyn)
+                        rel = r if rel is None else join(rel, r, join_cap)
+                    totals.append(t)
                 out = distinct(rel, select, join_cap)
-                return out.cols, out.valid, out.overflow
+                return (out.cols, out.valid, out.overflow,
+                        jnp.stack(totals).astype(jnp.int32))
 
             fn = jax.jit(run_device)
             self._exec_cache[key] = fn
         else:
             self.cache_stats["hits"] += 1
+            REGISTRY.counter("query/plan_cache", event="hit").inc()
         return fn
 
     @staticmethod
@@ -987,7 +1009,14 @@ class QueryEngine:
             est = min(est, counts[i])
 
     def _plan(self, patterns, select):
-        """Host planning: -> (sigs, dyns, ordered caps, join_cap, sel, stores)."""
+        """Host planning: -> (sigs, dyns, ordered caps, join_cap, sel,
+        stores, order, est).
+
+        The first six elements are the PR-5 contract (core/shard.py indexes
+        them positionally); ``order`` maps plan position -> original pattern
+        index and ``est`` carries the planner's per-pattern cardinality
+        estimates in plan order (what EXPLAIN compares observed counts to).
+        """
         prepared = self._prepare(patterns)
         lowered = [self._lower(*pre) for pre in prepared]
         counts = [
@@ -1004,22 +1033,107 @@ class QueryEngine:
         all_vars = tuple(dict.fromkeys(
             v for sig in sigs for v in sig.pvars if v is not None))
         sel = tuple(select) if select else all_vars
-        return sigs, dyns, caps, join_cap, sel, self._stores(sigs)
+        return (sigs, dyns, caps, join_cap, sel, self._stores(sigs),
+                tuple(order), tuple(counts[i] for i in order))
+
+    def _record_observed(self, sigs, est, totals) -> None:
+        """Land observed per-pattern row counts in the process registry.
+
+        ``observed_selectivity`` (engine-local, keyed by PatternSig) is the
+        exact read-back surface for the planner; the registry histograms
+        aggregate observed rows and estimate error (est/obs ratio) by
+        strategy for the exporters and the ROADMAP item-1 batcher.
+        """
+        store_n = max(self.view.n, 1)
+        for sig, e, obs in zip(sigs, est, totals):
+            obs = int(obs)
+            self.observed_selectivity[sig] = obs / store_n
+            REGISTRY.histogram("planner/observed_rows",
+                               strategy=sig.strategy).observe(obs)
+            REGISTRY.histogram("planner/est_ratio",
+                               strategy=sig.strategy).observe(
+                (int(e) + 1) / (obs + 1))
+            REGISTRY.gauge("planner/selectivity", strategy=sig.strategy,
+                           store=sig.store).set(obs / store_n)
 
     def run(self, patterns, select=None, max_retries: int = 6):
         """Execute; returns (rows int32[k, n_select], select var names)."""
-        sigs, dyns, caps, join_cap, sel, stores = self._plan(patterns, select)
-        for _ in range(max_retries):
+        with obs_trace.span("plan", mode=self.mode,
+                            n_patterns=len(patterns)):
+            (sigs, dyns, caps, join_cap, sel, stores,
+             order, est) = self._plan(patterns, select)
+        for attempt in range(max_retries):
             key = ("exec", self.mode, sigs, tuple(caps), join_cap, sel)
+            misses0 = self.cache_stats["misses"]
             fn = self._executable(key, sigs, tuple(caps), join_cap, sel)
-            cols, valid, overflow = fn(stores, dyns)
-            if int(overflow) == 0:
+            with obs_trace.span("dispatch",
+                                cached=self.cache_stats["misses"] == misses0,
+                                join_cap=join_cap) as dsp:
+                cols, valid, overflow, totals = fn(stores, dyns)
+                done = int(overflow) == 0
+                dsp.set_attr(overflow=not done)
+            if done:
+                self._record_observed(sigs, est, np.asarray(totals))
                 n = int(valid.sum())
                 rows = np.asarray(cols)[:, :n].T
                 return rows, sel
+            obs_trace.event("overflow_retry", attempt=attempt,
+                            join_cap=join_cap)
+            REGISTRY.counter("query/overflow_retries").inc()
             join_cap *= 2
             caps = [c * 2 for c in caps]
         raise RuntimeError("query kept overflowing its capacity buckets")
+
+    def explain(self, patterns, select=None, execute: bool = True) -> dict:
+        """EXPLAIN: per-pattern strategy, buckets, estimated-vs-observed rows.
+
+        Plans exactly like ``run`` and (by default) executes once through
+        the same cached executable to read each pattern's observed match
+        count off the device — estimates vs observed is the signal the
+        INL-vs-merge choice and the ROADMAP item-1 batcher need.  Observed
+        selectivities land in the process registry via
+        :meth:`_record_observed`.  ``execute=False`` reports the plan only.
+        """
+        (sigs, dyns, caps, join_cap, sel, stores,
+         order, est) = self._plan(patterns, select)
+        observed = [None] * len(sigs)
+        n_rows = None
+        if execute and self.view.n:
+            key = ("exec", self.mode, sigs, tuple(caps), join_cap, sel)
+            fn = self._executable(key, sigs, tuple(caps), join_cap, sel)
+            cols, valid, overflow, totals = fn(stores, dyns)
+            observed = [int(t) for t in np.asarray(totals)]
+            n_rows = int(valid.sum())
+            self._record_observed(sigs, est, observed)
+        store_n = max(self.view.n, 1)
+        pats = []
+        for j, sig in enumerate(sigs):
+            entry = {
+                "pattern_index": order[j],
+                "strategy": sig.strategy,
+                "store": sig.store,
+                "cap": caps[j],
+                "estimated_rows": int(est[j]),
+                "observed_rows": observed[j],
+            }
+            if sig.strategy == "slice":
+                entry["n_ranges"] = sig.k
+            if sig.strategy == "scan":
+                entry["fused"] = sig.fused
+            if sig.strategy == "inl":
+                entry["n_pids"] = sig.n_pids
+                entry["probe_pos"] = sig.probe_pos
+            if observed[j] is not None:
+                entry["selectivity"] = observed[j] / store_n
+            pats.append(entry)
+        return {
+            "mode": self.mode,
+            "select": list(sel),
+            "store_rows": int(self.view.n),
+            "join_cap": join_cap,
+            "n_result_rows": n_rows,
+            "patterns": pats,
+        }
 
     def prewarm(self, queries, buckets=(), select=None) -> int:
         """Pre-trace executables for a query set; returns #plans compiled.
@@ -1033,7 +1147,8 @@ class QueryEngine:
         """
         before = self.cache_stats["misses"]
         for pats in queries:
-            sigs, dyns, caps, join_cap, sel, stores = self._plan(pats, select)
+            sigs, dyns, caps, join_cap, sel, stores = \
+                self._plan(pats, select)[:6]
             capsets = {(tuple(caps), join_cap)}
             for b in buckets:
                 b = self._bucket(int(b))

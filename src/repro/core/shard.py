@@ -81,6 +81,8 @@ from repro.core.update import (
     materialize_delta_mode, mentions_mask,
 )
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY
 from repro.testing import faults
 from repro.testing.faults import FaultCrash, FaultError
 from repro.utils.jaxcompat import make_mesh, shard_map
@@ -316,8 +318,10 @@ class ShardedKB:
                         report.parts.append(dict(
                             part=k, ok=False, attempts=attempt + 1,
                             error=f"{type(e).__name__}: {e}"))
+                        REGISTRY.counter("shard/ingest_failed_parts").inc()
                         break
                     report.n_retries += 1
+                    REGISTRY.counter("shard/ingest_retries").inc()
                     delay = min(backoff_cap_s, backoff_s * (2 ** attempt))
                     time.sleep(delay * (0.5 + 0.5 * rng.random()))
                     attempt += 1
@@ -384,26 +388,35 @@ class ShardedKB:
             cur = self._mat_cursor[mode]
             if cur >= n:
                 continue
-            staged = []
-            for b, parts in enumerate(self._pending[cur:]):
-                derived_src = []
-                for i, part in enumerate(parts):
-                    if part.shape[0] == 0:
-                        derived_src.append(_EMPTY)
-                        continue
-                    faults.fire("shard.flush_mat", mode=mode, shard=i,
-                                batch=cur + b)
-                    with self._device_ctx(i):
-                        derived_src.append(
-                            materialize_delta_mode(part, self.dtb, mode))
-                staged.append(_exchange(derived_src, self.n_shards))
-            for exchanged in staged:
-                for j, rows in enumerate(exchanged):
-                    self.shards[j].append_derived(mode, rows)
-                self.mat_counts[mode] += 1
-            self._mat_cursor[mode] = n
-            for K in self.shards:
-                K._bump()
+            t0 = time.perf_counter()
+            with obs_trace.span("flush_mat", mode=mode, n_batches=n - cur,
+                                sharded=True):
+                staged = []
+                for b, parts in enumerate(self._pending[cur:]):
+                    derived_src = []
+                    for i, part in enumerate(parts):
+                        if part.shape[0] == 0:
+                            derived_src.append(_EMPTY)
+                            continue
+                        faults.fire("shard.flush_mat", mode=mode, shard=i,
+                                    batch=cur + b)
+                        with self._device_ctx(i):
+                            derived_src.append(
+                                materialize_delta_mode(part, self.dtb, mode))
+                    staged.append(_exchange(derived_src, self.n_shards))
+                derived_rows = 0
+                for exchanged in staged:
+                    for j, rows in enumerate(exchanged):
+                        self.shards[j].append_derived(mode, rows)
+                        derived_rows += int(rows.shape[0])
+                    self.mat_counts[mode] += 1
+                self._mat_cursor[mode] = n
+                for K in self.shards:
+                    K._bump()
+            REGISTRY.histogram("shard/flush_s", mode=mode).observe(
+                time.perf_counter() - t0)
+            REGISTRY.counter("shard/derived_rows", mode=mode).inc(
+                derived_rows)
         if self._pending and all(
                 c >= n for c in self._mat_cursor.values()):
             self._pending.clear()
@@ -534,14 +547,20 @@ class ShardedKB:
             if (all(K._delta is None or K._delta.empty for K in self.shards)
                     and not self._pending):
                 return dict(compacted=False)
-            self._flush("litemat", "full")
-            sizes = {m: 0 for m in MODES}
-            for i, K in enumerate(self.shards):
-                with self._device_ctx(i):
-                    out = K.compact(device=device)
-                for m in MODES:
-                    sizes[m] += int(out.get(m, 0))
-            self.version += 1
+            t0 = time.perf_counter()
+            with obs_trace.span("compact", sharded=True,
+                                n_shards=self.n_shards):
+                self._flush("litemat", "full")
+                sizes = {m: 0 for m in MODES}
+                for i, K in enumerate(self.shards):
+                    with self._device_ctx(i):
+                        out = K.compact(device=device)
+                    for m in MODES:
+                        sizes[m] += int(out.get(m, 0))
+                self.version += 1
+            REGISTRY.counter("shard/compactions").inc()
+            REGISTRY.histogram("shard/compact_s").observe(
+                time.perf_counter() - t0)
             return dict(compacted=True, version=self.version, **sizes)
 
     # -- query surface -------------------------------------------------------
@@ -709,6 +728,7 @@ class ShardStack:
 
         if st is None or st["ncap"] != ncap or st["tokens"] != tokens:
             self.stats["base_rebuilds"] += 1
+            REGISTRY.counter("device/base_rebuilds", src="shard_stack").inc()
             base = np.full((S, ncap, 3), np.iinfo(np.int32).max, np.int32)
             alive = np.zeros((S, ncap), bool)
             for i, v in enumerate(views):
@@ -721,6 +741,10 @@ class ShardStack:
                           else v.base_alive_h[v.base_index.perm(key).perm])
                     alive[i, :ah.shape[0]] = ah
                 self.stats["upload_base_rows"] += int(h.shape[0])
+                REGISTRY.counter("device/upload_rows", src="shard_stack",
+                                 kind="base").inc(int(h.shape[0]))
+                REGISTRY.counter("device/transfer_bytes",
+                                 src="shard_stack").inc(int(h.nbytes))
             st = {"ncap": ncap, "tokens": tokens,
                   "base": jnp.asarray(base), "alive": jnp.asarray(alive),
                   "n_kills": [len(v.kills) for v in views],
@@ -740,6 +764,8 @@ class ShardStack:
                         i, jnp.asarray(full.astype(np.int32))].set(
                         False, mode="drop")
                     self.stats["kill_scatter_rows"] += int(idx.shape[0])
+                    REGISTRY.counter("device/kill_scatter_rows",
+                                     src="shard_stack").inc(int(idx.shape[0]))
                     st["n_kills"][i] = len(v.kills)
 
         dstate = [(v.delta_n, v.delta_mut) for v in views]
@@ -757,6 +783,10 @@ class ShardStack:
                     drows[i, :rows.shape[0]] = rows
                     dalive[i, :al.shape[0]] = al
                     self.stats["upload_delta_rows"] += dcap
+                    REGISTRY.counter("device/upload_rows", src="shard_stack",
+                                     kind="delta").inc(dcap)
+                    REGISTRY.counter("device/transfer_bytes",
+                                     src="shard_stack").inc(dcap * 12)
                 st["delta"] = jnp.asarray(drows)
                 st["dalive"] = jnp.asarray(dalive)
             st["dcap"] = dcap
@@ -846,16 +876,19 @@ class ShardedQueryEngine:
     def _run_group_loop(self, gpats, gvars):
         """Per-shard dispatch: each shard's own engine runs the group plan."""
         self.cache_stats["loop_runs"] += 1
+        REGISTRY.counter("shard/group_runs", path="loop").inc()
         engines = self._engines()
         parts = []
-        for i in self._route_shards(gpats):
-            if self.skb.shards[i].view(self.mode).n == 0:
-                continue
-            faults.fire("shard.query_shard", shard=i)
-            with self.skb._device_ctx(i):
-                rows, _ = engines[i].run(gpats, select=gvars)
-            if rows.shape[0]:
-                parts.append(np.asarray(rows, dtype=np.int32))
+        with obs_trace.span("shard_dispatch", path="loop",
+                            n_shards=self.skb.n_shards):
+            for i in self._route_shards(gpats):
+                if self.skb.shards[i].view(self.mode).n == 0:
+                    continue
+                faults.fire("shard.query_shard", shard=i)
+                with self.skb._device_ctx(i):
+                    rows, _ = engines[i].run(gpats, select=gvars)
+                if rows.shape[0]:
+                    parts.append(np.asarray(rows, dtype=np.int32))
         return parts
 
     def _run_group_shard_map(self, gpats, gvars):
@@ -906,6 +939,7 @@ class ShardedQueryEngine:
             cols, valid, overflow = fn(stores, dyns)
             if int(jnp.max(overflow)) == 0:
                 self.cache_stats["shard_map_runs"] += 1
+                REGISTRY.counter("shard/group_runs", path="shard_map").inc()
                 parts = []
                 for i in range(self.skb.n_shards):
                     n = int(valid[i].sum())
@@ -929,8 +963,10 @@ class ShardedQueryEngine:
         fn = self._exec_cache.get(key)
         if fn is not None:
             self.cache_stats["hits"] += 1
+            REGISTRY.counter("shard/exec_cache", event="hit").inc()
             return fn
         self.cache_stats["misses"] += 1
+        REGISTRY.counter("shard/exec_cache", event="miss").inc()
         if self._mesh is None:
             self._mesh = make_mesh((self.skb.n_shards,), ("shard",))
 
@@ -945,7 +981,7 @@ class ShardedQueryEngine:
             rel = None
             for sig, cap, dyn in zip(sigs, caps, dyns1):
                 if sig.strategy == "inl":
-                    rel = _eval_inl(sig, cap, st1, dyn, rel)
+                    rel, _ = _eval_inl(sig, cap, st1, dyn, rel)
                     continue
                 r, _ = _eval_pattern(sig, cap, st1, dyn)
                 rel = r if rel is None else join(rel, r, join_cap)
@@ -963,13 +999,19 @@ class ShardedQueryEngine:
     def _run_group(self, gpats, gvars):
         if self._shard_map_on():
             try:
-                faults.fire("shard.shard_map")
-                parts = self._run_group_shard_map(gpats, gvars)
+                with obs_trace.span("shard_dispatch", path="shard_map",
+                                    n_shards=self.skb.n_shards) as sp:
+                    faults.fire("shard.shard_map")
+                    parts = self._run_group_shard_map(gpats, gvars)
+                    if parts is None:
+                        sp.set_attr(plan_mismatch=True)
             except _DEVICE_FAILURES:
                 # a device died under the stacked executable (or a test
                 # injected one dying): degrade to the per-shard dispatch
                 # loop, which re-syncs each shard independently
                 self.cache_stats["shard_map_faults"] += 1
+                REGISTRY.counter("shard/shard_map_faults").inc()
+                obs_trace.event("shard_map_fallback")
                 parts = None
             if parts is not None:
                 return parts

@@ -34,11 +34,14 @@ pinning is cheap: no recompilation, no buffer copies, just refcounts.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.query import QueryEngine
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
 from repro.testing import faults
 
 
@@ -132,19 +135,21 @@ class Snapshot:
         engines = self._shard_engines(mode)
         views = self.views[mode]
         evaluated = []
-        for g in groups:
-            gpats = [patterns[i] for i in g]
-            gvars = _group_vars(gpats)
-            parts = []
-            for i, eng in enumerate(engines):
-                if views[i].n == 0:
-                    continue
-                faults.fire("shard.query_shard", shard=i)
-                with self.kb._device_ctx(i):
-                    rows, _ = eng.run(gpats, select=gvars)
-                if rows.shape[0]:
-                    parts.append(np.asarray(rows, dtype=np.int32))
-            evaluated.append((gvars, parts))
+        with obs_trace.span("shard_dispatch", path="loop",
+                            n_groups=len(groups), n_shards=len(engines)):
+            for g in groups:
+                gpats = [patterns[i] for i in g]
+                gvars = _group_vars(gpats)
+                parts = []
+                for i, eng in enumerate(engines):
+                    if views[i].n == 0:
+                        continue
+                    faults.fire("shard.query_shard", shard=i)
+                    with self.kb._device_ctx(i):
+                        rows, _ = eng.run(gpats, select=gvars)
+                    if rows.shape[0]:
+                        parts.append(np.asarray(rows, dtype=np.int32))
+                evaluated.append((gvars, parts))
         return combine_groups(evaluated, patterns, select)
 
     def answers(self, patterns, select=None, mode: str = None) -> set:
@@ -218,19 +223,39 @@ class SnapshotRegistry:
     """
 
     def __init__(self, kb, modes=("litemat",), use_index: bool = True,
-                 lock_timeout_s: float = 0.2):
+                 lock_timeout_s: float = 0.2,
+                 metrics: MetricsRegistry | None = None):
         self.kb = kb
         self.modes = tuple(modes)
         self.use_index = use_index
         self.lock_timeout_s = lock_timeout_s
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._lock = threading.Lock()
         self._snaps: dict = {}  # version -> Snapshot
         self._published: Snapshot | None = None
         self._plan_caches: dict = {}  # shared across snapshots
-        self.stats = {
-            "publishes": 0, "pins": 0, "stale_pins": 0, "fresh_captures": 0,
-            "retired": 0, "capture_failures": 0,
+
+    @property
+    def stats(self) -> dict:
+        """Counter dict view over the registry (kept PR-6-shaped)."""
+        m = self.metrics
+        return {
+            "publishes": m.counter_value("snapshot/publishes"),
+            "pins": m.counter_value("snapshot/pins"),
+            "stale_pins": m.counter_value("snapshot/stale_pins"),
+            "fresh_captures": m.counter_value("snapshot/fresh_captures"),
+            "retired": m.counter_value("snapshot/retired"),
+            "capture_failures": m.counter_value("snapshot/capture_failures"),
         }
+
+    def _refresh_gauges_locked(self) -> None:
+        """Version/refcount gauges; caller holds self._lock."""
+        m = self.metrics
+        m.gauge("snapshot/live_versions").set(len(self._snaps))
+        m.gauge("snapshot/pinned_versions").set(
+            sum(1 for s in self._snaps.values() if s.refs > 0))
+        m.gauge("snapshot/pinned_refs").set(
+            sum(s.refs for s in self._snaps.values()))
 
     # -- capture / publish ---------------------------------------------------
     def _capture(self) -> dict:
@@ -260,8 +285,12 @@ class SnapshotRegistry:
         with self._lock:
             snap = self._snaps.get(v)
         if snap is None:
-            faults.fire("snapshot.publish", version=v)
-            views = self._capture()
+            with obs_trace.span("capture", version=v):
+                t0 = time.perf_counter()
+                faults.fire("snapshot.publish", version=v)
+                views = self._capture()
+                self.metrics.histogram("snapshot/capture_s").observe(
+                    time.perf_counter() - t0)
             snap = Snapshot(version=v, kb=self.kb, modes=self.modes,
                             views=views, use_index=self.use_index,
                             _plan_caches=self._plan_caches)
@@ -271,7 +300,8 @@ class SnapshotRegistry:
                 snap = self._snaps.setdefault(v, snap)
         with self._lock:
             self._published = snap
-            self.stats["publishes"] += 1
+            self._refresh_gauges_locked()
+        self.metrics.counter("snapshot/publishes").inc()
         self.retire()
         return snap
 
@@ -289,11 +319,22 @@ class SnapshotRegistry:
     def pin(self, lock_timeout_s: float | None = None) -> Pin:
         """Pin a snapshot for reading; degrade to the last published one
         (stale tag) rather than blocking on a busy writer."""
+        t0 = time.perf_counter()
+        try:
+            return self._pin(lock_timeout_s)
+        finally:
+            self.metrics.histogram("snapshot/pin_wait_s").observe(
+                time.perf_counter() - t0)
+
+    def _pin(self, lock_timeout_s: float | None) -> Pin:
+        m = self.metrics
+        m.counter("snapshot/pins").inc()
         with self._lock:
-            self.stats["pins"] += 1
             snap = self._published
             if snap is not None and snap.version == self.kb.version:
                 snap.refs += 1
+                self._refresh_gauges_locked()
+                m.counter("snapshot/pin_path", path="fast").inc()
                 return Pin(self, snap, stale=False)
 
         # the store moved past the published snapshot: try a fresh capture
@@ -304,13 +345,17 @@ class SnapshotRegistry:
             try:
                 snap = self._publish_locked()
             except Exception:
-                self.stats["capture_failures"] += 1
+                m.counter("snapshot/capture_failures").inc()
+                obs_trace.event("capture_failed")
                 snap = None
             finally:
                 self.kb.write_lock.release()
             if snap is not None:
+                m.counter("snapshot/fresh_captures").inc()
+                m.counter("snapshot/pin_path", path="fresh").inc()
                 with self._lock:
                     snap.refs += 1
+                    self._refresh_gauges_locked()
                     return Pin(self, snap, stale=False)
 
         # degraded: writer holds the flush lock (or the capture crashed) —
@@ -318,21 +363,27 @@ class SnapshotRegistry:
         with self._lock:
             snap = self._published
             if snap is not None:
-                self.stats["stale_pins"] += 1
+                m.counter("snapshot/stale_pins").inc()
+                m.counter("snapshot/pin_path", path="stale").inc()
+                obs_trace.event("stale_pin", version=snap.version)
                 snap.refs += 1
+                self._refresh_gauges_locked()
                 return Pin(self, snap, stale=True)
         if got is False and snap is None:
             # nothing ever published: block once for the first capture
             with self.kb.write_lock:
                 snap = self._publish_locked()
+            m.counter("snapshot/pin_path", path="first").inc()
             with self._lock:
                 snap.refs += 1
+                self._refresh_gauges_locked()
                 return Pin(self, snap, stale=False)
         raise RuntimeError("snapshot capture failed and nothing is published")
 
     def _release(self, snap: Snapshot) -> None:
         with self._lock:
             snap.refs -= 1
+            self._refresh_gauges_locked()
         self.retire()
 
     # -- retirement ----------------------------------------------------------
@@ -344,6 +395,7 @@ class SnapshotRegistry:
         pin could hit), then each victim is re-checked under the lock
         before removal — a pin that raced in keeps its snapshot.
         """
+        t0 = time.perf_counter()
         with self._lock:
             victims = [v for v, s in self._snaps.items()
                        if s.refs == 0 and s is not self._published]
@@ -357,7 +409,11 @@ class SnapshotRegistry:
                 if s is not None and s.refs == 0 and s is not self._published:
                     del self._snaps[v]
                     dropped += 1
-            self.stats["retired"] += dropped
+            self._refresh_gauges_locked()
+        if dropped:
+            self.metrics.counter("snapshot/retired").inc(dropped)
+            self.metrics.histogram("snapshot/retire_s").observe(
+                time.perf_counter() - t0)
         return dropped
 
     def live_versions(self) -> list:

@@ -7,6 +7,7 @@ matches the corresponding ``ref.py`` oracle exactly.
 """
 from __future__ import annotations
 
+import threading
 from functools import partial
 
 import numpy as np
@@ -35,15 +36,31 @@ INVALID = np.int32(np.iinfo(np.int32).max)
 # deterministic, timing-free signal: reset, trace a cold plan, read.  The
 # rewrite-mode dual-branch pin (one dual-mask pass instead of two
 # single-mask passes) and the bench pass-count rows gate on these.
+#
+# Compiles can race under the threaded serving runtime (two workers tracing
+# different plans concurrently), so every bump goes through _bump_pass: a
+# lock guards the dict's read-modify-write, and each bump is mirrored into
+# the process metrics registry (kernels/passes{kind=...}) where the obs
+# exporters read it.  The dict itself stays the public read surface.
 pass_counters = {"compact": 0, "dual_compact": 0,
                  "merge_resident": 0, "merge_partitioned": 0}
+_PASS_LOCK = threading.Lock()
+
+
+def _bump_pass(kind: str) -> None:
+    from repro.obs.metrics import REGISTRY
+
+    with _PASS_LOCK:
+        pass_counters[kind] += 1
+    REGISTRY.counter("kernels/passes", kind=kind).inc()
 
 
 def reset_pass_counters() -> dict:
     """Zero the trace-time pass counters; returns the pre-reset snapshot."""
-    snap = dict(pass_counters)
-    for k in pass_counters:
-        pass_counters[k] = 0
+    with _PASS_LOCK:
+        snap = dict(pass_counters)
+        for k in pass_counters:
+            pass_counters[k] = 0
     return snap
 
 
@@ -170,12 +187,12 @@ def merge_gather(a_hi, a_lo, b_hi, b_lo, block: int = 1024):
     if n == 0:
         return jnp.arange(m, dtype=jnp.int32)
     if n >= block and m >= block:
-        pass_counters["merge_partitioned"] += 1
+        _bump_pass("merge_partitioned")
         out = merge_path_partitioned_pallas(a_hi, a_lo, b_hi, b_lo,
                                             block=block,
                                             interpret=_interpret())
     else:
-        pass_counters["merge_resident"] += 1
+        _bump_pass("merge_resident")
         out = merge_path_pallas(a_hi, a_lo, b_hi, b_lo, block=block,
                                 interpret=_interpret())
     return out[: n + m]
@@ -246,7 +263,7 @@ def compact_indices(mask, cap: int, block: int = 512):
     0-filled past the end; ok bool[cap]; total int32 match count).  Replaces
     the ``jnp.argsort(~mask, stable=True)[:cap]`` idiom in O(N).
     """
-    pass_counters["compact"] += 1
+    _bump_pass("compact")
     m = _pad1(mask.astype(jnp.int32), block, np.int32(0))
     local, counts = stream_compact_pallas(m, block=block, interpret=_interpret())
     return _assemble_compact(local, counts, cap, block)
@@ -262,7 +279,7 @@ def dual_compact_indices(mask_a, mask_b, cap: int, block: int = 512):
     pattern compacts a subject-binding and an object-binding mask over the
     same rows; this halves its kernel passes).
     """
-    pass_counters["dual_compact"] += 1
+    _bump_pass("dual_compact")
     ma = _pad1(mask_a.astype(jnp.int32), block, np.int32(0))
     mb = _pad1(mask_b.astype(jnp.int32), block, np.int32(0))
     la, ca, lb, cb = dual_compact_pallas(ma, mb, block=block,
@@ -279,7 +296,7 @@ def interval_compact(p, o, params, cap: int, block: int = 512):
     never satisfy ``p < phi`` for any real predicate bound.  Same returns as
     ``compact_indices``.
     """
-    pass_counters["compact"] += 1
+    _bump_pass("compact")
     pp = _pad1(p, block, INVALID)
     po = _pad1(o, block, INVALID)
     local, counts = interval_compact_pallas(pp, po, params, block=block,
@@ -296,7 +313,7 @@ def masked_interval_compact(p, o, alive, params, cap: int, block: int = 512):
     kernel pass that evaluates the LiteMat interval predicate.  Same
     returns as ``compact_indices``.
     """
-    pass_counters["compact"] += 1
+    _bump_pass("compact")
     pp = _pad1(p, block, INVALID)
     po = _pad1(o, block, INVALID)
     pa = _pad1(alive.astype(jnp.int32), block, np.int32(0))

@@ -1,0 +1,17 @@
+"""repro.obs — end-to-end tracing and metrics for the serving stack.
+
+Three small modules, imported lazily by the layers they instrument:
+
+  * :mod:`repro.obs.metrics` — counters / gauges / log-bucketed histogram
+    sketches in a :class:`~repro.obs.metrics.MetricsRegistry`; the
+    module-level ``REGISTRY`` is the process-wide default.
+  * :mod:`repro.obs.trace` — per-request span trees propagated via
+    contextvars; ``span(...)`` is a cheap no-op when no trace is active.
+  * :mod:`repro.obs.export` — JSON dumps and the trace schema validator
+    that CI runs over every exported trace.
+"""
+from repro.obs.metrics import REGISTRY, MetricsRegistry  # noqa: F401
+from repro.obs.trace import Tracer, activate, event, span  # noqa: F401
+
+__all__ = ["REGISTRY", "MetricsRegistry", "Tracer", "activate", "event",
+           "span"]

@@ -1,0 +1,135 @@
+"""JSON exporters + trace schema validation for the obs subsystem.
+
+Two export surfaces:
+
+  * :func:`export_traces` / :func:`export_metrics` — dump a Tracer's
+    finished traces / a MetricsRegistry snapshot to JSON files.  The
+    serving bench honours ``REPRO_TRACE_EXPORT`` / ``REPRO_METRICS_EXPORT``
+    env knobs and the CI obs smoke leg uploads the results.
+  * :data:`TRACE_SCHEMA` + :func:`validate_trace` — the contract CI holds
+    every exported trace to (``scripts/check_traces.py``).  The validator
+    is a small hand-rolled subset of JSON Schema (type / properties /
+    required / items / enum) because the container has no ``jsonschema``
+    package; on top of the schema walk it checks structural invariants a
+    JSON schema can't express: exactly one root span, every parent_id
+    resolves, every span's [t0, t1] is well ordered.
+"""
+from __future__ import annotations
+
+import json
+
+#: Schema one exported trace object must satisfy (subset of JSON Schema).
+TRACE_SCHEMA = {
+    "type": "object",
+    "required": ["trace_id", "spans"],
+    "properties": {
+        "trace_id": {"type": "string"},
+        "spans": {
+            "type": "array",
+            "items": {
+                "type": "object",
+                "required": ["span_id", "parent_id", "name", "t0", "t1"],
+                "properties": {
+                    "span_id": {"type": "integer"},
+                    "parent_id": {"type": "integer"},
+                    "name": {"type": "string"},
+                    "t0": {"type": "number"},
+                    "t1": {"type": "number"},
+                    "attrs": {"type": "object"},
+                    "events": {
+                        "type": "array",
+                        "items": {
+                            "type": "object",
+                            "required": ["name", "t"],
+                            "properties": {
+                                "name": {"type": "string"},
+                                "t": {"type": "number"},
+                            },
+                        },
+                    },
+                },
+            },
+        },
+    },
+}
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "integer": int,
+    "number": (int, float),
+    "boolean": bool,
+}
+
+
+def validate(obj, schema, path: str = "$") -> list:
+    """Walk ``obj`` against a JSON-Schema subset; return error strings."""
+    errors = []
+    typ = schema.get("type")
+    if typ is not None:
+        pytype = _TYPES[typ]
+        ok = isinstance(obj, pytype)
+        if typ in ("integer", "number") and isinstance(obj, bool):
+            ok = False  # bool is an int subclass; schemas mean real numbers
+        if not ok:
+            errors.append(f"{path}: expected {typ}, got "
+                          f"{type(obj).__name__}")
+            return errors
+    if "enum" in schema and obj not in schema["enum"]:
+        errors.append(f"{path}: {obj!r} not in {schema['enum']}")
+    if typ == "object":
+        for key in schema.get("required", ()):
+            if key not in obj:
+                errors.append(f"{path}: missing required key {key!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in obj:
+                errors.extend(validate(obj[key], sub, f"{path}.{key}"))
+    elif typ == "array" and "items" in schema:
+        for i, item in enumerate(obj):
+            errors.extend(validate(item, schema["items"], f"{path}[{i}]"))
+    return errors
+
+
+def validate_trace(trace: dict) -> list:
+    """Schema check + structural invariants; returns error strings."""
+    errors = validate(trace, TRACE_SCHEMA)
+    if errors:
+        return errors
+    spans = trace["spans"]
+    tid = trace["trace_id"]
+    if not spans:
+        return [f"{tid}: trace has no spans"]
+    ids = {s["span_id"] for s in spans}
+    if len(ids) != len(spans):
+        errors.append(f"{tid}: duplicate span_ids")
+    roots = [s for s in spans if s["parent_id"] == -1]
+    if len(roots) != 1:
+        errors.append(f"{tid}: expected exactly one root span, "
+                      f"got {len(roots)}")
+    for s in spans:
+        if s["parent_id"] != -1 and s["parent_id"] not in ids:
+            errors.append(f"{tid}: span {s['span_id']} ({s['name']}) has "
+                          f"dangling parent_id {s['parent_id']}")
+        if s["t1"] < s["t0"]:
+            errors.append(f"{tid}: span {s['span_id']} ({s['name']}) has "
+                          f"t1 < t0")
+    return errors
+
+
+def export_traces(tracer, path: str) -> int:
+    """Write {"traces": [...]} to ``path``; returns the trace count."""
+    traces = tracer.to_dicts()
+    with open(path, "w") as f:
+        json.dump({"traces": traces, "dropped": tracer.dropped}, f, indent=1)
+    return len(traces)
+
+
+def export_metrics(registry, path: str) -> None:
+    """Write a MetricsRegistry snapshot to ``path``."""
+    with open(path, "w") as f:
+        json.dump(registry.snapshot(), f, indent=1, sort_keys=True)
+
+
+__all__ = ["TRACE_SCHEMA", "validate", "validate_trace", "export_traces",
+           "export_metrics"]

@@ -25,8 +25,14 @@ Request lifecycle (the degradation ladder, best outcome first):
      rejected *at submit time* (backpressure), before consuming any
      execution resources.
 
-All knobs are constructor arguments; ``stats`` / ``latency_stats()``
-expose counts and p50/p99 for benchmarks (benchmarks/bench_serving.py).
+Observability: every counter/histogram lands in a per-runtime
+:class:`~repro.obs.metrics.MetricsRegistry` (``rt.metrics``) — ``stats``
+is now a read-only dict view over it, keeping the PR-6 key set.  Pass a
+:class:`~repro.obs.trace.Tracer` to record one span tree per request
+(queue wait, per-attempt pin / execute / backoff, stale-degradation
+events); ``Outcome.trace_id`` links the result back to its trace.
+``Outcome.latency_s`` splits into ``queue_s`` (admission-queue wait) +
+``exec_s`` (service time); the two always sum to ``latency_s``.
 """
 from __future__ import annotations
 
@@ -39,6 +45,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.snapshot import SnapshotRegistry
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
 from repro.testing import faults
 from repro.testing.faults import FaultError
 
@@ -54,8 +62,11 @@ class Outcome:
     version: int | None = None  # store version the answer is consistent with
     stale: bool = False  # True: degraded pin served the last published version
     retries: int = 0
-    latency_s: float = 0.0
+    latency_s: float = 0.0  # == queue_s + exec_s
+    queue_s: float = 0.0  # admission-queue wait (submit -> worker dequeue)
+    exec_s: float = 0.0  # service time (dequeue -> resolution)
     error: str | None = None
+    trace_id: str | None = None  # set when the runtime has a Tracer
 
     @property
     def ok(self) -> bool:
@@ -70,6 +81,10 @@ class _Request:
     deadline_t: float | None  # absolute monotonic deadline (None: unbounded)
     submitted_t: float
     future: Future = field(default_factory=Future)
+    dequeue_t: float | None = None
+    trace: object = None  # obs_trace.Trace when the runtime traces
+    root: object = None  # the "request" root span
+    queue_span: object = None
 
 
 class ServingRuntime:
@@ -88,11 +103,15 @@ class ServingRuntime:
                  default_deadline_s: float | None = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.005,
                  retry_backoff_cap_s: float = 0.1,
-                 pin_lock_timeout_s: float = 0.05, seed: int = 0):
+                 pin_lock_timeout_s: float = 0.05, seed: int = 0,
+                 tracer: obs_trace.Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.kb = kb
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer
         self.registry = SnapshotRegistry(
             kb, modes=modes, use_index=use_index,
-            lock_timeout_s=pin_lock_timeout_s)
+            lock_timeout_s=pin_lock_timeout_s, metrics=self.metrics)
         self.n_workers = n_workers
         self.default_deadline_s = default_deadline_s
         self.max_retries = max_retries
@@ -104,10 +123,22 @@ class ServingRuntime:
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
         self._latencies: list = []  # (status, latency_s) per finished request
-        self.stats = {
-            "submitted": 0, "ok": 0, "shed": 0, "deadline": 0, "errors": 0,
-            "retries": 0, "stale_served": 0, "updates": 0,
-            "publish_failures": 0,
+
+    @property
+    def stats(self) -> dict:
+        """PR-6-shaped counter dict, now a read-only registry view."""
+        m = self.metrics
+        return {
+            "submitted": m.counter_value("serving/submitted"),
+            "ok": m.counter_value("serving/outcomes", status="ok"),
+            "shed": m.counter_value("serving/outcomes", status="shed"),
+            "deadline": m.counter_value("serving/outcomes",
+                                        status="deadline"),
+            "errors": m.counter_value("serving/outcomes", status="error"),
+            "retries": m.counter_value("serving/retries"),
+            "stale_served": m.counter_value("serving/stale_served"),
+            "updates": m.counter_value("serving/updates"),
+            "publish_failures": m.counter_value("serving/publish_failures"),
         }
 
     # -- lifecycle -----------------------------------------------------------
@@ -154,13 +185,21 @@ class ServingRuntime:
             patterns=list(patterns), select=select, mode=mode,
             deadline_t=None if deadline_s is None else now + deadline_s,
             submitted_t=now)
-        with self._lock:
-            self.stats["submitted"] += 1
+        self.metrics.counter("serving/submitted").inc()
+        if self.tracer is not None:
+            req.trace = self.tracer.new_trace()
+            req.root = self.tracer.start_root(
+                req.trace, "request", n_patterns=len(req.patterns),
+                mode=req.mode or "default")
+            req.queue_span = req.trace.new_span("queue", req.root.span_id, {})
         try:
             self._queue.put_nowait(req)
+            self.metrics.gauge("serving/queue_depth").set(
+                self._queue.qsize())
         except queue.Full:
             # backpressure: reject at admission, before any execution cost
-            out = Outcome(status="shed", latency_s=time.monotonic() - now)
+            lat = time.monotonic() - now
+            out = Outcome(status="shed", latency_s=lat, queue_s=lat)
             self._finish(req, out)
         return req.future
 
@@ -181,10 +220,8 @@ class ServingRuntime:
                 # committed but unpublished — readers keep degrading to the
                 # last published snapshot (stale tag) until a later pin or
                 # publish captures this version successfully
-                with self._lock:
-                    self.stats["publish_failures"] += 1
-        with self._lock:
-            self.stats["updates"] += 1
+                self.metrics.counter("serving/publish_failures").inc()
+        self.metrics.counter("serving/updates").inc()
         return stats
 
     def insert(self, raw, **kw) -> dict:
@@ -198,12 +235,22 @@ class ServingRuntime:
 
     # -- worker internals ----------------------------------------------------
     def _finish(self, req: _Request, out: Outcome) -> None:
+        m = self.metrics
+        m.counter("serving/outcomes", status=out.status).inc()
+        if out.stale and out.ok:
+            m.counter("serving/stale_served").inc()
+        m.histogram("serving/latency_s", status=out.status).observe(
+            out.latency_s)
+        if out.status != "shed":
+            m.histogram("serving/queue_s").observe(out.queue_s)
+            m.histogram("serving/exec_s").observe(out.exec_s)
         with self._lock:
-            self.stats[out.status if out.status != "error" else "errors"] \
-                += 1
-            if out.stale and out.ok:
-                self.stats["stale_served"] += 1
             self._latencies.append((out.status, out.latency_s))
+        if req.trace is not None:
+            out.trace_id = req.trace.trace_id
+            req.root.set_attr(status=out.status, retries=out.retries,
+                              stale=out.stale, version=out.version)
+            self.tracer.finish_trace(req.trace)
         req.future.set_result(out)
 
     def _jitter(self, attempt: int) -> float:
@@ -218,12 +265,17 @@ class ServingRuntime:
             req = self._queue.get()
             if req is _STOP:
                 return
-            try:
-                out = self._execute(req)
-            except Exception as e:  # noqa: BLE001 — workers must survive
-                out = Outcome(status="error",
-                              latency_s=time.monotonic() - req.submitted_t,
-                              error=f"{type(e).__name__}: {e}")
+            req.dequeue_t = time.monotonic()
+            self.metrics.gauge("serving/queue_depth").set(
+                self._queue.qsize())
+            if req.queue_span is not None:
+                req.queue_span.finish()
+            with obs_trace.activate(req.root):
+                try:
+                    out = self._execute(req)
+                except Exception as e:  # noqa: BLE001 — workers must survive
+                    out = self._outcome(req, "error",
+                                        error=f"{type(e).__name__}: {e}")
             self._finish(req, out)
 
     def _time_left(self, req: _Request) -> float:
@@ -231,52 +283,67 @@ class ServingRuntime:
             return float("inf")
         return req.deadline_t - time.monotonic()
 
+    def _outcome(self, req: _Request, status: str, **kw) -> Outcome:
+        """Resolve timing fields so queue_s + exec_s == latency_s exactly."""
+        lat = time.monotonic() - req.submitted_t
+        q = ((req.dequeue_t - req.submitted_t)
+             if req.dequeue_t is not None else lat)
+        return Outcome(status=status, latency_s=lat, queue_s=q,
+                       exec_s=lat - q, **kw)
+
     def _execute(self, req: _Request) -> Outcome:
         retries = 0
         last_err: Exception | None = None
         while True:
             if self._time_left(req) <= 0:
-                return Outcome(
-                    status="deadline", retries=retries,
-                    latency_s=time.monotonic() - req.submitted_t,
+                obs_trace.event("deadline_preempt", attempt=retries)
+                return self._outcome(
+                    req, "deadline", retries=retries,
                     error=None if last_err is None else
                     f"{type(last_err).__name__}: {last_err}")
-            pin = self.registry.pin()
-            try:
-                faults.fire("serving.execute", attempt=retries)
-                answers = pin.answers(req.patterns, select=req.select,
-                                      mode=req.mode)
-                if self._time_left(req) < 0:
-                    # finished late (e.g. a slow shard): the answer is
-                    # useless to a deadlined caller — report the miss
-                    return Outcome(
-                        status="deadline", retries=retries,
-                        latency_s=time.monotonic() - req.submitted_t)
-                return Outcome(
-                    status="ok", answers=answers, version=pin.version,
-                    stale=pin.stale, retries=retries,
-                    latency_s=time.monotonic() - req.submitted_t)
-            except FaultError as e:
-                # transient churn: back off with jitter and retry while
-                # the deadline and the retry budget allow
-                last_err = e
-                if retries >= self.max_retries:
-                    return Outcome(
-                        status="error", retries=retries,
-                        latency_s=time.monotonic() - req.submitted_t,
-                        error=f"{type(e).__name__}: {e}")
-                delay = self._jitter(retries)
-                retries += 1
-                with self._lock:
-                    self.stats["retries"] += 1
-                if self._time_left(req) <= delay:
-                    return Outcome(
-                        status="deadline", retries=retries,
-                        latency_s=time.monotonic() - req.submitted_t,
-                        error=f"{type(e).__name__}: {e}")
-                time.sleep(delay)
-            finally:
-                pin.release()
+            with obs_trace.span("attempt", attempt=retries) as att:
+                with obs_trace.span("pin") as pin_sp:
+                    pin = self.registry.pin()
+                    pin_sp.set_attr(version=pin.version, stale=pin.stale)
+                try:
+                    faults.fire("serving.execute", attempt=retries)
+                    if pin.stale:
+                        obs_trace.event("stale_degraded",
+                                        version=pin.version)
+                    with obs_trace.span("execute"):
+                        answers = pin.answers(req.patterns,
+                                              select=req.select,
+                                              mode=req.mode)
+                    if self._time_left(req) < 0:
+                        # finished late (e.g. a slow shard): the answer is
+                        # useless to a deadlined caller — report the miss
+                        obs_trace.event("deadline_after_execute")
+                        return self._outcome(req, "deadline",
+                                             retries=retries)
+                    return self._outcome(
+                        req, "ok", answers=answers, version=pin.version,
+                        stale=pin.stale, retries=retries)
+                except FaultError as e:
+                    # transient churn: back off with jitter and retry while
+                    # the deadline and the retry budget allow
+                    last_err = e
+                    att.set_attr(fault=f"{type(e).__name__}: {e}")
+                    if retries >= self.max_retries:
+                        return self._outcome(
+                            req, "error", retries=retries,
+                            error=f"{type(e).__name__}: {e}")
+                    delay = self._jitter(retries)
+                    retries += 1
+                    self.metrics.counter("serving/retries").inc()
+                    if self._time_left(req) <= delay:
+                        return self._outcome(
+                            req, "deadline", retries=retries,
+                            error=f"{type(e).__name__}: {e}")
+                    with obs_trace.span("backoff",
+                                        delay_s=round(delay, 6)):
+                        time.sleep(delay)
+                finally:
+                    pin.release()
 
     # -- reporting -----------------------------------------------------------
     def latency_stats(self, status: str = "ok") -> dict:

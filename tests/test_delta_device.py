@@ -183,7 +183,12 @@ def test_delete_kill_scatters_donate_alive_buffer_in_place():
     raw_extra = _mutate(K, onto, seed=7)  # tombstone state exists up front
     K.answers(QUERY)  # resident buffers own a private base-alive mask
     cache = K.dev_cache("litemat")
-    ptr0 = K.view("litemat").dev("pos").base_alive.unsafe_buffer_pointer()
+    # drain in-flight async computations first: a still-referenced input
+    # makes XLA copy instead of reusing the donated buffer
+    base_alive = K.view("litemat").dev("pos").base_alive
+    base_alive.block_until_ready()
+    ptr0 = base_alive.unsafe_buffer_pointer()
+    del base_alive
     before = dict(cache.stats)
     K.delete((raw_extra.s[5:9], raw_extra.p[5:9], raw_extra.o[5:9]),
              auto_compact=False)
