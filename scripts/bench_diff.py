@@ -25,8 +25,9 @@ Guards against CPU-runner noise:
   * rows below ``--min-us`` (default 50ms) are informational only — a 3ms
     kernel dispatch jitters far beyond 20% on shared runners,
   * rows whose ``us_per_call`` is 0 (pure pass/fail or ratio rows, e.g.
-    ``updates/warmup_flatness``) are compared on their ``passed`` flag
-    instead: a True -> False flip is always a failure.
+    ``updates/warmup_flatness`` or ``serving/batched_speedup``, the
+    >=3x micro-batched throughput flag) are compared on their ``passed``
+    flag instead: a True -> False flip is always a failure.
 
 Rows carrying a ``gate_max_pct`` field (e.g. ``serving/obs_overhead``,
 the <3% tracing-overhead budget) are ABSOLUTE gates: they fail on their

@@ -862,40 +862,68 @@ class QueryEngine:
             self._exec_cache[key] = fn
         return int(fn(self.view.dev("scan"), dyn))
 
-    def _executable(self, key, sigs, caps, join_cap: int, select):
-        """Memoized jitted plan: signature + buckets -> compiled function.
+    @staticmethod
+    def _make_run_device(sigs, caps, join_cap: int, select):
+        """Build the device-side plan body shared by the solo and batched
+        executables.
 
-        The executable returns (cols, valid, overflow, totals): ``totals``
+        The function returns (cols, valid, overflow, totals): ``totals``
         is int32[n_patterns] — each pattern's OBSERVED match count before
         capacity clipping, in plan order — computed inside the same trace
         (no extra device pass; the scalars ride the overflow fetch).
         EXPLAIN and the selectivity capture read their observed-vs-estimated
         row counts off it.
         """
+
+        def run_device(stores, dyns):
+            rel = None
+            totals = []
+            for sig, cap, dyn in zip(sigs, caps, dyns):
+                if sig.strategy == "inl":  # consumes the running relation
+                    rel, t = _eval_inl(sig, cap, stores, dyn, rel)
+                else:
+                    r, t = _eval_pattern(sig, cap, stores, dyn)
+                    rel = r if rel is None else join(rel, r, join_cap)
+                totals.append(t)
+            out = distinct(rel, select, join_cap)
+            return (out.cols, out.valid, out.overflow,
+                    jnp.stack(totals).astype(jnp.int32))
+
+        return run_device
+
+    def _executable(self, key, sigs, caps, join_cap: int, select):
+        """Memoized jitted plan: signature + buckets -> compiled function."""
         fn = self._exec_cache.get(key)
         if fn is None:
             self.cache_stats["misses"] += 1
             REGISTRY.counter("query/plan_cache", event="miss").inc()
-
-            def run_device(stores, dyns):
-                rel = None
-                totals = []
-                for sig, cap, dyn in zip(sigs, caps, dyns):
-                    if sig.strategy == "inl":  # consumes the running relation
-                        rel, t = _eval_inl(sig, cap, stores, dyn, rel)
-                    else:
-                        r, t = _eval_pattern(sig, cap, stores, dyn)
-                        rel = r if rel is None else join(rel, r, join_cap)
-                    totals.append(t)
-                out = distinct(rel, select, join_cap)
-                return (out.cols, out.valid, out.overflow,
-                        jnp.stack(totals).astype(jnp.int32))
-
-            fn = jax.jit(run_device)
+            fn = jax.jit(self._make_run_device(sigs, caps, join_cap, select))
             self._exec_cache[key] = fn
         else:
             self.cache_stats["hits"] += 1
             REGISTRY.counter("query/plan_cache", event="hit").inc()
+        return fn
+
+    def _batch_executable(self, key, sigs, caps, join_cap: int, select):
+        """Memoized VMAPPED plan: one dispatch answers a whole request batch.
+
+        The stores axis is shared (all batch members execute against the
+        same pinned view); the dyn-constant pytree carries a leading batch
+        axis.  Every kernel in the plan body (stream compaction, merge
+        path, pair search) lifts through ``jax.vmap``, so a batch of B
+        same-signature requests costs ONE XLA dispatch instead of B.
+        """
+        fn = self._exec_cache.get(key)
+        if fn is None:
+            self.cache_stats["misses"] += 1
+            REGISTRY.counter("query/plan_cache", event="miss_batch").inc()
+            fn = jax.jit(jax.vmap(
+                self._make_run_device(sigs, caps, join_cap, select),
+                in_axes=(None, 0)))
+            self._exec_cache[key] = fn
+        else:
+            self.cache_stats["hits"] += 1
+            REGISTRY.counter("query/plan_cache", event="hit_batch").inc()
         return fn
 
     @staticmethod
@@ -960,24 +988,44 @@ class QueryEngine:
         Its planning count drops to the probe-side estimate times a fanout
         allowance, shrinking every downstream capacity (overflow retries
         still protect underestimates).
+
+        Once a candidate probe shape has actually executed, its OBSERVED
+        output row count (``observed_selectivity``, keyed by the INL
+        PatternSig) feeds back into the call: a pattern whose probe-side
+        ESTIMATE was too big for the heuristic still converts when the
+        observed INL output times ``inl_factor`` undercuts the merge-side
+        row count, and the capacity is sized from the observation instead
+        of the ``est * 32`` fanout guess — a mis-estimated pattern flips
+        strategy after one observation.  Observations only ever turn INL
+        *on* (and bound its sizing): the sig aliases every probe side
+        that lowers to the same shape (Q3's Professors and Q4's Chairs
+        probe the same worksFor signature), so a large aliased
+        observation must not veto a conversion the heuristic already
+        justified — sizing keeps a 2x margin over both the observation
+        and the probe estimate, and overflow retries protect the rest.
         """
         indexable = (self.use_inl and self.use_index
                      and self.mode in ("litemat", "full"))
         if not indexable or len(order) < 2:
             return
+        store_n = max(self.view.n, 1)
         bound = {v for v in prepared[order[0]][0] if v}
         est = counts[order[0]]
         for i in order[1:]:
             pvars, terms, extra = prepared[i]
             pat_vars = {v for v in pvars if v}
-            convertible = (
+            heuristic = counts[i] >= self.inl_factor * max(est, 1)
+            # candidate construction costs a distinct-pid probe, so only
+            # pay it when the heuristic already says INL or when prior
+            # observations exist that could overturn it
+            eligible = (
                 extra is None
-                and counts[i] >= self.inl_factor * max(est, 1)
                 and est <= self.inl_max_probe
                 and terms[1] is not None
                 and all(t is None or t.members is None for t in terms)
+                and (heuristic or bool(self.observed_selectivity))
             )
-            if convertible:
+            if eligible:
                 pids = self._inl_pids(terms[1])
                 probe_pos = store = None
                 if pids:
@@ -1003,8 +1051,22 @@ class QueryEngine:
                         s_sig=r_sig if res_pos == 0 else None,
                         o_sig=r_sig if res_pos == 2 else None,
                     )
-                    counts[i] = min(counts[i], max(est, 1) * 32)
-                    lowered[i] = (sig, dyn, counts[i])
+                    obs = self.observed_selectivity.get(sig)
+                    if obs is not None:
+                        inl_rows = max(int(round(obs * store_n)), 1)
+                        convert = (heuristic or
+                                   inl_rows * self.inl_factor <= counts[i])
+                        sized = max(inl_rows * 2, max(est, 1) * 2)
+                        src = "observed"
+                    else:
+                        convert = heuristic
+                        sized = max(est, 1) * 32
+                        src = "estimate"
+                    if convert:
+                        REGISTRY.counter("planner/inl_decision",
+                                         source=src).inc()
+                        counts[i] = min(counts[i], sized)
+                        lowered[i] = (sig, dyn, counts[i])
             bound |= pat_vars
             est = min(est, counts[i])
 
@@ -1060,8 +1122,12 @@ class QueryEngine:
         """Execute; returns (rows int32[k, n_select], select var names)."""
         with obs_trace.span("plan", mode=self.mode,
                             n_patterns=len(patterns)):
-            (sigs, dyns, caps, join_cap, sel, stores,
-             order, est) = self._plan(patterns, select)
+            planned = self._plan(patterns, select)
+        return self._run_planned(planned, max_retries)
+
+    def _run_planned(self, planned, max_retries: int = 6):
+        """Execute an already-planned query (the solo dispatch path)."""
+        (sigs, dyns, caps, join_cap, sel, stores, order, est) = planned
         for attempt in range(max_retries):
             key = ("exec", self.mode, sigs, tuple(caps), join_cap, sel)
             misses0 = self.cache_stats["misses"]
@@ -1083,6 +1149,101 @@ class QueryEngine:
             join_cap *= 2
             caps = [c * 2 for c in caps]
         raise RuntimeError("query kept overflowing its capacity buckets")
+
+    # -- micro-batched execution (ROADMAP item 1) ---------------------------
+    def _batch_caps(self, planned_group):
+        """Unified capacity buckets for a same-signature batch.
+
+        Member caps are maxed elementwise (the shared executable must hold
+        the largest member), then raised to the observed-selectivity floor
+        for any signature this engine has watched before — observations
+        only ever GROW a batched capacity; shrinking one would trade a
+        single member's overflow retry for the whole batch's.
+        """
+        sigs = planned_group[0][0]
+        caps = [max(p[2][j] for p in planned_group)
+                for j in range(len(sigs))]
+        join_cap = max(p[3] for p in planned_group)
+        store_n = max(self.view.n, 1)
+        for j, sig in enumerate(sigs):
+            obs = self.observed_selectivity.get(sig)
+            if obs is not None:
+                floor = self._bucket(
+                    int(obs * store_n * self.slack) + 16)
+                caps[j] = max(caps[j], floor)
+        return caps, max(join_cap, max(caps))
+
+    def run_batch(self, requests, max_retries: int = 6):
+        """Execute a batch of (patterns, select) requests in shared
+        dispatches; returns [(rows, sel), ...] aligned with ``requests``.
+
+        The batcher's engine half: every request is planned individually,
+        structurally identical requests are answered ONCE and fanned out,
+        and distinct requests whose patterns lower to the same signature
+        tuple (projecting the same variables) execute as one vmapped
+        dispatch over batch-stacked dyn constants — capacities unified by
+        :meth:`_batch_caps` and the batch axis padded to a power of two so
+        nearby batch sizes reuse one compiled executable.  Requests whose
+        signatures match nobody else's fall back to the solo path; every
+        member still lands its own observed-selectivity sample.
+        """
+        results = [None] * len(requests)
+        uniq_keys, uniq = {}, []  # structural dedupe: answer once, fan out
+        for i, (pats, select) in enumerate(requests):
+            k = (tuple((p.s, p.p, p.o) for p in pats),
+                 tuple(select) if select is not None else None)
+            j = uniq_keys.get(k)
+            if j is None:
+                uniq_keys[k] = len(uniq)
+                uniq.append((self._plan(pats, select), [i]))
+            else:
+                uniq[j][1].append(i)
+        groups = {}
+        for planned, members in uniq:
+            groups.setdefault((planned[0], planned[4]), []).append(
+                (planned, members))
+        for (sigs, sel), entries in groups.items():
+            if len(entries) == 1:
+                planned, members = entries[0]
+                rows, _ = self._run_planned(planned, max_retries)
+                for i in members:
+                    results[i] = (rows, sel)
+                continue
+            caps, join_cap = self._batch_caps([e[0] for e in entries])
+            stores = entries[0][0][5]
+            B = len(entries)
+            Bp = _pow2(B, floor=2)  # pad slots repeat the last member
+            dyn_list = ([e[0][1] for e in entries]
+                        + [entries[-1][0][1]] * (Bp - B))
+            dyn_stack = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *dyn_list)
+            REGISTRY.histogram("query/batch_size", mode=self.mode).observe(B)
+            for attempt in range(max_retries):
+                key = ("bexec", self.mode, sigs, tuple(caps), join_cap,
+                       sel, Bp)
+                fn = self._batch_executable(key, sigs, tuple(caps),
+                                            join_cap, sel)
+                cols, valid, overflow, totals = fn(stores, dyn_stack)
+                if int(np.asarray(overflow)[:B].max()) == 0:
+                    break
+                obs_trace.event("overflow_retry", attempt=attempt,
+                                join_cap=join_cap, batch=B)
+                REGISTRY.counter("query/overflow_retries").inc()
+                join_cap *= 2
+                caps = [c * 2 for c in caps]
+            else:
+                raise RuntimeError(
+                    "batched query kept overflowing its capacity buckets")
+            cols_h = np.asarray(cols)
+            valid_h = np.asarray(valid)
+            totals_h = np.asarray(totals)
+            for b, (planned, members) in enumerate(entries):
+                self._record_observed(sigs, planned[7], totals_h[b])
+                n = int(valid_h[b].sum())
+                rows = cols_h[b][:, :n].T
+                for i in members:
+                    results[i] = (rows, sel)
+        return results
 
     def explain(self, patterns, select=None, execute: bool = True) -> dict:
         """EXPLAIN: per-pattern strategy, buckets, estimated-vs-observed rows.

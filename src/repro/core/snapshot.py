@@ -66,6 +66,9 @@ class Snapshot:
     use_index: bool = True
     refs: int = 0
     _plan_caches: dict = field(default_factory=dict, repr=False)
+    # PatternSig -> observed selectivity, shared across snapshots via the
+    # registry so planner feedback survives version churn
+    _selectivity: dict = field(default_factory=dict, repr=False)
     _engines: dict = field(default_factory=dict, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
@@ -96,7 +99,8 @@ class Snapshot:
                 eng = QueryEngine(
                     kb=self.kb.kb, spo=view.base_rows, mode=mode,
                     dtb=self.kb.dtb, use_index=self.use_index, view=view,
-                    _exec_cache=self._plan_cache(mode))
+                    _exec_cache=self._plan_cache(mode),
+                    observed_selectivity=self._selectivity)
                 self._engines[mode] = eng
             return eng
 
@@ -108,7 +112,8 @@ class Snapshot:
                 engines = [
                     QueryEngine(kb=K.kb, spo=v.base_rows, mode=mode,
                                 dtb=self.kb.dtb, use_index=self.use_index,
-                                view=v, _exec_cache=cache)
+                                view=v, _exec_cache=cache,
+                                observed_selectivity=self._selectivity)
                     for K, v in zip(self.kb.shards, self.views[mode])]
                 self._engines[mode] = engines
             return engines
@@ -152,6 +157,62 @@ class Snapshot:
                 evaluated.append((gvars, parts))
         return combine_groups(evaluated, patterns, select)
 
+    def query_batch(self, requests, mode: str = None):
+        """Evaluate a batch of (patterns, select) requests at the pinned
+        version with shared dispatches; returns per-request (rows, sel).
+
+        Single store: straight to the engine's vmapped
+        :meth:`~repro.core.query.QueryEngine.run_batch`.  Sharded: every
+        member is decomposed into its pattern groups (exactly like
+        :meth:`_query_sharded`) and ALL members' groups ride one
+        ``run_batch`` per shard — same-signature groups from different
+        requests coalesce inside the engine — before each member combines
+        its own groups.
+        """
+        mode = self._check_mode(mode)
+        if not self.sharded:
+            return self.engine(mode).run_batch(requests)
+        return self._query_batch_sharded(requests, mode)
+
+    def _query_batch_sharded(self, requests, mode: str):
+        from repro.core.shard import _group_vars, combine_groups, plan_groups
+
+        engines = self._shard_engines(mode)
+        views = self.views[mode]
+        members = []     # (patterns, select, [gvars...], [flat idx...])
+        shard_reqs = []  # flattened (group patterns, group vars)
+        for pats, select in requests:
+            pats = list(pats)
+            groups = plan_groups(pats, mode, self.kb.tbox)
+            metas, idxs = [], []
+            for g in groups:
+                gpats = [pats[i] for i in g]
+                gvars = _group_vars(gpats)
+                idxs.append(len(shard_reqs))
+                shard_reqs.append((gpats, gvars))
+                metas.append(gvars)
+            members.append((pats, select, metas, idxs))
+        parts_by_flat = [[] for _ in shard_reqs]
+        with obs_trace.span("shard_dispatch", path="batch",
+                            n_groups=len(shard_reqs),
+                            n_shards=len(engines)):
+            for i, eng in enumerate(engines):
+                if views[i].n == 0:
+                    continue
+                faults.fire("shard.query_shard", shard=i)
+                with self.kb._device_ctx(i):
+                    res = eng.run_batch(shard_reqs)
+                for f, (rows, _) in enumerate(res):
+                    if rows.shape[0]:
+                        parts_by_flat[f].append(
+                            np.asarray(rows, dtype=np.int32))
+        out = []
+        for pats, select, metas, idxs in members:
+            evaluated = [(metas[j], parts_by_flat[f])
+                         for j, f in enumerate(idxs)]
+            out.append(combine_groups(evaluated, pats, select))
+        return out
+
     def answers(self, patterns, select=None, mode: str = None) -> set:
         rows, _ = self.query(patterns, select=select, mode=mode)
         return {tuple(r) for r in rows.tolist()}
@@ -187,6 +248,9 @@ class Pin:
 
     def query(self, patterns, select=None, mode: str = None):
         return self.snapshot.query(patterns, select=select, mode=mode)
+
+    def query_batch(self, requests, mode: str = None):
+        return self.snapshot.query_batch(requests, mode=mode)
 
     def answers(self, patterns, select=None, mode: str = None) -> set:
         return self.snapshot.answers(patterns, select=select, mode=mode)
@@ -234,6 +298,7 @@ class SnapshotRegistry:
         self._snaps: dict = {}  # version -> Snapshot
         self._published: Snapshot | None = None
         self._plan_caches: dict = {}  # shared across snapshots
+        self._selectivity: dict = {}  # PatternSig -> observed, ditto
 
     @property
     def stats(self) -> dict:
@@ -293,7 +358,8 @@ class SnapshotRegistry:
                     time.perf_counter() - t0)
             snap = Snapshot(version=v, kb=self.kb, modes=self.modes,
                             views=views, use_index=self.use_index,
-                            _plan_caches=self._plan_caches)
+                            _plan_caches=self._plan_caches,
+                            _selectivity=self._selectivity)
             with self._lock:
                 # another thread may have captured v concurrently; keep the
                 # first registered one so refcounts aggregate correctly
@@ -379,6 +445,28 @@ class SnapshotRegistry:
                 self._refresh_gauges_locked()
                 return Pin(self, snap, stale=False)
         raise RuntimeError("snapshot capture failed and nothing is published")
+
+    def pin_version(self, version: int) -> Pin | None:
+        """Re-pin a SPECIFIC live version — the cursor-continuation path.
+
+        Pagination needs page K+1 to read the exact rows page K saw, so a
+        cursor re-pins its version by number.  Returns None when that
+        version has been retired (no reader kept it alive between pages);
+        the caller degrades to a fresh pin + ``stale`` cursor rather than
+        erroring.  The Pin is tagged stale when the store has moved past
+        the cursor's version — answers are still exact at that version.
+        """
+        m = self.metrics
+        with self._lock:
+            snap = self._snaps.get(version)
+            if snap is None:
+                m.counter("snapshot/pin_path", path="cursor_miss").inc()
+                return None
+            m.counter("snapshot/pins").inc()
+            m.counter("snapshot/pin_path", path="cursor").inc()
+            snap.refs += 1
+            self._refresh_gauges_locked()
+            return Pin(self, snap, stale=snap.version != self.kb.version)
 
     def _release(self, snap: Snapshot) -> None:
         with self._lock:

@@ -114,6 +114,9 @@ def validate_trace(trace: dict) -> list:
         if s["t1"] < s["t0"]:
             errors.append(f"{tid}: span {s['span_id']} ({s['name']}) has "
                           f"t1 < t0")
+        if s["parent_id"] != -1 and s.get("attrs", {}).get("dangling"):
+            errors.append(f"{tid}: span {s['span_id']} ({s['name']}) was "
+                          f"still open at trace finish (leaked span)")
     return errors
 
 

@@ -136,6 +136,12 @@ class Tracer:
 
     def finish_trace(self, trace: Trace) -> None:
         for sp in list(trace.spans):
+            if sp.t1 < 0 and sp.parent_id != -1:
+                # a non-root span nobody closed — a lifecycle leak in the
+                # instrumented code.  Closing it here keeps the export
+                # parseable, but the leak is MARKED so validate_trace can
+                # reject the trace instead of silently papering over it.
+                sp.set_attr(dangling=True)
             sp.finish()
         with self._lock:
             self._finished.append(trace)

@@ -47,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.engine import KnowledgeBase
 from repro.core.index import TypeIndex
 from repro.kernels import ops
+from repro.obs.metrics import REGISTRY
 from repro.utils.jaxcompat import make_mesh, shard_map
 
 INVALID = jnp.int32(np.iinfo(np.int32).max)
@@ -132,6 +133,12 @@ class QueryServer:
     topk: int = 32
     _views: dict = field(default_factory=dict)
     _seen_version: int | None = field(default=None)
+
+    @property
+    def served_version(self) -> int | None:
+        """Store version the current views were (re)built at — what an
+        answer returned right now is consistent with."""
+        return self._seen_version
 
     def invalidate(self):
         """Drop derived views/indexes after an out-of-API store mutation.
@@ -227,6 +234,8 @@ class QueryServer:
     def class_members(self, class_names):
         """Batch of Q1-style requests -> (distinct counts, member ids)."""
         self._sync()
+        REGISTRY.histogram("server/batch_size",
+                           kind="members").observe(len(class_names))
         ti, starts, lens, cap = self._ranges(class_names)
         counts, members = _serve_class_members(ti.subj, starts, lens, cap,
                                                self.topk)
@@ -235,6 +244,8 @@ class QueryServer:
     def class_prop_join(self, class_names, prop_names):
         """Batch of Q3-style requests -> (distinct-x counts, x bindings)."""
         self._sync()
+        REGISTRY.histogram("server/batch_size",
+                           kind="prop_join").observe(len(class_names))
         ti, starts, lens, cap = self._ranges(class_names)
         ps, pp = self._prop_view()
         plo, phi = self._intervals(prop_names, self.K.kb.tbox.properties)
@@ -292,6 +303,11 @@ class ShardedQueryServer:
     _views: dict = field(default_factory=dict)
     _fans: dict = field(default_factory=dict, repr=False)
     _seen_version: int | None = field(default=None)
+
+    @property
+    def served_version(self) -> int | None:
+        """Store version the current views were (re)built at."""
+        return self._seen_version
 
     def invalidate(self):
         self._views.clear()
@@ -422,6 +438,8 @@ class ShardedQueryServer:
     def class_members(self, class_names):
         """Batched Q1: fan out per shard, sum counts, merge member lists."""
         self._sync()
+        REGISTRY.histogram("server/batch_size",
+                           kind="members").observe(len(class_names))
         subj, starts, lens, cap = self._ranges(class_names)
         counts, members = self._fan_members(subj, starts, lens, cap)
         return (np.asarray(counts.sum(axis=0)),
@@ -430,6 +448,8 @@ class ShardedQueryServer:
     def class_prop_join(self, class_names, prop_names):
         """Batched Q3: the semi-join is fully shard-local (co-hashed x)."""
         self._sync()
+        REGISTRY.histogram("server/batch_size",
+                           kind="prop_join").observe(len(class_names))
         subj, starts, lens, cap = self._ranges(class_names)
         ps, pp = self._prop_views()
         plo, phi = self._intervals(prop_names, self.K.kb.tbox.properties)
