@@ -66,9 +66,10 @@ def main():
     # rewrite-mode dual-branch pass count: (?x rdf:type Person) entails
     # through BOTH domain- and range-entailing properties, so the pattern
     # needs a subject-binding AND an object-binding compaction over the
-    # same store.  The dual-mask kernel resolves both in ONE pass; the
-    # trace-time counters pin it (per-source: 1 dual pass, 0 single
-    # passes, where the pre-dual plan traced 2 single passes).
+    # same store.  The fused member-compaction kernel resolves both in
+    # ONE pass with the member/domain/range id sets resident on-chip; the
+    # trace-time counters pin it (per-source: 1 member pass, 0 mask-based
+    # passes, where the pre-fusion plan materialized full-store masks).
     from repro.kernels import ops as _kops
 
     dual_q = [Pattern("?x", "rdf:type", "Person")]
@@ -77,17 +78,18 @@ def main():
     # cold plan below re-traces every pass it actually makes
     _kops.compact_indices.clear_cache()
     _kops.dual_compact_indices.clear_cache()
+    _kops.rewrite_member_compact.clear_cache()
     _kops.reset_pass_counters()
     eng_rw.run(dual_q)
-    dual_passes = _kops.pass_counters["dual_compact"]
+    member_passes = _kops.pass_counters["member_compact"]
     # one residual single-mask pass belongs to DISTINCT's dedup compaction,
     # not the pattern; the pattern itself must trace zero single passes
     # (it used to trace two — one per branch)
     single_passes = _kops.pass_counters["compact"]
     t_dual, _ = timeit(lambda: eng_rw.run(dual_q), repeats=3)
     emit("table6/rewrite_dual_branch", t_dual,
-         dual_passes=dual_passes, single_passes=single_passes,
-         passed=bool(dual_passes >= 1 and single_passes <= 1))
+         member_passes=member_passes, single_passes=single_passes,
+         passed=bool(member_passes >= 1 and single_passes <= 1))
 
     # live-overlay cost: Q1 against an uncompacted ~1% delta (two-source
     # gathers over base + device-resident delta bucket) vs post-compaction
@@ -143,6 +145,33 @@ def _sharded_section(emit, timeit, raw):
     eng = S.engine("litemat")
     emit("sharded/exec_path", 0.0, **eng.cache_stats,
          shard_map=eng._shard_map_on())
+
+    # device-side cross-group combine: Q4's object-keyed join folds through
+    # the hash-repartition exchange; the host fold re-runs the same plan for
+    # the speedup column.  The flag row pins the acceptance invariant: on
+    # the device path the combine makes ZERO host re-uploads (the
+    # `device/transfer_bytes{src=combine_upload}` meter stays flat) and the
+    # repartition combine actually ran — a silent degrade to the host
+    # fallback flips `passed` and fails bench_diff's flag gate.
+    from repro.obs.metrics import REGISTRY
+
+    q4 = PAPER_QUERIES["Q4"]
+    device_path = eng._repartition_on()
+    up = REGISTRY.counter("device/transfer_bytes", src="combine_upload")
+    runs0 = eng.cache_stats["repartition_runs"]
+    up0 = up.value
+    t_dev, _ = timeit(lambda: eng.run(q4), repeats=3)
+    zero_upload = up.value == up0
+    ran = eng.cache_stats["repartition_runs"] > runs0
+    eng.use_repartition_join = False
+    try:
+        t_host, _ = timeit(lambda: eng.run(q4), repeats=3)
+    finally:
+        eng.use_repartition_join = None
+    emit("sharded/repartition_join", t_dev, host_fold_s=round(t_host, 6),
+         speedup=round(t_host / max(t_dev, 1e-9), 2),
+         device_path=device_path, zero_host_upload=zero_upload,
+         passed=bool(not device_path or (zero_upload and ran)))
 
     srv = ShardedQueryServer(S)
     names = ["Professor", "Student", "Faculty", "Person", "Course",

@@ -177,6 +177,21 @@ def _in_set(col, arr):
     return (arr[pos] == col) & (col != INVALID)
 
 
+def _pattern_const_key(terms):
+    """Hashable snapshot of a pattern's resolved constants.
+
+    The probe-constant half of the ``(PatternSig, bucket)`` selectivity
+    key: two patterns lowering to the same signature but resolving
+    different constants (Q3's Professors vs Q4's Chairs) get distinct
+    buckets, so one's observation never aliases the other's plan.
+    """
+    return tuple(
+        None if t is None else
+        (t.lo, t.hi, t.spills,
+         None if t.members is None else t.members.tobytes())
+        for t in terms)
+
+
 def _type_rewrite_masks_dyn(spo, alive, mem, tid, dom, rng, has_dom, has_rng):
     """Rewrite-mode (?x rdf:type C): explicit ∪ domain ∪ range branches.
 
@@ -327,25 +342,39 @@ def _rewrite_type_bindings(sig: PatternSig, ds, dyn, cap: int):
     Subject-binding rows (explicit/domain) and object-binding rows (range)
     are compacted INDEPENDENTLY per source and their bound values stitched:
     a row entailing the target through both branches yields two bindings.
-    When both branches exist, the dual-mask kernel resolves them in a
-    single pass per source (the dual-branch cost fix).
+    Both branches' member-set predicates are fused INTO the compaction
+    kernel (``ops.rewrite_member_compact``): the sorted id sets stay
+    on-chip and each tile resolves its own membership tests, so the
+    full-store boolean masks the old ``_in_set`` path materialized before
+    compacting no longer exist (``_type_rewrite_masks_dyn`` survives only
+    for the planner's counting pass).
     """
     _, _, has_dom, has_rng = sig.extra_caps
-    ms_b, mo_b = _type_rewrite_masks_dyn(
-        ds.base, ds.base_alive, dyn["o"], dyn["tid"], dyn["dom"],
-        dyn["rng"], has_dom, has_rng)
-    ms_d = mo_d = None
+    mem, tid = dyn["o"], dyn["tid"]
+    dom, rng = dyn["dom"], dyn["rng"]
+    base_n = ds.base.shape[0]
+    out_b = ops.rewrite_member_compact(
+        ds.base, ds.base_alive, tid, mem, dom, rng, cap, has_dom, has_rng,
+        block=ops.auto_block(base_n))
+    out_d = None
     if ds.delta is not None:
-        ms_d, mo_d = _type_rewrite_masks_dyn(
-            ds.delta, ds.delta_alive, dyn["o"], dyn["tid"], dyn["dom"],
-            dyn["rng"], has_dom, has_rng)
+        out_d = ops.rewrite_member_compact(
+            ds.delta, ds.delta_alive, tid, mem, dom, rng, cap, has_dom,
+            has_rng, block=ops.auto_block(ds.delta.shape[0]))
     if not has_rng:  # no object branch: the subject stream is the answer
-        take_s, ok_s, total_s = _masked_compact_both(ds, ms_b, ms_d, cap)
+        take_s, ok_s, total_s = out_b
+        if out_d is not None:
+            take_s, ok_s, total_s = _stitch_compact(
+                out_b[0], out_b[2], out_d[0], out_d[2], base_n, cap)
         vals_s = ops.two_source_gather(ds.base, ds.delta, take_s)[:, 0]
         return ok_s, total_s, vals_s
-    ((take_s, ok_s, total_s),
-     (take_o, _, total_o)) = _dual_masked_compact_both(
-        ds, ms_b, mo_b, ms_d, mo_d, cap)
+    take_s, ok_s, total_s = out_b[0:3]
+    take_o, total_o = out_b[3], out_b[5]
+    if out_d is not None:
+        take_s, ok_s, total_s = _stitch_compact(
+            out_b[0], out_b[2], out_d[0], out_d[2], base_n, cap)
+        take_o, _, total_o = _stitch_compact(
+            out_b[3], out_b[5], out_d[3], out_d[5], base_n, cap)
     vals_s = ops.two_source_gather(ds.base, ds.delta, take_s)[:, 0]
     vals_o = ops.two_source_gather(ds.base, ds.delta, take_o)[:, 2]
     j = jnp.arange(cap, dtype=jnp.int32)
@@ -655,8 +684,13 @@ class QueryEngine:
     _exec_cache: dict = field(default_factory=dict, repr=False)
     cache_stats: dict = field(default_factory=lambda: {"hits": 0, "misses": 0},
                               repr=False)
-    # PatternSig -> last observed selectivity (observed rows / store rows);
-    # filled by every successful run/explain, read by planner consumers
+    # (PatternSig, probe-constant bucket) -> last observed selectivity
+    # (observed rows / store rows); filled by every successful run/explain,
+    # read by planner consumers.  The bucket is the tuple of
+    # ``_pattern_const_key`` snapshots of every pattern up to and including
+    # this one in plan order — the probe side's provenance — so two probe
+    # sides sharing one signature (Q3's Professors, Q4's Chairs) never
+    # alias each other's observation.
     observed_selectivity: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
@@ -975,7 +1009,7 @@ class QueryEngine:
             return [p_t.lo]
         return self.view.distinct_p_ids(p_t.lo, p_t.hi, limit)
 
-    def _apply_inl(self, prepared, lowered, counts, order):
+    def _apply_inl(self, prepared, lowered, counts, order, ckeys):
         """Convert eligible joins to index-nested-loop probes (in place).
 
         Walking the join order with a running probe-side estimate (the
@@ -991,18 +1025,19 @@ class QueryEngine:
 
         Once a candidate probe shape has actually executed, its OBSERVED
         output row count (``observed_selectivity``, keyed by the INL
-        PatternSig) feeds back into the call: a pattern whose probe-side
-        ESTIMATE was too big for the heuristic still converts when the
-        observed INL output times ``inl_factor`` undercuts the merge-side
-        row count, and the capacity is sized from the observation instead
-        of the ``est * 32`` fanout guess — a mis-estimated pattern flips
-        strategy after one observation.  Observations only ever turn INL
-        *on* (and bound its sizing): the sig aliases every probe side
-        that lowers to the same shape (Q3's Professors and Q4's Chairs
-        probe the same worksFor signature), so a large aliased
-        observation must not veto a conversion the heuristic already
-        justified — sizing keeps a 2x margin over both the observation
-        and the probe estimate, and overflow retries protect the rest.
+        PatternSig PLUS the probe-constant bucket — the const keys of
+        every pattern walked so far, i.e. this probe side's provenance)
+        feeds back into the call and then DECIDES alone: a pattern whose
+        probe-side ESTIMATE was too big for the heuristic still converts
+        when the observed INL output times ``inl_factor`` undercuts the
+        merge-side row count, and a pattern the heuristic would have
+        converted is VETOED when the observation says the probe fans out
+        past the merge-side cost.  The bucket keying is what makes the
+        veto safe: Q3's Professors and Q4's Chairs lower to the same
+        worksFor signature but carry different upstream constants, so
+        neither's observation can ever speak for the other.  Capacity is
+        sized with a 2x margin over both the observation and the probe
+        estimate; overflow retries protect the rest.
         """
         indexable = (self.use_inl and self.use_index
                      and self.mode in ("litemat", "full"))
@@ -1011,6 +1046,7 @@ class QueryEngine:
         store_n = max(self.view.n, 1)
         bound = {v for v in prepared[order[0]][0] if v}
         est = counts[order[0]]
+        ctx = [ckeys[order[0]]]  # probe provenance: const keys walked so far
         for i in order[1:]:
             pvars, terms, extra = prepared[i]
             pat_vars = {v for v in pvars if v}
@@ -1051,11 +1087,14 @@ class QueryEngine:
                         s_sig=r_sig if res_pos == 0 else None,
                         o_sig=r_sig if res_pos == 2 else None,
                     )
-                    obs = self.observed_selectivity.get(sig)
+                    bucket = tuple(ctx) + (ckeys[i],)
+                    obs = self.observed_selectivity.get((sig, bucket))
                     if obs is not None:
+                        # bucketed observation: it speaks for exactly this
+                        # probe side, so it decides alone — including the
+                        # veto of a heuristic-approved conversion
                         inl_rows = max(int(round(obs * store_n)), 1)
-                        convert = (heuristic or
-                                   inl_rows * self.inl_factor <= counts[i])
+                        convert = inl_rows * self.inl_factor <= counts[i]
                         sized = max(inl_rows * 2, max(est, 1) * 2)
                         src = "observed"
                     else:
@@ -1067,17 +1106,24 @@ class QueryEngine:
                                          source=src).inc()
                         counts[i] = min(counts[i], sized)
                         lowered[i] = (sig, dyn, counts[i])
+                    elif src == "observed" and heuristic:
+                        REGISTRY.counter("planner/inl_decision",
+                                         source="observed_veto").inc()
             bound |= pat_vars
+            ctx.append(ckeys[i])
             est = min(est, counts[i])
 
     def _plan(self, patterns, select):
         """Host planning: -> (sigs, dyns, ordered caps, join_cap, sel,
-        stores, order, est).
+        stores, order, est, buckets).
 
         The first six elements are the PR-5 contract (core/shard.py indexes
         them positionally); ``order`` maps plan position -> original pattern
-        index and ``est`` carries the planner's per-pattern cardinality
-        estimates in plan order (what EXPLAIN compares observed counts to).
+        index, ``est`` carries the planner's per-pattern cardinality
+        estimates in plan order (what EXPLAIN compares observed counts to),
+        and ``buckets`` the per-pattern probe-constant buckets in plan
+        order — pattern j's bucket is the const keys of plan positions
+        0..j, the key half that de-aliases ``observed_selectivity``.
         """
         prepared = self._prepare(patterns)
         lowered = [self._lower(*pre) for pre in prepared]
@@ -1085,8 +1131,9 @@ class QueryEngine:
             c if c is not None else self._pattern_count(sig, dyn)
             for sig, dyn, c in lowered
         ]
+        ckeys = [_pattern_const_key(pre[1]) for pre in prepared]
         order = self._plan_order(prepared, counts)
-        self._apply_inl(prepared, lowered, counts, order)
+        self._apply_inl(prepared, lowered, counts, order, ckeys)
         caps = [self._bucket(int(counts[i] * self.slack) + 16) for i in order]
         join_cap = self._bucket(int(max(counts) * self.slack) + 16)
 
@@ -1095,21 +1142,24 @@ class QueryEngine:
         all_vars = tuple(dict.fromkeys(
             v for sig in sigs for v in sig.pvars if v is not None))
         sel = tuple(select) if select else all_vars
+        buckets = tuple(tuple(ckeys[i] for i in order[: j + 1])
+                        for j in range(len(order)))
         return (sigs, dyns, caps, join_cap, sel, self._stores(sigs),
-                tuple(order), tuple(counts[i] for i in order))
+                tuple(order), tuple(counts[i] for i in order), buckets)
 
-    def _record_observed(self, sigs, est, totals) -> None:
+    def _record_observed(self, sigs, est, totals, buckets) -> None:
         """Land observed per-pattern row counts in the process registry.
 
-        ``observed_selectivity`` (engine-local, keyed by PatternSig) is the
-        exact read-back surface for the planner; the registry histograms
-        aggregate observed rows and estimate error (est/obs ratio) by
-        strategy for the exporters and the ROADMAP item-1 batcher.
+        ``observed_selectivity`` (engine-local, keyed by ``(PatternSig,
+        probe-constant bucket)``) is the exact read-back surface for the
+        planner; the registry histograms aggregate observed rows and
+        estimate error (est/obs ratio) by strategy for the exporters and
+        the ROADMAP item-1 batcher.
         """
         store_n = max(self.view.n, 1)
-        for sig, e, obs in zip(sigs, est, totals):
+        for sig, e, obs, bucket in zip(sigs, est, totals, buckets):
             obs = int(obs)
-            self.observed_selectivity[sig] = obs / store_n
+            self.observed_selectivity[(sig, bucket)] = obs / store_n
             REGISTRY.histogram("planner/observed_rows",
                                strategy=sig.strategy).observe(obs)
             REGISTRY.histogram("planner/est_ratio",
@@ -1127,7 +1177,8 @@ class QueryEngine:
 
     def _run_planned(self, planned, max_retries: int = 6):
         """Execute an already-planned query (the solo dispatch path)."""
-        (sigs, dyns, caps, join_cap, sel, stores, order, est) = planned
+        (sigs, dyns, caps, join_cap, sel, stores, order, est,
+         buckets) = planned
         for attempt in range(max_retries):
             key = ("exec", self.mode, sigs, tuple(caps), join_cap, sel)
             misses0 = self.cache_stats["misses"]
@@ -1139,7 +1190,7 @@ class QueryEngine:
                 done = int(overflow) == 0
                 dsp.set_attr(overflow=not done)
             if done:
-                self._record_observed(sigs, est, np.asarray(totals))
+                self._record_observed(sigs, est, np.asarray(totals), buckets)
                 n = int(valid.sum())
                 rows = np.asarray(cols)[:, :n].T
                 return rows, sel
@@ -1154,11 +1205,16 @@ class QueryEngine:
     def _batch_caps(self, planned_group):
         """Unified capacity buckets for a same-signature batch.
 
-        Member caps are maxed elementwise (the shared executable must hold
-        the largest member), then raised to the observed-selectivity floor
-        for any signature this engine has watched before — observations
-        only ever GROW a batched capacity; shrinking one would trade a
-        single member's overflow retry for the whole batch's.
+        Member caps start at the elementwise max (the shared executable
+        must hold the largest member), then observed selectivities —
+        looked up per member by ``(sig, probe-constant bucket)`` — adjust
+        them.  When EVERY member of the batch has been observed, the cap
+        becomes the largest member's observed floor, which may SHRINK an
+        over-provisioned planner estimate (the bucketed keying makes that
+        safe: each member's floor speaks for exactly its own constants).
+        While any member is still unobserved, observations only grow the
+        cap — shrinking on partial evidence would trade the unobserved
+        member's overflow retry for the whole batch's.
         """
         sigs = planned_group[0][0]
         caps = [max(p[2][j] for p in planned_group)
@@ -1166,10 +1222,16 @@ class QueryEngine:
         join_cap = max(p[3] for p in planned_group)
         store_n = max(self.view.n, 1)
         for j, sig in enumerate(sigs):
-            obs = self.observed_selectivity.get(sig)
-            if obs is not None:
-                floor = self._bucket(
-                    int(obs * store_n * self.slack) + 16)
+            obs = [self.observed_selectivity.get((sig, p[8][j]))
+                   for p in planned_group]
+            known = [o for o in obs if o is not None]
+            if not known:
+                continue
+            floor = max(self._bucket(int(o * store_n * self.slack) + 16)
+                        for o in known)
+            if len(known) == len(obs):
+                caps[j] = floor  # complete evidence: shrink allowed
+            else:
                 caps[j] = max(caps[j], floor)
         return caps, max(join_cap, max(caps))
 
@@ -1238,7 +1300,8 @@ class QueryEngine:
             valid_h = np.asarray(valid)
             totals_h = np.asarray(totals)
             for b, (planned, members) in enumerate(entries):
-                self._record_observed(sigs, planned[7], totals_h[b])
+                self._record_observed(sigs, planned[7], totals_h[b],
+                                      planned[8])
                 n = int(valid_h[b].sum())
                 rows = cols_h[b][:, :n].T
                 for i in members:
@@ -1256,7 +1319,7 @@ class QueryEngine:
         :meth:`_record_observed`.  ``execute=False`` reports the plan only.
         """
         (sigs, dyns, caps, join_cap, sel, stores,
-         order, est) = self._plan(patterns, select)
+         order, est, buckets) = self._plan(patterns, select)
         observed = [None] * len(sigs)
         n_rows = None
         if execute and self.view.n:
@@ -1265,7 +1328,7 @@ class QueryEngine:
             cols, valid, overflow, totals = fn(stores, dyns)
             observed = [int(t) for t in np.asarray(totals)]
             n_rows = int(valid.sum())
-            self._record_observed(sigs, est, observed)
+            self._record_observed(sigs, est, observed, buckets)
         store_n = max(self.view.n, 1)
         pats = []
         for j, sig in enumerate(sigs):

@@ -32,12 +32,18 @@ hash the binding to the same shard).  A chain of such links forces one
 common subject variable, so the group planner simply buckets patterns by
 subject variable: each group evaluates *entirely shard-local* through the
 ordinary per-shard ``QueryEngine`` plans (slice / scan / INL, plan caches
-and all).  Cross-group joins — object-keyed, e.g. Q4's ``?y`` — all-gather
-the groups' compacted per-shard relations and combine them with the
-partitioned-merge kernel (``ops.merge_gather`` across shard outputs feeds
-a presorted build side into the sort-merge join).  Rewrite-mode type
-patterns bind ``?x`` from BOTH endpoints (the range branch binds the
-object), so they are never treated as co-hashed.
+and all).  Cross-group joins — object-keyed, e.g. Q4's ``?y`` — run as
+DEVICE-SIDE HASH-REPARTITION JOINS: both sides bin their rows by a hash
+of the join key, exchange the bins via ``lax.all_to_all`` inside one
+shard_map, and each shard folds its received key-sorted runs with the
+balanced partitioned-merge tree before joining SHARD-LOCAL — matching
+rows co-hash, so the per-shard outputs union to exactly the global join
+and no intermediate relation ever crosses back to the host.  A host fold
+(all-gather the per-shard relations, balanced ``_merge_tree``, presorted
+merge join) survives as the no-device dispatch path and the degradation
+target for exchange faults.  Rewrite-mode type patterns bind ``?x`` from
+BOTH endpoints (the range branch binds the object), so they are never
+treated as co-hashed.
 
 Execution lowers through ``jax.shard_map`` when the host actually has
 ``n_shards`` devices (the CI leg forces 8 with
@@ -70,11 +76,15 @@ from jax.sharding import PartitionSpec as P
 from repro.core.abox import EncodedKB, encode_obe, tbox_term_map
 from repro.core.closure import full_materialize
 from repro.core.delta import DevStore, MODES, _delta_host
-from repro.core.dictionary import table_from_host
+from repro.core.dictionary import (
+    SENTINEL, sharded_dictionary_fn, sharded_out_specs, table_from_host,
+)
 from repro.core.engine import KnowledgeBase, PAPER_QUERIES, _raw_columns
 from repro.core.index import pow2_bucket as _pow2
 from repro.core.materialize import DeviceTBox, compact_rows, lite_materialize
-from repro.core.query import Pattern, Relation, distinct, is_var, join
+from repro.core.query import (
+    INVALID, Pattern, Relation, distinct, is_var, join,
+)
 from repro.core.tbox import TBox, build_tbox
 from repro.core.update import (
     DynamicDictionary, affected_instances, encode_delta,
@@ -85,6 +95,7 @@ from repro.obs import trace as obs_trace
 from repro.obs.metrics import REGISTRY
 from repro.testing import faults
 from repro.testing.faults import FaultCrash, FaultError
+from repro.utils import pair64
 from repro.utils.jaxcompat import make_mesh, shard_map
 
 _EMPTY = np.zeros((0, 3), dtype=np.int32)
@@ -97,6 +108,21 @@ try:
     _DEVICE_FAILURES = (FaultError, _JaxRuntimeError)
 except ImportError:  # older jax: no public runtime-error class
     _DEVICE_FAILURES = (FaultError,)
+
+
+def _local_mesh(n_shards: int, axis_name: str):
+    """A 1-D mesh over this PROCESS's addressable devices.
+
+    Single-process runtimes see every device, so this is `make_mesh`
+    verbatim there; under `jax.distributed` each process's stores live on
+    its local devices only, and a mesh built from the global device list
+    would try to address remote buffers.  (Cross-process global-mesh
+    sharding is the remaining ROADMAP item-2 step.)
+    """
+    if jax.process_count() == 1:
+        return make_mesh((n_shards,), (axis_name,))
+    devs = jax.local_devices()[:n_shards]
+    return jax.sharding.Mesh(np.asarray(devs), (axis_name,))
 
 
 def shard_of(ids, n_shards: int) -> np.ndarray:
@@ -192,6 +218,13 @@ class ShardedKB:
     write_lock: threading.RLock = field(
         default_factory=threading.RLock, repr=False, compare=False)
     ingest_report: "IngestReport | None" = field(default=None, repr=False)
+    # device-parallel dictionary encode (paper §III.B) for inserts: the
+    # BULK-INGEST path flips this on — ids then assign in hash-partitioned
+    # owner order, not global fp-rank order, so interactively built stores
+    # keep the host encode (their id-space parity with a single
+    # KnowledgeBase is pinned by the update oracle)
+    use_sharded_encode: bool = False
+    _enc_cache: dict = field(default_factory=dict, repr=False)
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -208,7 +241,7 @@ class ShardedKB:
         evaluation, the same invariant the incremental-insert path pins.
         """
         tbox = tbox or build_tbox(raw.onto, parallel=parallel_tbox)
-        n_shards = n_shards or max(jax.device_count(), 1)
+        n_shards = n_shards or max(jax.local_device_count(), 1)
         kbg = encode_obe(raw, tbox)
         dtb = DeviceTBox.build(tbox)
         parts = partition_rows(np.asarray(kbg.spo), n_shards)
@@ -249,7 +282,7 @@ class ShardedKB:
     @classmethod
     def empty(cls, tbox: TBox, n_shards: int | None = None) -> "ShardedKB":
         """Shards over an empty ABox — the bulk-ingest starting point."""
-        n_shards = n_shards or max(jax.device_count(), 1)
+        n_shards = n_shards or max(jax.local_device_count(), 1)
         fps, ids = tbox_term_map(tbox)
         ttable = table_from_host(fps, ids)
         dtb = DeviceTBox.build(tbox)
@@ -297,6 +330,9 @@ class ShardedKB:
             tbox = build_tbox(onto or first.onto)
             parts = iter([first, *parts])
         skb = cls.empty(tbox, n_shards=n_shards)
+        # encode is the ingest bottleneck: bulk loads take the device-side
+        # parallel dictionary build whenever a device per shard exists
+        skb.use_sharded_encode = True
         report = IngestReport()
         rng = np.random.default_rng(seed)
         for k, part in enumerate(parts):
@@ -339,12 +375,87 @@ class ShardedKB:
         return self.kb.tbox
 
     def _device_ctx(self, i: int):
-        devs = jax.devices()
+        devs = jax.local_devices()  # addressable from THIS process
         return jax.default_device(devs[i % len(devs)])
 
     def shard_devices(self) -> list:
-        devs = jax.devices()
+        devs = jax.local_devices()
         return [devs[i % len(devs)] for i in range(self.n_shards)]
+
+    def _sharded_encode_on(self) -> bool:
+        return jax.local_device_count() >= self.n_shards > 1
+
+    def _enc_executable(self, cap: int):
+        """Cached shard_mapped sharded-dictionary build for one bin shape.
+
+        Ids assign RELATIVE to 0 inside the executable; the host adds
+        ``next_id`` afterwards — so the compiled build is reusable across
+        batches as the dictionary grows.
+        """
+        fn = self._enc_cache.get(cap)
+        if fn is None:
+            body = sharded_dictionary_fn("d", self.n_shards, cap, base=0)
+            mesh = _local_mesh(self.n_shards, "d")
+            d = P("d")
+            fn = jax.jit(shard_map(
+                body, mesh=mesh, in_specs=(d, d, d),
+                out_specs=sharded_out_specs(), check_vma=False))
+            self._enc_cache[cap] = fn
+        return fn
+
+    def _encode_sharded(self, s_fp, p_fp, o_fp):
+        """Device-parallel dictionary encode (the paper's §III.B) of a part.
+
+        Predicates validate against the host mirror (the TBox-fixed OBE
+        invariant ``encode_delta`` enforces); known s/o terms resolve by
+        one host lookup; the UNKNOWN tail goes through ONE
+        ``sharded_dictionary_fn`` pass — hash-partition to owner shards,
+        per-owner unique + all_gather prefix-sum id ranges, reverse
+        all_to_all — and the assigned (fp, id) pairs splice back into the
+        host mirror via :meth:`DynamicDictionary.register`, so absorb /
+        lookup / later host encodes see exactly the same dictionary.
+        """
+        p_ids = self._dyn.lookup(p_fp)
+        bad = (p_ids < 0) | (p_ids >= self._dyn.instance_base)
+        if bad.any():
+            raise ValueError(
+                "delta contains predicates outside the TBox property map — "
+                "schema growth needs a re-encode (KnowledgeBase.build), the "
+                "incremental path only grows the ABox")
+        so_fp = np.concatenate([s_fp, o_fp])
+        so_ids = self._dyn.lookup(so_fp)
+        missing = so_ids < 0
+        n_new = 0
+        if missing.any():
+            miss_fp = so_fp[missing]
+            hi, lo = pair64.split_np(miss_fp)
+            S, n = self.n_shards, hi.shape[0]
+            cap = _pow2(-(-n // S), floor=256)
+            hi_p = np.full(S * cap, int(SENTINEL), np.int32)
+            lo_p = np.full(S * cap, int(SENTINEL), np.int32)
+            valid = np.zeros(S * cap, bool)
+            hi_p[:n], lo_p[:n], valid[:n] = hi, lo, True
+            occ, table, overflow, _ = self._enc_executable(cap)(
+                jnp.asarray(hi_p), jnp.asarray(lo_p), jnp.asarray(valid))
+            if int(np.asarray(overflow).sum()):
+                # a source shard holds at most cap occurrences and every
+                # bin holds cap slots, so this is unreachable; guard the
+                # invariant rather than silently dropping terms
+                raise RuntimeError("sharded encode owner bins overflowed")
+            base = self._dyn.next_id
+            occ = np.asarray(occ).reshape(-1)[:n] + base
+            thi = np.asarray(table[0]).reshape(-1)
+            tlo = np.asarray(table[1]).reshape(-1)
+            tids = np.asarray(table[2]).reshape(-1)
+            real = tids >= 0
+            fps_r = pair64.combine_np(thi[real], tlo[real])
+            ufp, uidx = np.unique(fps_r, return_index=True)
+            n_new = self._dyn.register(ufp, tids[real][uidx] + base)
+            so_ids = so_ids.copy()
+            so_ids[missing] = occ.astype(np.int32)
+        s_ids, o_ids = np.split(so_ids, 2)
+        spo = np.stack([s_ids, p_ids, o_ids], axis=1).astype(np.int32)
+        return spo, n_new
 
     def _absorb(self, strings=None) -> int:
         """Fold freshly allocated dictionary terms into EVERY shard."""
@@ -459,7 +570,10 @@ class ShardedKB:
             return dict(n_inserted=0, n_new_terms=0)
         with self.write_lock:
             faults.fire("shard.ingest_encode", n=int(s_fp.shape[0]))
-            spo, n_new = encode_delta(self._dyn, s_fp, p_fp, o_fp)
+            if self.use_sharded_encode and self._sharded_encode_on():
+                spo, n_new = self._encode_sharded(s_fp, p_fp, o_fp)
+            else:
+                spo, n_new = encode_delta(self._dyn, s_fp, p_fp, o_fp)
             parts = partition_rows(spo, self.n_shards)
             # -- commit point: nothing below raises -------------------------
             self._absorb(strings)
@@ -652,39 +766,113 @@ def plan_groups(patterns, mode: str, tbox) -> list:
     return list(groups.values())
 
 
+def _merge_tree(runs: list, key_col: int):
+    """Balanced pairwise fold of key-sorted device runs into ONE sorted run.
+
+    log2(k) merge levels instead of a left-deep fold: the accumulated run
+    is never re-merged against every remaining part, so each row moves
+    O(log k) times rather than O(k).  Each level pairs neighbours through
+    ``ops.merge_gather`` (the partitioned-merge kernel) + one row gather;
+    INVALID keys sort last, so padded rows sink to the fold's tail.
+    Shared by the host-fallback combine and the device repartition join's
+    shard-local fold of exchanged partitions.
+    """
+    runs = list(runs)
+    while len(runs) > 1:
+        nxt = []
+        for i in range(0, len(runs) - 1, 2):
+            a, b = runs[i], runs[i + 1]
+            ka, kb = a[:, key_col], b[:, key_col]
+            g = ops.merge_gather(ka, jnp.zeros_like(ka), kb,
+                                 jnp.zeros_like(kb))
+            nxt.append(ops.two_source_gather(a, b, g))
+        if len(runs) % 2:
+            nxt.append(runs[-1])
+        runs = nxt
+    return runs[0]
+
+
 def _merge_shard_parts(parts: list, key_col: int):
     """Fold per-shard result rows into one key-sorted array on device.
 
     Each shard's rows sort locally (small — post-distinct relations), then
-    fold pairwise through ``ops.merge_gather`` — the partitioned-merge
-    kernel across shard outputs — so the combined relation arrives
-    presorted for the join's build side without a global re-sort.
+    fold through the balanced ``_merge_tree`` — so the combined relation
+    arrives presorted for the join's build side without a global re-sort,
+    and the single pad to the join capacity happens once downstream in
+    ``_host_relation``, not per merge step.
     """
     live = [p for p in parts if p.shape[0]]
     if not live:
         return np.zeros((0, parts[0].shape[1]), np.int32)
-    live = [p[np.argsort(p[:, key_col], kind="stable")] for p in live]
-    cur = jnp.asarray(live[0])
-    cur_key = cur[:, key_col]
-    for nxt_h in live[1:]:
-        nxt = jnp.asarray(nxt_h)
-        nxt_key = nxt[:, key_col]
-        z = jnp.zeros_like(cur_key)
-        zn = jnp.zeros_like(nxt_key)
-        g = ops.merge_gather(cur_key, z, nxt_key, zn)
-        cur = ops.two_source_gather(cur, nxt, g)
-        cur_key = cur[:, key_col]
-    return np.asarray(cur)
+    runs = [jnp.asarray(p[np.argsort(p[:, key_col], kind="stable")])
+            for p in live]
+    return np.asarray(_merge_tree(runs, key_col))
 
 
 def _host_relation(gvars: tuple, rows: np.ndarray, cap: int) -> Relation:
-    """(N, k) host rows -> INVALID-padded device Relation of capacity cap."""
+    """(N, k) host rows -> INVALID-padded device Relation of capacity cap.
+
+    This is the host-fold combine's re-upload point: every merged relation
+    crosses host->device here.  The device repartition path never calls it
+    mid-join, which the ``device/transfer_bytes{src=combine_upload}``
+    counter pins in tests.
+    """
     n = rows.shape[0]
     cols = np.full((len(gvars), cap), np.iinfo(np.int32).max, np.int32)
     cols[:, :n] = rows.T
+    REGISTRY.counter("device/transfer_bytes",
+                     src="combine_upload").inc(int(cols.nbytes))
     return Relation(
         vars=gvars, cols=jnp.asarray(cols),
         valid=jnp.arange(cap) < n, overflow=jnp.int32(max(n - cap, 0)))
+
+
+def _bin_by_key(cols, valid, key_idx: int, n_shards: int):
+    """Route one shard's relation rows to hash(join key) partitions.
+
+    ``cols`` int32[V, cap] / ``valid`` bool[cap] -> int32[S, cap, V] send
+    bins: bin t holds this shard's rows whose key hashes to t, ascending
+    by key, INVALID-padded.  A bin can never overflow its ``cap`` slots —
+    the source shard holds at most ``cap`` rows in total — so the exchange
+    itself needs no overflow accounting (receive-side skew lands in the
+    [S, cap] receive buffer, which holds the worst case of EVERY row
+    hashing to one shard).  Invalid rows route nowhere.
+    """
+    n_vars, cap = cols.shape
+    key = jnp.where(valid, cols[key_idx], INVALID)
+    h = (key.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)) >> jnp.uint32(16)
+    tgt = jnp.where(valid & (key != INVALID),
+                    (h % jnp.uint32(n_shards)).astype(jnp.int32),
+                    jnp.int32(n_shards))
+    order = jnp.lexsort((key, tgt))
+    tgt_s = tgt[order]
+    rows_s = cols.T[order]
+    first = jnp.searchsorted(tgt_s, jnp.arange(n_shards, dtype=jnp.int32))
+    slot = (jnp.arange(cap, dtype=jnp.int32)
+            - first[jnp.clip(tgt_s, 0, n_shards - 1)])
+    idx = jnp.where(tgt_s < n_shards, tgt_s * cap + slot, n_shards * cap)
+    flat = jnp.full((n_shards * cap, n_vars), INVALID, jnp.int32)
+    flat = flat.at[idx].set(rows_s, mode="drop")
+    return flat.reshape(n_shards, cap, n_vars)
+
+
+def _stack_parts(parts: list, n_vars: int, n_shards: int):
+    """Host result parts -> stacked [S, V, cap] device relation.
+
+    The repartition fold doesn't care how rows were distributed before the
+    exchange (bins are computed from the rows themselves), so parts slot
+    round-robin.  This is the single-device EMULATED entry into the device
+    combine — the shard_map path hands over stacked buffers directly and
+    never passes through here.
+    """
+    cap = _pow2(max((p.shape[0] for p in parts), default=1), floor=256)
+    cols = np.full((n_shards, n_vars, cap), np.iinfo(np.int32).max, np.int32)
+    valid = np.zeros((n_shards, cap), bool)
+    for i, p in enumerate(parts):
+        j = i % n_shards
+        cols[j, :, :p.shape[0]] = p.T
+        valid[j, :p.shape[0]] = True
+    return jnp.asarray(cols), jnp.asarray(valid)
 
 
 # ---------------------------------------------------------------------------
@@ -817,13 +1005,21 @@ class ShardedQueryEngine:
     mode: str = "litemat"
     use_index: bool = True
     use_shard_map: bool | None = None  # None: auto (device per shard)
+    # None: auto (repartition joins whenever shard_map is on); True forces
+    # the device combine even on the per-shard loop path — the exchange
+    # then runs its single-device EMULATION (transpose-as-all-to-all), the
+    # same traced math minus the collective, which is how tests exercise
+    # the fold on a one-device host
+    use_repartition_join: bool | None = None
     _exec_cache: dict = field(default_factory=dict, repr=False)
     _stacks: dict = field(default_factory=dict, repr=False)
     _mesh: object = field(default=None, repr=False)
     cache_stats: dict = field(
         default_factory=lambda: {"hits": 0, "misses": 0,
                                  "shard_map_runs": 0, "loop_runs": 0,
-                                 "shard_map_faults": 0},
+                                 "shard_map_faults": 0,
+                                 "repartition_runs": 0,
+                                 "exchange_faults": 0},
         repr=False)
 
     def _engines(self):
@@ -832,7 +1028,12 @@ class ShardedQueryEngine:
     def _shard_map_on(self) -> bool:
         if self.use_shard_map is not None:
             return self.use_shard_map
-        return jax.device_count() >= self.skb.n_shards > 1
+        return jax.local_device_count() >= self.skb.n_shards > 1
+
+    def _repartition_on(self) -> bool:
+        if self.use_repartition_join is not None:
+            return self.use_repartition_join
+        return self._shard_map_on()
 
     def prewarm(self, queries, buckets=(), select=None) -> int:
         n = 0
@@ -892,11 +1093,31 @@ class ShardedQueryEngine:
         return parts
 
     def _run_group_shard_map(self, gpats, gvars):
-        """One shard_mapped executable evaluating the group plan per shard.
+        """Shard_mapped group evaluation, results pulled back as host parts.
 
         Returns None (caller falls back to the loop) when per-shard plans
-        disagree on signatures — data-dependent strategy choices (single-
-        predicate-run detection, INL conversion) can differ across shards.
+        disagree on signatures.  The repartition combine bypasses this
+        wrapper and keeps ``_run_group_device``'s stacked buffers on
+        device.
+        """
+        res = self._run_group_device(gpats, gvars)
+        if res is None:
+            return None
+        cols, valid = res
+        parts = []
+        for i in range(self.skb.n_shards):
+            n = int(valid[i].sum())
+            if n:
+                parts.append(np.asarray(cols[i])[:, :n].T.astype(np.int32))
+        return parts
+
+    def _run_group_device(self, gpats, gvars):
+        """One shard_mapped executable evaluating the group plan per shard.
+
+        Returns stacked device buffers ``(cols [S, V, cap], valid
+        [S, cap])`` — or None when per-shard plans disagree on signatures:
+        data-dependent strategy choices (single-predicate-run detection,
+        INL conversion) can differ across shards.
         """
         engines = self._engines()
         plans = []
@@ -940,13 +1161,7 @@ class ShardedQueryEngine:
             if int(jnp.max(overflow)) == 0:
                 self.cache_stats["shard_map_runs"] += 1
                 REGISTRY.counter("shard/group_runs", path="shard_map").inc()
-                parts = []
-                for i in range(self.skb.n_shards):
-                    n = int(valid[i].sum())
-                    if n:
-                        parts.append(np.asarray(cols[i])[:, :n].T.astype(
-                            np.int32))
-                return parts
+                return cols, valid
             caps = tuple(c * 2 for c in caps)
             join_cap *= 2
         raise RuntimeError("sharded query kept overflowing its buckets")
@@ -968,7 +1183,7 @@ class ShardedQueryEngine:
         self.cache_stats["misses"] += 1
         REGISTRY.counter("shard/exec_cache", event="miss").inc()
         if self._mesh is None:
-            self._mesh = make_mesh((self.skb.n_shards,), ("shard",))
+            self._mesh = _local_mesh(self.skb.n_shards, "shard")
 
         def body(stores, dyns):
             st1 = {k: DevStore(
@@ -1017,6 +1232,208 @@ class ShardedQueryEngine:
                 return parts
         return self._run_group_loop(gpats, gvars)
 
+    # -- device repartition combine ------------------------------------------
+    def _cx_executable(self, acc_vars, rel_vars, key, acap, rcap, jcap):
+        """One hash-repartition join step, cached per static shape/config.
+
+        Both sides bin by hash(join key), exchange partitions (all-to-all
+        under shard_map; a transpose in the single-device emulation), then
+        each shard folds its received key-sorted runs with the balanced
+        merge tree and runs the ordinary presorted merge join SHARD-LOCAL.
+        Matching rows co-hash, so the per-shard join outputs union to
+        exactly the global join — no intermediate relation ever crosses
+        back to the host.
+        """
+        ck = ("cx", acc_vars, rel_vars, key, acap, rcap, jcap,
+              self._shard_map_on())
+        fn = self._exec_cache.get(ck)
+        if fn is not None:
+            self.cache_stats["hits"] += 1
+            REGISTRY.counter("shard/exec_cache", event="hit").inc()
+            return fn
+        self.cache_stats["misses"] += 1
+        REGISTRY.counter("shard/exec_cache", event="miss").inc()
+        S = self.skb.n_shards
+        ai, ri = acc_vars.index(key), rel_vars.index(key)
+
+        def local_join(arecv, rrecv):
+            # arecv [S, acap, Va] rows; rrecv [S, rcap, Vr] key-sorted runs
+            m = _merge_tree([rrecv[i] for i in range(S)], ri)
+            rel1 = Relation(vars=rel_vars, cols=m.T,
+                            valid=m[:, ri] != INVALID,
+                            overflow=jnp.int32(0))
+            af = arecv.reshape(S * acap, len(acc_vars))
+            acc1 = Relation(vars=acc_vars, cols=af.T,
+                            valid=af[:, ai] != INVALID,
+                            overflow=jnp.int32(0))
+            out = join(rel1, acc1, jcap, a_sorted=True)
+            return out.cols, out.valid, out.overflow
+
+        if self._shard_map_on():
+            if self._mesh is None:
+                self._mesh = _local_mesh(S, "shard")
+
+            def body(ac, av, rc, rv):
+                abins = _bin_by_key(ac[0], av[0], ai, S)
+                rbins = _bin_by_key(rc[0], rv[0], ri, S)
+                arecv = jax.lax.all_to_all(abins, "shard", 0, 0)
+                rrecv = jax.lax.all_to_all(rbins, "shard", 0, 0)
+                cols, valid, ovf = local_join(arecv, rrecv)
+                return cols[None], valid[None], ovf[None]
+
+            f = shard_map(body, mesh=self._mesh,
+                          in_specs=(P("shard"),) * 4,
+                          out_specs=(P("shard"),) * 3, check_vma=False)
+        else:
+            def f(ac, av, rc, rv):
+                abins = jnp.stack(
+                    [_bin_by_key(ac[i], av[i], ai, S) for i in range(S)])
+                rbins = jnp.stack(
+                    [_bin_by_key(rc[i], rv[i], ri, S) for i in range(S)])
+                arecv = jnp.swapaxes(abins, 0, 1)
+                rrecv = jnp.swapaxes(rbins, 0, 1)
+                outs = [local_join(arecv[i], rrecv[i]) for i in range(S)]
+                return (jnp.stack([o[0] for o in outs]),
+                        jnp.stack([o[1] for o in outs]),
+                        jnp.stack([o[2] for o in outs]))
+
+        fn = jax.jit(f)
+        self._exec_cache[ck] = fn
+        return fn
+
+    def _dx_executable(self, rvars, sel, cap):
+        """Per-shard DISTINCT projection, cached per static shape/config."""
+        ck = ("dx", rvars, sel, cap, self._shard_map_on())
+        fn = self._exec_cache.get(ck)
+        if fn is not None:
+            self.cache_stats["hits"] += 1
+            REGISTRY.counter("shard/exec_cache", event="hit").inc()
+            return fn
+        self.cache_stats["misses"] += 1
+        REGISTRY.counter("shard/exec_cache", event="miss").inc()
+        S = self.skb.n_shards
+
+        def local(c, v):
+            out = distinct(Relation(vars=rvars, cols=c, valid=v,
+                                    overflow=jnp.int32(0)), sel, cap)
+            return out.cols, out.valid
+
+        if self._shard_map_on():
+            if self._mesh is None:
+                self._mesh = _local_mesh(S, "shard")
+
+            def body(c, v):
+                oc, ov = local(c[0], v[0])
+                return oc[None], ov[None]
+
+            f = shard_map(body, mesh=self._mesh,
+                          in_specs=(P("shard"),) * 2,
+                          out_specs=(P("shard"),) * 2, check_vma=False)
+        else:
+            def f(c, v):
+                outs = [local(c[i], v[i]) for i in range(S)]
+                return (jnp.stack([o[0] for o in outs]),
+                        jnp.stack([o[1] for o in outs]))
+
+        fn = jax.jit(f)
+        self._exec_cache[ck] = fn
+        return fn
+
+    def _run_repartition(self, patterns, groups, select, max_retries):
+        """Evaluate groups, fold them with the device repartition join.
+
+        Returns (rows, sel), or None when a shard_map group plan
+        mismatched across shards — the caller then degrades to the host
+        fold, exactly like the single-group dispatch does.
+        """
+        evaluated = []
+        with obs_trace.span("shard_combine", path="repartition",
+                            n_groups=len(groups)):
+            for g in groups:
+                gpats = [patterns[i] for i in g]
+                gvars = _group_vars(gpats)
+                if self._shard_map_on():
+                    faults.fire("shard.shard_map")
+                    res = self._run_group_device(gpats, gvars)
+                    if res is None:
+                        return None
+                else:
+                    res = _stack_parts(self._run_group_loop(gpats, gvars),
+                                       len(gvars), self.skb.n_shards)
+                evaluated.append((gvars, res))
+            return self._combine_groups_device(evaluated, patterns, select,
+                                               max_retries)
+
+    def _combine_groups_device(self, evaluated, patterns, select,
+                               max_retries):
+        """Fold stacked per-shard group results entirely on device.
+
+        Mirrors ``combine_groups``'s order (fewest rows first, greedy
+        connected) and capacities, but every cross-group join runs as a
+        hash-repartition join: intermediate relations stay stacked on
+        devices between steps.  Only the final per-shard DISTINCT rows
+        come back, and one host-side sorted-unique pass reproduces the
+        global distinct's lexicographic order bit-for-bit.
+        """
+        all_vars = tuple(dict.fromkeys(
+            v for pat in patterns for v in (pat.s, pat.p, pat.o)
+            if is_var(v)))
+        sel = tuple(select) if select else all_vars
+        totals = [int(valid.sum()) for _, (_, valid) in evaluated]
+        order = sorted(range(len(evaluated)), key=lambda i: totals[i])
+        acc = None  # (vars, cols [S, V, cap], valid [S, cap])
+        done = set()
+        while len(done) < len(order):
+            pick = None
+            for i in order:
+                if i in done:
+                    continue
+                gvars = evaluated[i][0]
+                if acc is None or set(gvars) & set(acc[0]):
+                    pick = i
+                    break
+            if pick is None:
+                raise ValueError(
+                    "cartesian products not supported — reorder the plan")
+            done.add(pick)
+            gvars, (cols, valid) = evaluated[pick]
+            if acc is None:
+                acc = (gvars, cols, valid)
+                continue
+            key = next(v for v in gvars if v in acc[0])
+            faults.fire("shard.exchange")
+            jcap = _pow2(max(totals[pick], int(acc[2].sum()), 1) * 2,
+                         floor=256)
+            for _ in range(max_retries):
+                fn = self._cx_executable(
+                    acc[0], gvars, key, int(acc[1].shape[2]),
+                    int(cols.shape[2]), jcap)
+                ocols, ovalid, oovf = fn(acc[1], acc[2], cols, valid)
+                if int(jnp.max(oovf)) == 0:
+                    break
+                jcap *= 2
+            else:
+                raise RuntimeError("sharded join kept overflowing")
+            out_vars = tuple(gvars) + tuple(
+                v for v in acc[0] if v not in gvars)
+            acc = (out_vars, ocols, ovalid)
+        self.cache_stats["repartition_runs"] += 1
+        REGISTRY.counter("shard/combine_runs", path="repartition").inc()
+        # per-shard distinct shrinks the readback; identical sel-tuples can
+        # still straddle shards when sel drops the last join key, so one
+        # host-side sorted-unique pass finishes the global dedup in the
+        # same ascending-lexicographic order `distinct` emits
+        dfn = self._dx_executable(acc[0], sel, int(acc[1].shape[2]))
+        dcols, dvalid = dfn(acc[1], acc[2])
+        parts = []
+        for i in range(self.skb.n_shards):
+            n = int(dvalid[i].sum())
+            if n:
+                parts.append(np.asarray(dcols[i])[:, :n].T.astype(np.int32))
+        if not parts:
+            return np.zeros((0, len(sel)), np.int32), sel
+        return np.unique(np.concatenate(parts), axis=0), sel
+
     # -- the full query ------------------------------------------------------
     def run(self, patterns, select=None, max_retries: int = 6):
         """Execute; returns (rows int32[k, n_select], select var names).
@@ -1024,12 +1441,28 @@ class ShardedQueryEngine:
         Same contract as QueryEngine.run: rows are DISTINCT bindings of the
         selected variables, in the global lexicographic order the distinct
         pass produces — bit-identical to the single-device engine given the
-        same ``select``.
+        same ``select``.  Multi-group plans (cross-shard, object-keyed
+        joins) fold through the device-side hash-repartition join when
+        enabled, degrading to the host fold on exchange faults or plan
+        mismatches.
         """
         patterns = list(patterns)
         if self.mode in ("litemat", "full"):
             self.skb._flush(self.mode)
         groups = plan_groups(patterns, self.mode, self.skb.tbox)
+        if len(groups) > 1 and self._repartition_on():
+            try:
+                out = self._run_repartition(patterns, groups, select,
+                                            max_retries)
+                if out is not None:
+                    return out
+            except _DEVICE_FAILURES:
+                self.cache_stats["exchange_faults"] += 1
+                REGISTRY.counter("shard/exchange_faults").inc()
+                obs_trace.event("repartition_fallback")
+            REGISTRY.counter("shard/combine_runs", path="host_fallback").inc()
+        else:
+            REGISTRY.counter("shard/combine_runs", path="host").inc()
         evaluated = []
         for g in groups:
             gpats = [patterns[i] for i in g]

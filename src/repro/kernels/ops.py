@@ -25,7 +25,8 @@ from repro.kernels.msc_select import msc_select_pallas
 from repro.kernels.pair_search import pair_search_pallas
 from repro.kernels.stream_compact import (
     dual_compact_pallas, interval_compact_pallas,
-    masked_interval_compact_pallas, stream_compact_pallas,
+    masked_interval_compact_pallas, member_compact_pallas,
+    stream_compact_pallas,
 )
 
 INVALID = np.int32(np.iinfo(np.int32).max)
@@ -42,7 +43,7 @@ INVALID = np.int32(np.iinfo(np.int32).max)
 # lock guards the dict's read-modify-write, and each bump is mirrored into
 # the process metrics registry (kernels/passes{kind=...}) where the obs
 # exporters read it.  The dict itself stays the public read surface.
-pass_counters = {"compact": 0, "dual_compact": 0,
+pass_counters = {"compact": 0, "dual_compact": 0, "member_compact": 0,
                  "merge_resident": 0, "merge_partitioned": 0}
 _PASS_LOCK = threading.Lock()
 
@@ -126,6 +127,8 @@ def closure_expand(conc, sorted_ids, anc_table, block: int = 1024):
 def pair_search(table_hi, table_lo, qhi, qlo, block: int = 1024):
     """Lexicographic binary search (left); -> int32 positions."""
     n = qhi.shape[0]
+    if table_hi.shape[0] == 0:  # empty table: every query lands at 0
+        return jnp.zeros((n,), jnp.int32)
     mx = np.int32(np.iinfo(np.int32).max)
     ph = _pad1(qhi, block, mx)
     pl_ = _pad1(qlo, block, mx)
@@ -288,6 +291,38 @@ def dual_compact_indices(mask_a, mask_b, cap: int, block: int = 512):
             *_assemble_compact(lb, cb, cap, block))
 
 
+@partial(jax.jit, static_argnames=("cap", "block", "has_dom", "has_rng"))
+def rewrite_member_compact(spo, alive, tid, mem, dom, rng, cap: int,
+                           has_dom: bool, has_rng: bool, block: int = 512):
+    """Fused rewrite-mode type-pattern member-set masks + compaction.
+
+    One kernel pass over ``spo`` evaluates the full RDFS reformulation of
+    ``(?x rdf:type C)`` — subject branch ``(p == tid & o ∈ mem) | p ∈ dom``
+    and object branch ``p ∈ rng`` — with the sorted id sets resident
+    on-chip, and compacts the matching row indices in the same pass: the
+    full-store boolean masks the old ``_in_set`` path materialized before
+    compaction never exist.  Returns ``(take_s, ok_s, total_s)``, extended
+    with ``(take_o, ok_o, total_o)`` when ``has_rng``; each triple matches
+    the ``compact_indices`` contract.  ``has_dom``/``has_rng`` are static,
+    so absent branches compile to nothing.
+    """
+    _bump_pass("member_compact")
+    s = _pad1(spo[:, 0], block, INVALID)
+    p = _pad1(spo[:, 1], block, INVALID)
+    o = _pad1(spo[:, 2], block, INVALID)
+    pa = _pad1(alive.astype(jnp.int32), block, np.int32(0))
+    params = jnp.stack([tid]).astype(jnp.int32)
+    outs = member_compact_pallas(
+        params, mem, dom, rng, s, p, o, pa, has_dom=has_dom,
+        has_rng=has_rng, block=block, interpret=_interpret())
+    if has_rng:
+        ls, cs, lo_, co = outs
+        return (*_assemble_compact(ls, cs, cap, block),
+                *_assemble_compact(lo_, co, cap, block))
+    ls, cs = outs
+    return _assemble_compact(ls, cs, cap, block)
+
+
 @partial(jax.jit, static_argnames=("cap", "block"))
 def interval_compact(p, o, params, cap: int, block: int = 512):
     """Fused LiteMat interval predicate + compaction in one pass.
@@ -326,6 +361,7 @@ __all__ = [
     "interval_filter", "msc_select", "closure_expand", "pair_search",
     "pair_search_windowed", "compact_indices", "dual_compact_indices",
     "interval_compact", "masked_interval_compact", "merge_gather",
+    "rewrite_member_compact",
     "two_source_gather", "segment_positions", "auto_block", "LARGE_BLOCK",
     "pass_counters", "reset_pass_counters", "ref",
 ]

@@ -138,6 +138,56 @@ def _dual_kernel(ma_ref, mb_ref, idxa_ref, cnta_ref, idxb_ref, cntb_ref,
     _compact_body(mb_ref[...].astype(jnp.int32), idxb_ref, cntb_ref, chunk)
 
 
+def _in_set_tile(col, arr):
+    """Vectorized sorted-membership test inside a kernel tile.
+
+    ``arr`` is a lex-sorted INT32_MAX-padded pow2-length id set resident
+    on-chip for the whole grid pass.  log2(K) binary-search steps with
+    vector gathers (the merge-path kernels' ref-gather idiom) stand in
+    for ``jnp.searchsorted``, which does not lower inside Pallas bodies.
+    """
+    K = arr.shape[0]
+    lo = jnp.zeros(col.shape, jnp.int32)
+    hi = jnp.full(col.shape, K, jnp.int32)
+
+    def step(_, lh):
+        l, h = lh
+        mid = (l + h) // 2
+        v = arr[jnp.clip(mid, 0, K - 1)]
+        right = v < col
+        return jnp.where(right, mid + 1, l), jnp.where(right, h, mid)
+
+    lo, hi = lax.fori_loop(0, max(int(K).bit_length(), 1), step, (lo, hi))
+    pos = jnp.clip(lo, 0, K - 1)
+    return (arr[pos] == col) & (col != INVALID)
+
+
+def _member_kernel(params_ref, mem_ref, dom_ref, rng_ref, s_ref, p_ref,
+                   o_ref, alive_ref, *out_refs, chunk, has_dom, has_rng):
+    """Rewrite-mode type-pattern masks fused with compaction.
+
+    Computes the subject-binding mask ``(p == tid & o ∈ mem) [| p ∈ dom]``
+    and (statically gated) the object-binding mask ``p ∈ rng`` per tile —
+    the member/domain/range id sets stay on-chip across the whole grid
+    pass, so the full-store boolean masks the host path materialized
+    never exist: each tile resolves its own membership tests and compacts
+    in place.  ``tid`` rides in SMEM; absent branches compile to nothing.
+    """
+    tid = params_ref[0]
+    s = s_ref[...]
+    p = p_ref[...]
+    o = o_ref[...]
+    valid = (s != INVALID) & (alive_ref[...] != 0)
+    m_s = (p == tid) & _in_set_tile(o, mem_ref[...])
+    if has_dom:
+        m_s = m_s | _in_set_tile(p, dom_ref[...])
+    _compact_body((m_s & valid).astype(jnp.int32), out_refs[0], out_refs[1],
+                  chunk)
+    if has_rng:
+        m_o = _in_set_tile(p, rng_ref[...]) & valid
+        _compact_body(m_o.astype(jnp.int32), out_refs[2], out_refs[3], chunk)
+
+
 def _compact_specs(block: int, nb: int, n: int, streams: int = 1):
     out_specs, out_shape = [], []
     for _ in range(streams):
@@ -210,6 +260,40 @@ def masked_interval_compact_pallas(p, o, alive, params, *,
         out_shape=out_shape,
         interpret=interpret,
     )(params, p, o, alive)
+
+
+def member_compact_pallas(params, mem, dom, rng, s, p, o, alive, *,
+                          has_dom: bool, has_rng: bool,
+                          block: int = DEFAULT_BLOCK,
+                          chunk: int = DEFAULT_CHUNK,
+                          interpret: bool = False):
+    """Fused rewrite-mode type-pattern predicate + compaction.
+
+    ``params`` = int32[1] (tid) in SMEM; ``mem``/``dom``/``rng`` are
+    lex-sorted INT32_MAX-padded id sets resident on-chip (constant index
+    maps — one DMA for the whole grid); ``s``/``p``/``o``/``alive`` tile.
+    Emits the subject-binding stream, plus the object-binding stream when
+    ``has_rng`` — each satisfying the ``stream_compact_pallas`` contract.
+    """
+    n = s.shape[0]
+    nb = n // block
+    streams = 2 if has_rng else 1
+    out_specs, out_shape = _compact_specs(block, nb, n, streams)
+    resident = [pl.BlockSpec((a.shape[0],), lambda i: (0,))
+                for a in (mem, dom, rng)]
+    return pl.pallas_call(
+        partial(_member_kernel, chunk=chunk, has_dom=has_dom,
+                has_rng=has_rng),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), *resident,
+                  pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(params, mem, dom, rng, s, p, o, alive)
 
 
 def dual_compact_pallas(mask_a, mask_b, *, block: int = DEFAULT_BLOCK,

@@ -335,7 +335,7 @@ class ShardedQueryServer:
     def _sm(self) -> bool:
         if self.use_shard_map is not None:
             return self.use_shard_map
-        return jax.device_count() >= self.K.n_shards > 1
+        return jax.local_device_count() >= self.K.n_shards > 1
 
     def _type_indexes(self):
         if "type_os" not in self._views:

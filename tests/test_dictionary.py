@@ -69,3 +69,36 @@ def test_locate_extract_strings():
     assert out[0] == "ub:Professor" and out[1] == "ub:memberOf"
     # unknown term
     assert kb.locate(["no-such-term"])[0] == -1
+
+
+def test_dynamic_dictionary_register_splices_external_ids():
+    """`register` adopts ids assigned elsewhere (the sharded encode path):
+    the host mirror must resolve them, advance `next_id` past them, and
+    hand them to the device as a pending absorb chunk — exactly like
+    `encode` does for ids it allocates itself."""
+    from repro.core.engine import KnowledgeBase
+    from repro.core.update import DynamicDictionary
+
+    raw = generate_lubm(1, seed=5)
+    K = KnowledgeBase.build(raw)
+    dyn = DynamicDictionary.from_kb(K.kb)
+    base = dyn.next_id
+    rng = np.random.default_rng(0)
+    fps = rng.choice(1 << 50, 17, replace=False)
+    known = dyn.lookup(fps)
+    assert (known == -1).all()  # fresh fingerprints
+    # sharded encode ranks ids by owner-shard order, not fp order: feed a
+    # shuffled id assignment and expect lookup to still resolve each fp
+    ids = base + rng.permutation(len(fps)).astype(np.int32)
+    n_new = dyn.register(fps, ids)
+    assert n_new == len(fps)
+    np.testing.assert_array_equal(dyn.lookup(fps), ids)
+    assert dyn.next_id == base + len(fps)
+    assert dyn.n_new_terms == len(fps)
+    # the pending chunk carries the same mapping for device absorption
+    chunk = dyn.take_new_terms()
+    assert chunk is not None
+    got = {int(f): int(i) for f, i in zip(*chunk)}
+    assert got == {int(f): int(i) for f, i in zip(fps, ids)}
+    # registering nothing is a no-op
+    assert dyn.register(np.empty(0, np.int64), np.empty(0, np.int32)) == 0

@@ -319,15 +319,16 @@ def test_latency_stats_is_bounded_state(lubm_kb):
 
 
 def test_observed_selectivity_flips_inl_decision(lubm_kb):
-    """A pattern whose probe-side ESTIMATE is too big for the INL
-    heuristic converts after the planner observes the probe's real
-    output, and the capacity is sized from the observation."""
+    """Observations — keyed by (sig, probe-constant bucket) — both enable
+    and VETO the INL conversion for exactly their own probe side, while a
+    different bucket's observation (the old aliasing) is never consulted."""
     K, _ = lubm_kb
     eng = _fresh_engine(K)
     q4 = PAPER_QUERIES["Q4"]
-    sigs, _, caps, *_ = eng._plan(q4, None)
+    planned = eng._plan(q4, None)
+    sigs, caps, buckets = planned[0], planned[2], planned[8]
     (j,) = [i for i, s in enumerate(sigs) if s.strategy == "inl"]
-    inl_sig, base_cap = sigs[j], caps[j]
+    inl_sig, base_cap, inl_bucket = sigs[j], caps[j], buckets[j]
 
     # a probe-side estimate too big for the heuristic: no conversion
     eng.inl_factor = 64
@@ -337,45 +338,75 @@ def test_observed_selectivity_flips_inl_decision(lubm_kb):
     # one observation of the probe's true (tiny) output flips it back on:
     # observed_rows * factor undercuts the merge-side count
     store_n = max(eng.view.n, 1)
-    eng.observed_selectivity[inl_sig] = 10 / store_n
+    eng.observed_selectivity[(inl_sig, inl_bucket)] = 10 / store_n
     sigs3, _, caps3, *_ = eng._plan(q4, None)
     (k,) = [i for i, s in enumerate(sigs3) if s.strategy == "inl"]
     assert sigs3[k] == inl_sig
     # ... and the capacity tracks the observation, not the est*32 guess
     assert caps3[k] < base_cap
 
-    # a HUGE aliased observation (another probe side sharing this sig)
-    # must NOT veto a conversion the heuristic already justifies
+    # a HUGE observation under a DIFFERENT probe-constant bucket (another
+    # probe side that happens to share this sig — Q3's Professors vs Q4's
+    # Chairs) is simply not consulted: the heuristic conversion stands
     eng.inl_factor = 8
-    eng.observed_selectivity[inl_sig] = 2000 / store_n
+    eng.observed_selectivity.clear()
+    eng.observed_selectivity[(inl_sig, ("other-probe",))] = 1.0
     sigs4, *_ = eng._plan(q4, None)
     assert any(s.strategy == "inl" for s in sigs4)
 
+    # ... while the SAME bucket's huge observation VETOES the conversion
+    # the heuristic would have made — the regression the bare-sig keying
+    # made impossible (an aliased store could only ever turn INL on)
+    eng.observed_selectivity[(inl_sig, inl_bucket)] = 1.0
+    sigs5, *_ = eng._plan(q4, None)
+    assert not any(s.strategy == "inl" for s in sigs5)
+
     # the flipped plan answers identically to the oracle
     eng.inl_factor = 64
-    eng.observed_selectivity[inl_sig] = 10 / store_n
+    eng.observed_selectivity.clear()
+    eng.observed_selectivity[(inl_sig, inl_bucket)] = 10 / store_n
     rows, _ = eng.run(q4)
     got = {tuple(r) for r in rows.tolist()}
     assert got == K.answers(q4, mode="litemat")
 
 
-def test_batch_caps_floor_from_observation(lubm_kb):
-    """Batched capacity unification raises caps to the observed floor —
-    observations can only GROW a batched capacity, never shrink it."""
+def test_batch_caps_observation_shrinks_and_grows(lubm_kb):
+    """Batched capacity unification: complete per-member evidence lets the
+    observed floor SHRINK an over-provisioned cap (previously impossible
+    under sig aliasing); partial evidence stays grow-only."""
     K, _ = lubm_kb
     eng = _fresh_engine(K)
     planned = eng._plan(PAPER_QUERIES["Q1"], None)
-    caps0, _ = eng._batch_caps([planned])
-    # a tiny observation must NOT shrink the unified caps
     store_n = max(eng.view.n, 1)
-    eng.observed_selectivity[planned[0][0]] = 1 / store_n
-    caps_same, _ = eng._batch_caps([planned])
-    assert caps_same == caps0
-    # a huge observation for the first signature raises them to its floor
-    eng.observed_selectivity[planned[0][0]] = (caps0[0] * 8) / store_n
+    key0 = (planned[0][0], planned[8][0])
+
+    # an over-provisioned member: planner caps inflated 16x
+    p_big = (planned[0], planned[1], [c * 16 for c in planned[2]],
+             planned[3] * 16, *planned[4:])
+    caps_big, _ = eng._batch_caps([p_big])
+    assert caps_big == p_big[2]  # no observations: planner caps stand
+
+    # complete evidence (the only member is observed): the tiny observed
+    # floor REPLACES the inflated cap — the capacity shrinks
+    eng.observed_selectivity[key0] = 1 / store_n
+    caps_shrunk, _ = eng._batch_caps([p_big])
+    assert caps_shrunk[0] < caps_big[0]
+    assert caps_shrunk[0] == eng._bucket(int(1 * eng.slack) + 16)
+
+    # a huge observation raises the cap to its floor (growth still works)
+    caps0, _ = eng._batch_caps([planned])
+    eng.observed_selectivity[key0] = (caps0[0] * 8) / store_n
     caps1, join1 = eng._batch_caps([planned])
     assert caps1[0] > caps0[0]
     assert join1 >= max(caps1)
+
+    # partial evidence: a second member under an UNOBSERVED bucket blocks
+    # the shrink — the unified cap may only grow past the planner max
+    eng.observed_selectivity[key0] = 1 / store_n
+    p_other = (*planned[:8],
+               tuple(("unobserved",) for _ in planned[8]))
+    caps_mixed, _ = eng._batch_caps([p_big, p_other])
+    assert caps_mixed[0] == max(p_big[2][0], planned[2][0])
 
 
 def test_engine_run_batch_matches_run(lubm_kb):
