@@ -1,18 +1,28 @@
 #!/usr/bin/env python
-"""Validate every trace in an export file against the obs trace schema.
+"""Validate obs export files: trace exports AND metrics snapshots.
 
-CI's obs smoke leg runs the serving bench with ``REPRO_TRACE_EXPORT`` set,
-then holds the resulting file to the contract in
-``repro.obs.export.TRACE_SCHEMA`` plus the structural invariants
-(exactly one root span per trace, no dangling parent_ids, ordered
-[t0, t1] windows).  Any violation prints the offending trace/span and
-exits 1, failing the job.
+CI's obs smoke leg runs the serving bench with ``REPRO_TRACE_EXPORT`` /
+``REPRO_METRICS_EXPORT`` set, the distributed leg exports per-process
+mergeable snapshots plus the aggregated fleet snapshot, and this script
+holds every resulting file to its contract:
+
+  * trace files (``{"traces": [...]}``) — ``repro.obs.export.TRACE_SCHEMA``
+    plus the structural invariants (exactly one root span per trace, no
+    dangling parent_ids, ordered [t0, t1] windows);
+  * metrics snapshots (``{"schema": "repro.metrics.snapshot/1", ...}`` or
+    the aggregated ``repro.metrics.fleet/1`` form) —
+    ``repro.obs.export.validate_metrics_snapshot``: schema walk, integer
+    bucket indexes, bucket counts reconciling with totals, ordered
+    min/max envelopes.
+
+File kind is auto-detected from the document shape.  Any violation
+prints the offending trace/span/entry and exits 1, failing the job.
 
 Usage:
-    PYTHONPATH=src python scripts/check_traces.py traces.json [more...]
+    PYTHONPATH=src python scripts/check_traces.py traces.json metrics.json
     PYTHONPATH=src python scripts/check_traces.py --min-traces 10 traces.json
 
-Exit codes: 0 all traces valid, 1 invalid trace / unreadable file /
+Exit codes: 0 all files valid, 1 invalid content / unreadable file /
 fewer traces than ``--min-traces`` (a silently-empty export must not
 pass the smoke leg).
 """
@@ -22,7 +32,19 @@ import argparse
 import json
 import sys
 
-from repro.obs.export import validate_trace
+from repro.obs.export import validate_metrics_snapshot, validate_trace
+
+
+def check_metrics(path: str, doc: dict) -> int:
+    """Validate one metrics snapshot document; returns error count."""
+    errors = validate_metrics_snapshot(doc)
+    for err in errors:
+        print(f"{path}: {err}")
+    kind = doc.get("schema", "?")
+    n_hists = len(doc.get("histograms", ()))
+    print(f"# {path}: {kind} snapshot, {n_hists} histograms, "
+          f"{len(errors)} errors")
+    return len(errors)
 
 
 def check_file(path: str, min_traces: int) -> int:
@@ -33,9 +55,12 @@ def check_file(path: str, min_traces: int) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"{path}: unreadable ({e})")
         return 1
-    traces = doc.get("traces")
+    if isinstance(doc, dict) and isinstance(doc.get("schema"), str) \
+            and doc["schema"].startswith("repro.metrics."):
+        return check_metrics(path, doc)
+    traces = doc.get("traces") if isinstance(doc, dict) else None
     if not isinstance(traces, list):
-        print(f"{path}: no 'traces' array")
+        print(f"{path}: neither a 'traces' array nor a metrics snapshot")
         return 1
     n_errors = 0
     for i, trace in enumerate(traces):
@@ -56,7 +81,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("files", nargs="+")
     ap.add_argument("--min-traces", type=int, default=1,
-                    help="fail when a file holds fewer traces than this")
+                    help="fail when a trace file holds fewer than this")
     args = ap.parse_args(argv)
     total = sum(check_file(p, args.min_traces) for p in args.files)
     return 1 if total else 0

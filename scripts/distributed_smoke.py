@@ -31,6 +31,9 @@ def main() -> int:
     ap.add_argument("--num-processes", type=int, default=2)
     ap.add_argument("--process-id", type=int, required=True)
     ap.add_argument("--local-devices", type=int, default=4)
+    ap.add_argument("--metrics-dir", default="",
+                    help="export per-process mergeable metrics snapshots "
+                         "here; process 0 aggregates them into fleet.json")
     args = ap.parse_args()
 
     import jax
@@ -74,6 +77,7 @@ def main() -> int:
     raw = generate_lubm(1, seed=7)
     K = KnowledgeBase.build(raw)
     S = ShardedKB.build(raw, n_shards=args.local_devices)
+    S.track_ledger()  # per-shard hbm_bytes gauges ride the metrics export
     eng = S.engine("litemat")
     assert eng._shard_map_on() and eng._repartition_on()
     c = REGISTRY.counter("device/transfer_bytes", src="combine_upload")
@@ -115,8 +119,91 @@ def main() -> int:
     assert a == answers_fp(ctrl, PAPER_QUERIES["Q1"]) and len(a) > 0
     print(f"[proc {args.process_id}] sharded encode OK: {len(a)} answers",
           flush=True)
+
+    # 4. cross-process telemetry: every process exports a mergeable
+    # snapshot; process 0 waits for its peers' files and aggregates them
+    # into ONE schema-validated fleet snapshot (the artifact CI uploads).
+    if args.metrics_dir:
+        _export_and_aggregate(args)
+
     print(f"[proc {args.process_id}] DISTRIBUTED SMOKE PASSED", flush=True)
     return 0
+
+
+def _export_and_aggregate(args) -> None:
+    import json
+    import os
+    import time
+
+    from repro.obs.aggregate import aggregate, check_compatible
+    from repro.obs.export import (export_mergeable_metrics,
+                                  validate_metrics_snapshot)
+    from repro.obs.ledger import LEDGER
+    from repro.obs.metrics import REGISTRY
+
+    os.makedirs(args.metrics_dir, exist_ok=True)
+    LEDGER.sample()  # land hbm_bytes/bytes_per_triple gauges pre-export
+    mine = os.path.join(args.metrics_dir,
+                        f"metrics-proc{args.process_id}.json")
+    snap = export_mergeable_metrics(REGISTRY, mine,
+                                    process=str(args.process_id))
+    print(f"[proc {args.process_id}] exported {len(snap['counters'])} "
+          f"counters / {len(snap['histograms'])} histograms -> {mine}",
+          flush=True)
+    if args.process_id != 0:
+        return
+
+    paths = [os.path.join(args.metrics_dir, f"metrics-proc{i}.json")
+             for i in range(args.num_processes)]
+    deadline = time.monotonic() + 60.0
+    snaps = {}
+    while len(snaps) < len(paths):
+        for p in paths:
+            if p in snaps or not os.path.exists(p):
+                continue
+            try:
+                with open(p) as f:
+                    snaps[p] = json.load(f)
+            except json.JSONDecodeError:
+                continue  # peer mid-write: retry next poll
+        if len(snaps) < len(paths):
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"peer snapshots missing: "
+                    f"{[p for p in paths if p not in snaps]}")
+            time.sleep(0.2)
+    ordered = [snaps[p] for p in paths]
+    for p, s in zip(paths, ordered):
+        errors = validate_metrics_snapshot(s)
+        assert not errors, (p, errors)
+    check_compatible(ordered)
+    fleet = aggregate(ordered)
+    errors = validate_metrics_snapshot(fleet)
+    assert not errors, errors
+    # counters must SUM across processes: every process ran the same
+    # repartition check, so the fleet's run counter is n_processes times
+    # any single process's
+    key = "shard/combine_runs"
+    mine_runs = sum(e["value"] for e in ordered[0]["counters"]
+                    if e["name"] == key)
+    fleet_runs = sum(e["value"] for e in fleet["counters"]
+                     if e["name"] == key)
+    per_proc = [sum(e["value"] for e in s["counters"] if e["name"] == key)
+                for s in ordered]
+    assert fleet_runs == sum(per_proc) and mine_runs > 0, (
+        fleet_runs, per_proc)
+    # histogram counts must merge bucket-wise (sum of member counts)
+    fh = {(e["name"], tuple(sorted(e["labels"].items()))): e
+          for e in fleet["histograms"]}
+    for s in ordered:
+        for e in s["histograms"]:
+            k = (e["name"], tuple(sorted(e["labels"].items())))
+            assert k in fh, k
+    out = os.path.join(args.metrics_dir, "fleet.json")
+    with open(out, "w") as f:
+        json.dump(fleet, f, indent=1, sort_keys=True)
+    print(f"[proc 0] fleet aggregation OK: {len(ordered)} processes -> "
+          f"{out} ({fleet_runs} combine runs fleet-wide)", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,199 @@
+#!/usr/bin/env python
+"""Operator-facing fleet report from an exported metrics snapshot.
+
+Consumes one per-process mergeable snapshot
+(``repro.obs.export.export_mergeable_metrics``) or an aggregated fleet
+snapshot (``repro.obs.aggregate``) and renders three sections:
+
+  * **Device memory** — per-shard HBM bytes by component (base / delta /
+    alive / tbox / snapshot / stack slabs) from the resource-ledger
+    gauges, with live triples and bytes-per-triple per shard plus the
+    fleet totals — the number ROADMAP item 4's compression work is
+    gated on.
+  * **SLO status** — per-SLO state and fast/slow error-budget burn rates
+    from the burn-rate monitor's gauges, plus the runtime's current
+    admission bound when the control loop has adjusted it.
+  * **Slow signatures** — top-N plan signatures by total compile + exec
+    seconds (``query/compile_seconds{sig=}`` + ``query/exec_seconds``
+    histogram sums), with dispatch counts and plan-cache hit ratios —
+    where to aim prewarm() and capacity tuning.
+
+Usage:
+    PYTHONPATH=src python scripts/fleet_report.py fleet.json [--top 10]
+
+Exit codes: 0 report rendered, 1 unreadable/invalid snapshot.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.export import validate_metrics_snapshot
+
+_STATE_NAMES = {0: "ok", 1: "WARN", 2: "PAGE"}
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:,.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024
+    return f"{n:,.1f} GiB"
+
+
+def _gauges(snap: dict, name: str) -> list:
+    return [e for e in snap["gauges"] if e["name"] == name]
+
+
+def memory_section(snap: dict) -> list:
+    """Per-shard HBM table from the resource-ledger gauges."""
+    lines = ["== Device memory (resource ledger) =="]
+    shards: dict = {}
+    for e in _gauges(snap, "hbm_bytes"):
+        lab = e["labels"]
+        key = (lab.get("process", "-"), lab.get("shard", "?"))
+        shards.setdefault(key, {})[lab.get("component", "?")] = e["value"]
+    triples = {(e["labels"].get("process", "-"),
+                e["labels"].get("shard", "?")): e["value"]
+               for e in _gauges(snap, "store/live_triples")}
+    if not shards:
+        lines.append("  (no ledger gauges in snapshot — nothing sampled)")
+        return lines
+    components = sorted({c for comps in shards.values() for c in comps})
+    hdr = (["proc", "shard"] + components
+           + ["total", "triples", "bytes/triple"])
+    rows = []
+    for key in sorted(shards):
+        comps = shards[key]
+        total = sum(comps.values())
+        n = triples.get(key, 0)
+        rows.append([key[0], key[1]]
+                    + [_fmt_bytes(comps.get(c, 0)) for c in components]
+                    + [_fmt_bytes(total), f"{int(n):,}",
+                       f"{total / n:.1f}" if n else "-"])
+    widths = [max(len(str(r[i])) for r in [hdr] + rows)
+              for i in range(len(hdr))]
+    for r in [hdr] + rows:
+        lines.append("  " + "  ".join(
+            str(v).rjust(w) for v, w in zip(r, widths)))
+    total_b = sum(sum(c.values()) for c in shards.values())
+    total_t = sum(triples.values())
+    lines.append(f"  fleet total: {_fmt_bytes(total_b)} over "
+                 f"{int(total_t):,} live triples"
+                 + (f" = {total_b / total_t:.1f} bytes/triple"
+                    if total_t else ""))
+    return lines
+
+
+def slo_section(snap: dict) -> list:
+    """Per-SLO burn-rate status from the monitor's gauges."""
+    lines = ["== SLO status (error-budget burn rates) =="]
+    states = {}
+    for e in _gauges(snap, "slo/state"):
+        key = (e["labels"].get("process", "-"), e["labels"].get("slo", "?"))
+        states[key] = int(e["value"])
+    burns: dict = {}
+    for e in _gauges(snap, "slo/burn_rate"):
+        lab = e["labels"]
+        key = (lab.get("process", "-"), lab.get("slo", "?"))
+        burns.setdefault(key, {})[lab.get("window", "?")] = e["value"]
+    if not states:
+        lines.append("  (no SLO gauges in snapshot — monitor not enabled)")
+        return lines
+    for key in sorted(states):
+        b = burns.get(key, {})
+        state = _STATE_NAMES.get(states[key], str(states[key]))
+        proc = f"proc={key[0]} " if key[0] != "-" else ""
+        lines.append(
+            f"  {proc}{key[1]:<16} {state:<5} "
+            f"burn fast={b.get('fast', 0.0):7.2f}x "
+            f"slow={b.get('slow', 0.0):7.2f}x of budget")
+    for e in _gauges(snap, "serving/admission_bound"):
+        proc = e["labels"].get("process")
+        tag = f" (proc={proc})" if proc else ""
+        lines.append(f"  admission bound{tag}: {int(e['value'])}")
+    return lines
+
+
+def slow_signatures(snap: dict, top: int) -> list:
+    """Top-N plan signatures by compile+exec cost."""
+    lines = [f"== Top {top} slow signatures (compile + exec seconds) =="]
+    cost: dict = {}
+    for e in snap["histograms"]:
+        sig = e["labels"].get("sig")
+        if sig is None or e["name"] not in ("query/compile_seconds",
+                                            "query/exec_seconds"):
+            continue
+        rec = cost.setdefault(sig, {"compile_s": 0.0, "exec_s": 0.0,
+                                    "dispatches": 0, "compiles": 0})
+        if e["name"] == "query/compile_seconds":
+            rec["compile_s"] += e["sum"]
+            rec["compiles"] += e["count"]
+        else:
+            rec["exec_s"] += e["sum"]
+            rec["dispatches"] += e["count"]
+    hits: dict = {}
+    misses: dict = {}
+    for e in snap["counters"]:
+        if e["name"] != "query/plan_cache":
+            continue
+        sig = e["labels"].get("sig")
+        if sig is None:
+            continue
+        bucket = (hits if e["labels"].get("event", "").startswith("hit")
+                  else misses)
+        bucket[sig] = bucket.get(sig, 0) + e["value"]
+    if not cost:
+        lines.append("  (no per-signature cost histograms in snapshot)")
+        return lines
+    ranked = sorted(cost.items(),
+                    key=lambda kv: kv[1]["compile_s"] + kv[1]["exec_s"],
+                    reverse=True)[:top]
+    lines.append(f"  {'signature':<16} {'total_s':>9} {'compile_s':>10} "
+                 f"{'exec_s':>8} {'dispatches':>10} {'hit_ratio':>9}")
+    for sig, rec in ranked:
+        h, m = hits.get(sig, 0), misses.get(sig, 0)
+        ratio = f"{h / (h + m):.2f}" if (h + m) else "-"
+        lines.append(
+            f"  {sig:<16} {rec['compile_s'] + rec['exec_s']:>9.3f} "
+            f"{rec['compile_s']:>10.3f} {rec['exec_s']:>8.3f} "
+            f"{rec['dispatches']:>10} {ratio:>9}")
+    return lines
+
+
+def render(snap: dict, top: int = 10) -> str:
+    header = [f"fleet report — schema {snap['schema']}"]
+    if "processes" in snap:
+        header.append(f"processes: {', '.join(snap['processes'])}")
+    else:
+        header.append(f"process: {snap['process']}")
+    sections = (memory_section(snap), slo_section(snap),
+                slow_signatures(snap, top))
+    return "\n".join(header + [""]
+                     + [line for sec in sections for line in sec + [""]])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("snapshot", help="mergeable or fleet snapshot JSON")
+    ap.add_argument("--top", type=int, default=10,
+                    help="slow-signature rows to show")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.snapshot) as f:
+            snap = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{args.snapshot}: unreadable ({e})", file=sys.stderr)
+        return 1
+    errors = validate_metrics_snapshot(snap)
+    if errors:
+        for err in errors:
+            print(f"{args.snapshot}: {err}", file=sys.stderr)
+        return 1
+    print(render(snap, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -431,6 +431,30 @@ class DeviceStoreCache:
         shape = (0, 3) if st.delta is None else tuple(st.delta.shape)
         return shape, st.cap
 
+    def device_buffers(self) -> list:
+        """Resident device buffers as (component, id, nbytes) records.
+
+        The :class:`~repro.obs.ledger.ResourceLedger` feed: pow2 delta
+        buckets under ``delta``, liveness masks (delta, privatized base,
+        and the shared all-alive buffers) under ``alive``.  Ids let the
+        ledger dedupe buffers shared across owners (e.g. a snapshot still
+        leasing a resident mask).  Side-effect-free: walks existing
+        state, never materializes anything.
+        """
+        out = []
+        with self._lock:
+            for st in self._states.values():
+                if st.delta is not None:
+                    out.append(("delta", id(st.delta), st.delta.nbytes))
+                    out.append(("alive", id(st.delta_alive),
+                                st.delta_alive.nbytes))
+                if st.owns_alive:
+                    out.append(("alive", id(st.base_alive),
+                                st.base_alive.nbytes))
+            for mask in self._ones.values():
+                out.append(("alive", id(mask), mask.nbytes))
+        return out
+
 
 def _one_off_dev(view: "StoreView", key: str, base) -> DevStore:
     """Cacheless DevStore build (static views, stale snapshots, tests)."""
@@ -588,6 +612,27 @@ class StoreView:
             jax.block_until_ready([a for a in (ds.base, ds.base_alive,
                                                ds.delta, ds.delta_alive)
                                    if a is not None])
+        return out
+
+    def device_buffers(self) -> list:
+        """Device buffers this view references — ledger feed records.
+
+        Covers the base store array and any one-off :class:`DevStore`
+        memos (static views, stale snapshots); cache-routed buffers are
+        reported by the owning :class:`DeviceStoreCache` instead.  Ids
+        dedupe the walk against other owners of the same arrays.
+        """
+        out = [("base", id(self.base_rows), self.base_rows.nbytes)]
+        if self.base_index is not None:
+            for p in self.base_index._perms.values():
+                out.append(("base", id(p.rows), p.rows.nbytes))
+        for ds in self._dev.values():
+            out.append(("base", id(ds.base), ds.base.nbytes))
+            out.append(("alive", id(ds.base_alive), ds.base_alive.nbytes))
+            if ds.delta is not None:
+                out.append(("delta", id(ds.delta), ds.delta.nbytes))
+                out.append(("alive", id(ds.delta_alive),
+                            ds.delta_alive.nbytes))
         return out
 
     @property

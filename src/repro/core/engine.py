@@ -271,6 +271,58 @@ class KnowledgeBase:
         """
         return self.view(mode).warm_device(keys)
 
+    # -- device resource accounting (obs/ledger.py feed) ---------------------
+    def device_buffers(self) -> list:
+        """Every device buffer this store references, as ledger records.
+
+        ``(component, buffer id, nbytes)`` per buffer: base store arrays
+        and materialized permutations under ``base``, pow2 delta buckets
+        under ``delta``, liveness masks under ``alive``, the replicated
+        TBox planes under ``tbox``.  Ids let the ledger dedupe arrays
+        shared between owners (a compacted POS permutation IS the store
+        array; a pinned snapshot references the same base).  Walks only
+        existing state — never materializes a view or flushes a delta.
+        """
+        out = []
+        for spo in (self.kb.spo, self.lite_spo, self.full_spo):
+            out.append(("base", id(spo), spo.nbytes))
+        for idx in self._base_indexes.values():
+            for p in idx._perms.values():
+                out.append(("base", id(p.rows), p.rows.nbytes))
+        for cache in self._dev_caches.values():
+            out.extend(cache.device_buffers())
+        for v in self._views.values():
+            out.extend(v.device_buffers())
+        for a in vars(self.dtb).values():
+            if hasattr(a, "nbytes") and hasattr(a, "shape"):
+                out.append(("tbox", id(a), a.nbytes))
+        return out
+
+    def n_live_triples(self) -> int:
+        """Live triples in the served (litemat) store, side-effect-free.
+
+        Counts base rows minus tombstones plus live delta rows plus
+        pending (not-yet-materialized) insert batches — deliberately NOT
+        through ``view()``, which would flush materialization from inside
+        a telemetry sampler.
+        """
+        d = self._delta
+        if d is None:
+            n = int(self.lite_spo.shape[0])
+        else:
+            alive = d.base_alive["litemat"]
+            n = (int(self.lite_spo.shape[0]) if alive is None
+                 else int(alive.sum()))
+            n += d.logs["litemat"].n_live
+        return n + self._pending_rows("litemat")
+
+    def track_ledger(self, shard="0") -> None:
+        """Register with the process ledger (idempotent, weakly held)."""
+        if getattr(self, "_ledger_handle", None) is None:
+            from repro.obs.ledger import LEDGER
+
+            self._ledger_handle = LEDGER.track(shard, self)
+
     def sizes(self) -> dict:
         out = dict(
             original=self.kb.n,

@@ -55,6 +55,8 @@ in ascending-cardinality order, which also gives capacity estimates.
 """
 from __future__ import annotations
 
+import hashlib
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -77,6 +79,21 @@ _I32_MAX = int(np.iinfo(np.int32).max)
 
 def is_var(t) -> bool:
     return isinstance(t, str) and t.startswith("?")
+
+
+def sig_label(sigs) -> str:
+    """Compact, stable metric label for a plan's signature tuple.
+
+    ``"<n>p:<hex10>"`` — pattern count plus a 10-hex-digit blake2s digest
+    of the PatternSig tuple's repr.  PatternSig fields are primitives, so
+    the repr (and hence the label) is identical across processes: the
+    per-signature compile/retry metrics labelled with it merge cleanly in
+    a fleet aggregation, and label cardinality stays bounded by the number
+    of distinct plans rather than distinct queries.
+    """
+    digest = hashlib.blake2s(repr(tuple(sigs)).encode(),
+                             digest_size=5).hexdigest()
+    return f"{len(sigs)}p:{digest}"
 
 
 @dataclass(frozen=True)
@@ -925,17 +942,49 @@ class QueryEngine:
 
         return run_device
 
+    @staticmethod
+    def _timed_compile(fn, label: str, kind: str):
+        """Wrap a fresh jitted plan so its FIRST call — the one that pays
+        trace+compile — is timed into ``query/compile_seconds{sig=}``.
+
+        jax.jit compiles lazily, so the only honest place to measure is
+        the first dispatch; ``block_until_ready`` there folds device
+        execution into the sample, but compile dominates by orders of
+        magnitude and the sync happens exactly once per executable.
+        """
+        state = {"pending": True}
+
+        def wrapper(*args):
+            if not state["pending"]:
+                return fn(*args)
+            state["pending"] = False
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            REGISTRY.counter("query/compiles", sig=label, kind=kind).inc()
+            REGISTRY.histogram("query/compile_seconds",
+                               sig=label).observe(dt)
+            return out
+
+        return wrapper
+
     def _executable(self, key, sigs, caps, join_cap: int, select):
         """Memoized jitted plan: signature + buckets -> compiled function."""
         fn = self._exec_cache.get(key)
+        slabel = sig_label(sigs)
         if fn is None:
             self.cache_stats["misses"] += 1
-            REGISTRY.counter("query/plan_cache", event="miss").inc()
-            fn = jax.jit(self._make_run_device(sigs, caps, join_cap, select))
+            REGISTRY.counter("query/plan_cache", event="miss",
+                             sig=slabel).inc()
+            fn = self._timed_compile(
+                jax.jit(self._make_run_device(sigs, caps, join_cap, select)),
+                slabel, "solo")
             self._exec_cache[key] = fn
         else:
             self.cache_stats["hits"] += 1
-            REGISTRY.counter("query/plan_cache", event="hit").inc()
+            REGISTRY.counter("query/plan_cache", event="hit",
+                             sig=slabel).inc()
         return fn
 
     def _batch_executable(self, key, sigs, caps, join_cap: int, select):
@@ -948,16 +997,21 @@ class QueryEngine:
         same-signature requests costs ONE XLA dispatch instead of B.
         """
         fn = self._exec_cache.get(key)
+        slabel = sig_label(sigs)
         if fn is None:
             self.cache_stats["misses"] += 1
-            REGISTRY.counter("query/plan_cache", event="miss_batch").inc()
-            fn = jax.jit(jax.vmap(
-                self._make_run_device(sigs, caps, join_cap, select),
-                in_axes=(None, 0)))
+            REGISTRY.counter("query/plan_cache", event="miss_batch",
+                             sig=slabel).inc()
+            fn = self._timed_compile(
+                jax.jit(jax.vmap(
+                    self._make_run_device(sigs, caps, join_cap, select),
+                    in_axes=(None, 0))),
+                slabel, "batch")
             self._exec_cache[key] = fn
         else:
             self.cache_stats["hits"] += 1
-            REGISTRY.counter("query/plan_cache", event="hit_batch").inc()
+            REGISTRY.counter("query/plan_cache", event="hit_batch",
+                             sig=slabel).inc()
         return fn
 
     @staticmethod
@@ -1179,6 +1233,7 @@ class QueryEngine:
         """Execute an already-planned query (the solo dispatch path)."""
         (sigs, dyns, caps, join_cap, sel, stores, order, est,
          buckets) = planned
+        slabel = sig_label(sigs)
         for attempt in range(max_retries):
             key = ("exec", self.mode, sigs, tuple(caps), join_cap, sel)
             misses0 = self.cache_stats["misses"]
@@ -1186,10 +1241,17 @@ class QueryEngine:
             with obs_trace.span("dispatch",
                                 cached=self.cache_stats["misses"] == misses0,
                                 join_cap=join_cap) as dsp:
+                t0 = time.perf_counter()
                 cols, valid, overflow, totals = fn(stores, dyns)
-                done = int(overflow) == 0
+                done = int(overflow) == 0  # blocks on the dispatch
+                REGISTRY.histogram("query/exec_seconds", sig=slabel).observe(
+                    time.perf_counter() - t0)
                 dsp.set_attr(overflow=not done)
             if done:
+                if attempt:
+                    REGISTRY.histogram("join/capacity_depth", site="query",
+                                       sig=slabel,
+                                       shard="local").observe(attempt)
                 self._record_observed(sigs, est, np.asarray(totals), buckets)
                 n = int(valid.sum())
                 rows = np.asarray(cols)[:, :n].T
@@ -1197,6 +1259,8 @@ class QueryEngine:
             obs_trace.event("overflow_retry", attempt=attempt,
                             join_cap=join_cap)
             REGISTRY.counter("query/overflow_retries").inc()
+            REGISTRY.counter("join/capacity_retry", site="query", sig=slabel,
+                             shard="local").inc()
             join_cap *= 2
             caps = [c * 2 for c in caps]
         raise RuntimeError("query kept overflowing its capacity buckets")
@@ -1280,17 +1344,28 @@ class QueryEngine:
             dyn_stack = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *dyn_list)
             REGISTRY.histogram("query/batch_size", mode=self.mode).observe(B)
+            slabel = sig_label(sigs)
             for attempt in range(max_retries):
                 key = ("bexec", self.mode, sigs, tuple(caps), join_cap,
                        sel, Bp)
                 fn = self._batch_executable(key, sigs, tuple(caps),
                                             join_cap, sel)
+                t0 = time.perf_counter()
                 cols, valid, overflow, totals = fn(stores, dyn_stack)
-                if int(np.asarray(overflow)[:B].max()) == 0:
+                ok = int(np.asarray(overflow)[:B].max()) == 0
+                REGISTRY.histogram("query/exec_seconds", sig=slabel).observe(
+                    time.perf_counter() - t0)
+                if ok:
+                    if attempt:
+                        REGISTRY.histogram(
+                            "join/capacity_depth", site="batch", sig=slabel,
+                            shard="local").observe(attempt)
                     break
                 obs_trace.event("overflow_retry", attempt=attempt,
                                 join_cap=join_cap, batch=B)
                 REGISTRY.counter("query/overflow_retries").inc()
+                REGISTRY.counter("join/capacity_retry", site="batch",
+                                 sig=slabel, shard="local").inc()
                 join_cap *= 2
                 caps = [c * 2 for c in caps]
             else:
@@ -1322,6 +1397,7 @@ class QueryEngine:
          order, est, buckets) = self._plan(patterns, select)
         observed = [None] * len(sigs)
         n_rows = None
+        hot_keys = {}
         if execute and self.view.n:
             key = ("exec", self.mode, sigs, tuple(caps), join_cap, sel)
             fn = self._executable(key, sigs, tuple(caps), join_cap, sel)
@@ -1329,6 +1405,32 @@ class QueryEngine:
             observed = [int(t) for t in np.asarray(totals)]
             n_rows = int(valid.sum())
             self._record_observed(sigs, est, observed, buckets)
+            # observed hot-key skew: for every join variable we can read
+            # off the result (selected + shared by >= 2 patterns), how
+            # lopsided is the per-key row distribution?  This is the
+            # host-visible face of the device-side capacity-retry metrics:
+            # a skew near 1.0 means uniform keys; a large max/mean ratio
+            # explains join/capacity_retry doublings for this signature.
+            if n_rows:
+                rows_h = np.asarray(cols)[:, :n_rows].T
+                uses = {}
+                for sig in sigs:
+                    for v in sig.pvars:
+                        if v is not None:
+                            uses[v] = uses.get(v, 0) + 1
+                for v in sel:
+                    if uses.get(v, 0) < 2:
+                        continue
+                    _, cnt = np.unique(rows_h[:, sel.index(v)],
+                                       return_counts=True)
+                    top, mean = int(cnt.max()), float(cnt.mean())
+                    hot_keys[v] = {
+                        "max_rows_per_key": top,
+                        "mean_rows_per_key": mean,
+                        "skew": top / mean,
+                    }
+                    REGISTRY.gauge("join/hot_key_skew", var=v,
+                                   sig=sig_label(sigs)).set(top / mean)
         store_n = max(self.view.n, 1)
         pats = []
         for j, sig in enumerate(sigs):
@@ -1357,6 +1459,7 @@ class QueryEngine:
             "join_cap": join_cap,
             "n_result_rows": n_rows,
             "patterns": pats,
+            "hot_keys": hot_keys,
         }
 
     def prewarm(self, queries, buckets=(), select=None) -> int:

@@ -83,7 +83,7 @@ from repro.core.engine import KnowledgeBase, PAPER_QUERIES, _raw_columns
 from repro.core.index import pow2_bucket as _pow2
 from repro.core.materialize import DeviceTBox, compact_rows, lite_materialize
 from repro.core.query import (
-    INVALID, Pattern, Relation, distinct, is_var, join,
+    INVALID, Pattern, Relation, distinct, is_var, join, sig_label,
 )
 from repro.core.tbox import TBox, build_tbox
 from repro.core.update import (
@@ -720,6 +720,31 @@ class ShardedKB:
         return np.concatenate(
             [np.asarray(K.store_rows(mode)) for K in self.shards])
 
+    def device_buffers(self) -> list:
+        """Sharded-engine device footprint beyond the per-shard stores:
+        the ShardStack slabs every ShardedQueryEngine keeps resident.
+        (Per-shard store buffers are reported by each shard's own
+        KnowledgeBase, registered separately by :meth:`track_ledger`.)"""
+        out = []
+        for eng in self._engines.values():
+            for stack in eng._stacks.values():
+                out.extend(stack.device_buffers())
+        return out
+
+    def track_ledger(self) -> None:
+        """Register this sharded store with the global resource ledger:
+        each shard's KnowledgeBase under its shard index (per-shard
+        ``hbm_bytes{shard=i}`` / live-triple gauges), plus the stacked
+        shard_map slabs under ``shard="stack"``.  Idempotent; the ledger
+        holds only weakrefs."""
+        if getattr(self, "_ledger_handles", None):
+            return
+        from repro.obs.ledger import LEDGER
+
+        self._ledger_handles = [
+            LEDGER.track(str(i), K) for i, K in enumerate(self.shards)]
+        self._ledger_handles.append(LEDGER.track("stack", self))
+
     def sizes(self) -> dict:
         out = {"original": 0, "lite": 0, "full": 0}
         for K in self.shards:
@@ -896,6 +921,21 @@ class ShardStack:
         self._lock = threading.RLock()  # same contract as DeviceStoreCache
         self.stats = {"base_rebuilds": 0, "upload_base_rows": 0,
                       "upload_delta_rows": 0, "kill_scatter_rows": 0}
+
+    def device_buffers(self) -> list:
+        """Resident stacked slabs as ``(component, buf_id, nbytes)`` for
+        the resource ledger — the shard_map path's device footprint."""
+        out = []
+        with self._lock:
+            for st in self._states.values():
+                out.append(("stack", id(st["base"]), st["base"].nbytes))
+                out.append(("alive", id(st["alive"]), st["alive"].nbytes))
+                if st["delta"] is not None:
+                    out.append(("delta", id(st["delta"]),
+                                st["delta"].nbytes))
+                    out.append(("alive", id(st["dalive"]),
+                                st["dalive"].nbytes))
+        return out
 
     def _base_host(self, view, key):
         if key == "scan":
@@ -1147,7 +1187,8 @@ class ShardedQueryEngine:
                         d["starts"] + (ncap - v.base_n), d["starts"])
                     dyn[j] = d
             dyns_h.append(tuple(dyn))
-        for _ in range(6):
+        slabel = sig_label(sigs0)
+        for attempt in range(6):
             stores = {}
             for k in {s.store for s in sigs0 if s.strategy in ("slice", "inl")}:
                 stores[k] = self._stack(k).sync(views, k)
@@ -1158,10 +1199,21 @@ class ShardedQueryEngine:
                 lambda *xs: jnp.stack(xs), *dyns_h)
             fn = self._sm_executable(sigs0, caps, join_cap, sel, has_delta)
             cols, valid, overflow = fn(stores, dyns)
-            if int(jnp.max(overflow)) == 0:
+            ovf = np.asarray(overflow).reshape(-1)
+            if int(ovf.max()) == 0:
+                if attempt:
+                    REGISTRY.histogram("join/capacity_depth",
+                                       site="shard_map",
+                                       sig=slabel).observe(attempt)
                 self.cache_stats["shard_map_runs"] += 1
                 REGISTRY.counter("shard/group_runs", path="shard_map").inc()
                 return cols, valid
+            # overflow is per shard: attribute the retry to each shard
+            # whose buckets burst — lopsided counters here are the
+            # hot-key-skew signal EXPLAIN surfaces host-side
+            for i in np.nonzero(ovf)[0]:
+                REGISTRY.counter("join/capacity_retry", site="shard_map",
+                                 sig=slabel, shard=str(int(i))).inc()
             caps = tuple(c * 2 for c in caps)
             join_cap *= 2
         raise RuntimeError("sharded query kept overflowing its buckets")
@@ -1404,13 +1456,23 @@ class ShardedQueryEngine:
             faults.fire("shard.exchange")
             jcap = _pow2(max(totals[pick], int(acc[2].sum()), 1) * 2,
                          floor=256)
-            for _ in range(max_retries):
+            plabel = sig_label(tuple((p.s, p.p, p.o) for p in patterns))
+            for attempt in range(max_retries):
                 fn = self._cx_executable(
                     acc[0], gvars, key, int(acc[1].shape[2]),
                     int(cols.shape[2]), jcap)
                 ocols, ovalid, oovf = fn(acc[1], acc[2], cols, valid)
                 if int(jnp.max(oovf)) == 0:
+                    if attempt:
+                        REGISTRY.histogram(
+                            "join/capacity_depth", site="repartition",
+                            sig=plabel, key=key).observe(attempt)
                     break
+                ovf = np.asarray(oovf).reshape(-1)
+                for i in (np.nonzero(ovf)[0] if ovf.shape[0] > 1 else [0]):
+                    REGISTRY.counter("join/capacity_retry",
+                                     site="repartition", sig=plabel,
+                                     shard=str(int(i))).inc()
                 jcap *= 2
             else:
                 raise RuntimeError("sharded join kept overflowing")
@@ -1518,10 +1580,19 @@ def combine_groups(evaluated, patterns, select=None, max_retries: int = 6):
             (0, len(gvars)), np.int32)
         rel = _host_relation(gvars, merged, _pow2(total, floor=256))
         jcap = _pow2(max(total, _acc_rows(acc), 1) * 2, floor=256)
-        for _ in range(max_retries):
+        plabel = sig_label(tuple((p.s, p.p, p.o) for p in patterns))
+        for attempt in range(max_retries):
             out = join(rel, acc, jcap, a_sorted=True)
             if int(out.overflow) == 0:
+                if attempt:
+                    REGISTRY.histogram("join/capacity_depth",
+                                       site="host_fold", sig=plabel,
+                                       key=key).observe(attempt)
                 break
+            # host fold sees already-merged parts: no per-shard overflow
+            # attribution exists, so the retry lands on shard="global"
+            REGISTRY.counter("join/capacity_retry", site="host_fold",
+                             sig=plabel, shard="global").inc()
             jcap *= 2
         else:
             raise RuntimeError("sharded join kept overflowing")

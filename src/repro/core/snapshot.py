@@ -217,6 +217,24 @@ class Snapshot:
         rows, _ = self.query(patterns, select=select, mode=mode)
         return {tuple(r) for r in rows.tolist()}
 
+    def device_buffers(self) -> list:
+        """Device buffers this snapshot's pinned views keep alive.
+
+        Reported under the ``snapshot`` component: after a compaction the
+        live store swaps to fresh arrays, and whatever a pinned version
+        still references — superseded bases, leased liveness masks — is
+        memory *retained by MVCC*, exactly what an operator needs to see
+        attributed separately.  Buffer ids let the ledger dedupe against
+        the live store's own records, so only genuinely retained bytes
+        surface here when the live KB registers first.
+        """
+        out = []
+        for views in self.views.values():
+            for v in views if isinstance(views, list) else (views,):
+                for _comp, buf_id, nbytes in v.device_buffers():
+                    out.append(("snapshot", buf_id, nbytes))
+        return out
+
     def store_rows(self, mode: str = None) -> np.ndarray:
         """Live rows at the pinned version (host; shards concatenated)."""
         mode = self._check_mode(mode)
@@ -503,6 +521,40 @@ class SnapshotRegistry:
             self.metrics.histogram("snapshot/retire_s").observe(
                 time.perf_counter() - t0)
         return dropped
+
+    def device_buffers(self) -> list:
+        """Ledger feed: buffers retained by live snapshot versions.
+
+        Deduped across versions here (two snapshots of nearby versions
+        share almost every array); deduped against the live store by the
+        ledger's global id pass.  Also publishes per-version
+        ``snapshot/retained_bytes{version=}`` gauges into this registry's
+        metrics — the "leased/pinned buffer bytes per version" series —
+        zeroing versions that retired since the last walk.  Pull-based:
+        runs only when the ledger samples, never on the pin fast path.
+        """
+        with self._lock:
+            snaps = sorted(self._snaps.items())
+        out = []
+        seen: set = set()
+        published: set = set()
+        for version, snap in snaps:
+            retained = 0
+            for comp, buf_id, nbytes in snap.device_buffers():
+                if buf_id in seen:
+                    continue
+                seen.add(buf_id)
+                out.append((comp, buf_id, nbytes))
+                retained += int(nbytes)
+            self.metrics.gauge("snapshot/retained_bytes",
+                               version=version).set(retained)
+            published.add(version)
+        stale = getattr(self, "_bytes_versions", set()) - published
+        for version in stale:
+            self.metrics.gauge("snapshot/retained_bytes",
+                               version=version).set(0)
+        self._bytes_versions = published
+        return out
 
     def live_versions(self) -> list:
         with self._lock:

@@ -1,14 +1,25 @@
-"""repro.obs — end-to-end tracing and metrics for the serving stack.
+"""repro.obs — fleet telemetry for the serving stack.
 
-Three small modules, imported lazily by the layers they instrument:
+Six small modules, imported lazily by the layers they instrument:
 
   * :mod:`repro.obs.metrics` — counters / gauges / log-bucketed histogram
     sketches in a :class:`~repro.obs.metrics.MetricsRegistry`; the
-    module-level ``REGISTRY`` is the process-wide default.
+    module-level ``REGISTRY`` is the process-wide default.  Histogram
+    states are mergeable (bucket-wise), and ``mergeable_snapshot()``
+    emits the cross-process wire form.
   * :mod:`repro.obs.trace` — per-request span trees propagated via
     contextvars; ``span(...)`` is a cheap no-op when no trace is active.
-  * :mod:`repro.obs.export` — JSON dumps and the trace schema validator
-    that CI runs over every exported trace.
+  * :mod:`repro.obs.export` — JSON dumps plus the trace AND metrics
+    snapshot schema validators CI runs over every exported artifact.
+  * :mod:`repro.obs.aggregate` — combines per-process mergeable snapshots
+    into ONE fleet snapshot (counters sum, histograms merge bucket-wise,
+    gauges keep per-process labels).
+  * :mod:`repro.obs.ledger` — pull-based device-memory accounting:
+    ``hbm_bytes{shard,component}`` and ``store/bytes_per_triple`` gauges
+    from weakly-tracked buffer owners.
+  * :mod:`repro.obs.slo` — windowed rollups (rates as first-class
+    series) and error-budget burn-rate monitoring that drives the
+    serving runtime's admission control.
 """
 from repro.obs.metrics import REGISTRY, MetricsRegistry  # noqa: F401
 from repro.obs.trace import Tracer, activate, event, span  # noqa: F401

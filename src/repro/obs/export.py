@@ -1,22 +1,31 @@
-"""JSON exporters + trace schema validation for the obs subsystem.
+"""JSON exporters + trace/metrics schema validation for the obs subsystem.
 
-Two export surfaces:
+Three export surfaces:
 
   * :func:`export_traces` / :func:`export_metrics` — dump a Tracer's
     finished traces / a MetricsRegistry snapshot to JSON files.  The
     serving bench honours ``REPRO_TRACE_EXPORT`` / ``REPRO_METRICS_EXPORT``
     env knobs and the CI obs smoke leg uploads the results.
-  * :data:`TRACE_SCHEMA` + :func:`validate_trace` — the contract CI holds
-    every exported trace to (``scripts/check_traces.py``).  The validator
-    is a small hand-rolled subset of JSON Schema (type / properties /
-    required / items / enum) because the container has no ``jsonschema``
-    package; on top of the schema walk it checks structural invariants a
-    JSON schema can't express: exactly one root span, every parent_id
-    resolves, every span's [t0, t1] is well ordered.
+  * :func:`export_mergeable_metrics` — one process's share of a FLEET
+    snapshot (structured labels, raw histogram buckets); any number of
+    these combine through :mod:`repro.obs.aggregate`.
+  * :data:`TRACE_SCHEMA` + :func:`validate_trace`, and
+    :data:`METRICS_SNAPSHOT_SCHEMA` / :data:`FLEET_SNAPSHOT_SCHEMA` +
+    :func:`validate_metrics_snapshot` — the contracts CI holds every
+    exported trace AND metrics snapshot to (``scripts/check_traces.py``).
+    The validator is a small hand-rolled subset of JSON Schema (type /
+    properties / required / items / enum) because the container has no
+    ``jsonschema`` package; on top of the schema walk it checks structural
+    invariants a JSON schema can't express: exactly one root span, every
+    parent_id resolves, every span's [t0, t1] is well ordered — and for
+    metrics: every histogram's bucket counts reconcile with its total
+    count, bucket indexes parse as integers, min <= max.
 """
 from __future__ import annotations
 
 import json
+
+from repro.obs.metrics import SNAPSHOT_SCHEMA_VERSION
 
 #: Schema one exported trace object must satisfy (subset of JSON Schema).
 TRACE_SCHEMA = {
@@ -50,6 +59,58 @@ TRACE_SCHEMA = {
                 },
             },
         },
+    },
+}
+
+_VALUE_ENTRY = {
+    "type": "object",
+    "required": ["name", "labels", "value"],
+    "properties": {
+        "name": {"type": "string"},
+        "labels": {"type": "object"},
+        "value": {"type": "number"},
+    },
+}
+
+_HIST_ENTRY = {
+    "type": "object",
+    "required": ["name", "labels", "buckets", "count", "sum"],
+    "properties": {
+        "name": {"type": "string"},
+        "labels": {"type": "object"},
+        "buckets": {"type": "object"},
+        "count": {"type": "integer"},
+        "sum": {"type": "number"},
+    },
+}
+
+#: Schema one per-process mergeable metrics snapshot must satisfy.
+METRICS_SNAPSHOT_SCHEMA = {
+    "type": "object",
+    "required": ["schema", "growth_log", "process", "counters", "gauges",
+                 "histograms"],
+    "properties": {
+        "schema": {"type": "string"},
+        "growth_log": {"type": "number"},
+        "process": {"type": "string"},
+        "counters": {"type": "array", "items": _VALUE_ENTRY},
+        "gauges": {"type": "array", "items": _VALUE_ENTRY},
+        "histograms": {"type": "array", "items": _HIST_ENTRY},
+    },
+}
+
+#: Schema an aggregated fleet snapshot must satisfy.
+FLEET_SNAPSHOT_SCHEMA = {
+    "type": "object",
+    "required": ["schema", "growth_log", "processes", "counters", "gauges",
+                 "histograms"],
+    "properties": {
+        "schema": {"type": "string"},
+        "growth_log": {"type": "number"},
+        "processes": {"type": "array", "items": {"type": "string"}},
+        "counters": {"type": "array", "items": _VALUE_ENTRY},
+        "gauges": {"type": "array", "items": _VALUE_ENTRY},
+        "histograms": {"type": "array", "items": _HIST_ENTRY},
     },
 }
 
@@ -120,6 +181,61 @@ def validate_trace(trace: dict) -> list:
     return errors
 
 
+def validate_metrics_snapshot(snap: dict) -> list:
+    """Schema check + structural invariants for a metrics snapshot.
+
+    Accepts both wire forms — a per-process mergeable snapshot and an
+    aggregated fleet snapshot (dispatched on the ``schema`` field) — and
+    returns error strings.  Beyond the schema walk it verifies what a
+    JSON schema can't: bucket indexes parse as integers, per-histogram
+    bucket counts are positive and sum exactly to ``count``, and the
+    min/max envelope is ordered.  ``check_traces.py`` runs this over CI
+    exports; :mod:`repro.obs.aggregate` runs it before merging so a
+    corrupt snapshot fails loudly instead of skewing fleet percentiles.
+    """
+    from repro.obs.aggregate import FLEET_SCHEMA_VERSION
+
+    if not isinstance(snap, dict):
+        return [f"$: expected object, got {type(snap).__name__}"]
+    schema_id = snap.get("schema")
+    if schema_id == SNAPSHOT_SCHEMA_VERSION:
+        errors = validate(snap, METRICS_SNAPSHOT_SCHEMA)
+    elif schema_id == FLEET_SCHEMA_VERSION:
+        errors = validate(snap, FLEET_SNAPSHOT_SCHEMA)
+    else:
+        return [f"$.schema: unknown metrics snapshot schema {schema_id!r} "
+                f"(expected {SNAPSHOT_SCHEMA_VERSION!r} or "
+                f"{FLEET_SCHEMA_VERSION!r})"]
+    if errors:
+        return errors
+    for i, e in enumerate(snap["histograms"]):
+        where = f"$.histograms[{i}] ({e['name']})"
+        total = 0
+        for b, c in e["buckets"].items():
+            try:
+                int(b)
+            except ValueError:
+                errors.append(f"{where}: bucket index {b!r} is not an "
+                              "integer")
+                continue
+            if not isinstance(c, int) or isinstance(c, bool) or c <= 0:
+                errors.append(f"{where}: bucket {b} count {c!r} must be a "
+                              "positive integer")
+                continue
+            total += c
+        if total != e["count"]:
+            errors.append(f"{where}: bucket counts sum to {total} but "
+                          f"count={e['count']}")
+        if e["count"] > 0:
+            vmin, vmax = e.get("min"), e.get("max")
+            if vmin is None or vmax is None:
+                errors.append(f"{where}: non-empty histogram missing "
+                              "min/max envelope")
+            elif vmin > vmax:
+                errors.append(f"{where}: min {vmin} > max {vmax}")
+    return errors
+
+
 def export_traces(tracer, path: str) -> int:
     """Write {"traces": [...]} to ``path``; returns the trace count."""
     traces = tracer.to_dicts()
@@ -134,5 +250,25 @@ def export_metrics(registry, path: str) -> None:
         json.dump(registry.snapshot(), f, indent=1, sort_keys=True)
 
 
-__all__ = ["TRACE_SCHEMA", "validate", "validate_trace", "export_traces",
-           "export_metrics"]
+def export_mergeable_metrics(registry, path: str,
+                             process: str = "0") -> dict:
+    """Write one process's mergeable (fleet-combinable) snapshot.
+
+    The document is validated before it hits disk — an unserializable or
+    self-inconsistent snapshot fails at export time in the process that
+    produced it, not later inside the aggregator with N files to bisect.
+    """
+    snap = registry.mergeable_snapshot(process=process)
+    errors = validate_metrics_snapshot(snap)
+    if errors:
+        raise ValueError("refusing to export invalid metrics snapshot:\n"
+                         + "\n".join(errors))
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    return snap
+
+
+__all__ = ["TRACE_SCHEMA", "METRICS_SNAPSHOT_SCHEMA",
+           "FLEET_SNAPSHOT_SCHEMA", "validate", "validate_trace",
+           "validate_metrics_snapshot", "export_traces", "export_metrics",
+           "export_mergeable_metrics"]

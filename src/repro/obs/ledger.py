@@ -1,0 +1,143 @@
+"""Device resource accounting: who holds how many HBM bytes, in what.
+
+Before this module nothing could answer "how many device bytes does
+shard 3 hold, and in what?" — the store's buffers are scattered across
+base arrays, lazily-materialized permutations, pow2 delta buckets,
+liveness masks, and pinned snapshots leasing superseded bases.  The
+:class:`ResourceLedger` makes the answer a gauge read:
+
+  * components (``core/delta.py``, ``core/engine.py``,
+    ``core/snapshot.py``, ``core/shard.py``) expose a side-effect-free
+    ``device_buffers()`` walk of the device arrays they currently
+    reference, each as ``(component, buffer id, nbytes)``;
+  * owners register with :meth:`ResourceLedger.track` under a shard
+    name; the ledger holds only a **weakref** (a dropped store
+    unregisters itself — telemetry must never extend object lifetimes);
+  * :meth:`ResourceLedger.sample` walks every tracked owner, **dedupes
+    buffers globally by id** (a snapshot pinning the live base, or two
+    views sharing one permutation, counts ONCE — attribution goes to the
+    first owner in registration order), and publishes the result as
+    gauges:
+
+      ``hbm_bytes{shard=S,component=C}``   resident bytes per component
+      ``store/live_triples{shard=S}``      live triples per shard
+      ``store/bytes_per_triple``           fleet total bytes / total live
+                                           triples — THE number ROADMAP
+                                           item 4's compression work is
+                                           gated on
+
+Sampling is pull-based: nothing in the mutation/query hot path pays for
+accounting; the :class:`~repro.obs.slo.TelemetryRollup` thread (or a
+test, or a bench) calls ``sample()`` at its own cadence.
+"""
+from __future__ import annotations
+
+import threading
+import weakref
+
+from repro.obs.metrics import REGISTRY
+
+
+class ResourceLedger:
+    """Weakref registry of device-buffer owners + gauge publication."""
+
+    def __init__(self, registry=None):
+        self._lock = threading.Lock()
+        self._owners: list = []  # (handle, shard, weakref) in track order
+        self._next_handle = 1
+        self._published: set = set()  # gauge keys we set last sample
+        self.registry = registry if registry is not None else REGISTRY
+
+    def track(self, shard, owner) -> int:
+        """Track ``owner`` (anything with ``device_buffers()``) under a
+        shard name; returns a handle for :meth:`untrack`.  Only a weak
+        reference is kept — garbage-collected owners drop out of the next
+        sample automatically."""
+        with self._lock:
+            h = self._next_handle
+            self._next_handle += 1
+            self._owners.append((h, str(shard), weakref.ref(owner)))
+            return h
+
+    def untrack(self, handle: int) -> None:
+        with self._lock:
+            self._owners = [o for o in self._owners if o[0] != handle]
+
+    def clear(self) -> None:
+        """Drop every tracked owner (test isolation)."""
+        with self._lock:
+            self._owners = []
+            self._published = set()
+
+    def sample(self) -> dict:
+        """Walk owners, dedupe buffers by id, publish gauges.
+
+        Returns ``{"shards": {S: {"components": {C: bytes}, "triples": n,
+        "total": bytes}}, "total_bytes": b, "total_triples": n,
+        "bytes_per_triple": b/n}`` — the same numbers the gauges carry,
+        for direct (test/report) consumption.
+        """
+        with self._lock:
+            owners = list(self._owners)
+        shards: dict = {}
+        seen_ids: set = set()
+        dead = []
+        for handle, shard, ref in owners:
+            obj = ref()
+            if obj is None:
+                dead.append(handle)
+                continue
+            rec = shards.setdefault(
+                shard, {"components": {}, "triples": 0, "total": 0})
+            for component, buf_id, nbytes in obj.device_buffers():
+                if buf_id is not None:
+                    if buf_id in seen_ids:
+                        continue  # shared buffer: first owner keeps it
+                    seen_ids.add(buf_id)
+                nbytes = int(nbytes)
+                comps = rec["components"]
+                comps[component] = comps.get(component, 0) + nbytes
+                rec["total"] += nbytes
+            n_live = getattr(obj, "n_live_triples", None)
+            if callable(n_live):
+                rec["triples"] += int(n_live())
+        if dead:
+            with self._lock:
+                self._owners = [o for o in self._owners if o[0] not in dead]
+
+        published = set()
+        for shard, rec in shards.items():
+            for component, nbytes in rec["components"].items():
+                key = ("hbm_bytes", shard, component)
+                published.add(key)
+                self.registry.gauge("hbm_bytes", shard=shard,
+                                    component=component).set(nbytes)
+            key = ("store/live_triples", shard, None)
+            published.add(key)
+            self.registry.gauge("store/live_triples",
+                                shard=shard).set(rec["triples"])
+        # zero gauges that existed last sample but vanished (a dropped
+        # store must not leave a stale byte count behind)
+        for key in self._published - published:
+            name, shard, component = key
+            if component is None:
+                self.registry.gauge(name, shard=shard).set(0)
+            else:
+                self.registry.gauge(name, shard=shard,
+                                    component=component).set(0)
+        self._published = published
+
+        total_bytes = sum(r["total"] for r in shards.values())
+        total_triples = sum(r["triples"] for r in shards.values())
+        bpt = total_bytes / total_triples if total_triples else 0.0
+        self.registry.gauge("store/hbm_bytes_total").set(total_bytes)
+        self.registry.gauge("store/bytes_per_triple").set(bpt)
+        return {"shards": shards, "total_bytes": total_bytes,
+                "total_triples": total_triples, "bytes_per_triple": bpt}
+
+
+#: Process-wide default ledger: KnowledgeBase / ShardedKB /
+#: SnapshotRegistry register themselves here (weakly).
+LEDGER = ResourceLedger()
+
+__all__ = ["ResourceLedger", "LEDGER"]

@@ -42,6 +42,11 @@ import threading
 # reported within +-(GROWTH-1)/2 ~ 4.5% of its true value.
 _GROWTH_LOG = math.log(2.0) / 8.0
 
+#: Wire-format version of :meth:`MetricsRegistry.mergeable_snapshot`.
+#: Bumped whenever the snapshot layout OR bucket geometry changes —
+#: the aggregator refuses to merge across versions.
+SNAPSHOT_SCHEMA_VERSION = "repro.metrics.snapshot/1"
+
 
 def _bucket_of(v: float) -> int:
     return int(math.floor(math.log(v) / _GROWTH_LOG)) if v > 0 else -(1 << 30)
@@ -151,10 +156,65 @@ class Histogram:
     def state(self) -> dict:
         """Copy of the accumulator — pair with :func:`window_summary` to
         report only the observations that landed after this point (the
-        serving bench excludes its warmup epoch this way)."""
+        serving bench excludes its warmup epoch this way).  The raw bucket
+        map is also the MERGEABLE wire form: two states from different
+        processes combine bucket-wise (same geometric bucket boundaries by
+        construction) — see :mod:`repro.obs.aggregate`."""
         with self._lock:
             return dict(buckets=dict(self.buckets), count=self.count,
-                        sum=self.sum)
+                        sum=self.sum, min=self.min, max=self.max)
+
+
+def merge_states(*states: dict) -> dict:
+    """Merge raw :meth:`Histogram.state` dicts bucket-wise.
+
+    The log-bucket boundaries are fixed by ``_GROWTH_LOG`` (a process
+    constant), so sketches from different processes share bucket indexes
+    and merging is a per-index count sum — associative and commutative by
+    construction.  Count / sum add exactly; the min/max envelope is the
+    elementwise extreme.  Accepts states with or without min/max (older
+    window states) — absent extremes fall back to the bucket envelope.
+    """
+    buckets: dict = {}
+    count, total = 0, 0.0
+    vmin, vmax = math.inf, -math.inf
+    for s in states:
+        for b, c in s.get("buckets", {}).items():
+            b = int(b)  # JSON round-trips bucket indexes as strings
+            buckets[b] = buckets.get(b, 0) + int(c)
+        count += int(s.get("count", 0))
+        total += float(s.get("sum", 0.0))
+        if s.get("count", 0):
+            vmin = min(vmin, float(s.get("min", math.inf)))
+            vmax = max(vmax, float(s.get("max", -math.inf)))
+    if count and not math.isfinite(vmin):  # no envelope in any input
+        idx = sorted(buckets)
+        vmin, vmax = _bucket_value(idx[0]), _bucket_value(idx[-1])
+    return dict(buckets=buckets, count=count, sum=total, min=vmin, max=vmax)
+
+
+def summarize_state(state: dict) -> dict:
+    """Render a raw (possibly merged) histogram state like ``summary()``."""
+    count = int(state.get("count", 0))
+    if count == 0:
+        return dict(n=0)
+    buckets = {int(b): int(c) for b, c in state.get("buckets", {}).items()}
+    idx = sorted(buckets)
+    vmin = float(state.get("min", _bucket_value(idx[0])))
+    vmax = float(state.get("max", _bucket_value(idx[-1])))
+
+    def pct(q: float) -> float:
+        rank = q / 100.0 * (count - 1)
+        seen = 0
+        for b in idx:
+            seen += buckets[b]
+            if seen > rank:
+                return min(max(_bucket_value(b), vmin), vmax)
+        return vmax
+
+    total = float(state.get("sum", 0.0))
+    return dict(n=count, sum=total, mean=total / count, min=vmin, max=vmax,
+                p50=pct(50), p99=pct(99))
 
 
 def window_summary(hist: Histogram, before: dict) -> dict:
@@ -262,6 +322,47 @@ class MetricsRegistry:
                            sorted(histograms.items())},
         }
 
+    def mergeable_snapshot(self, process: str = "0") -> dict:
+        """One process's share of a FLEET snapshot, in mergeable form.
+
+        Unlike :meth:`snapshot` (human-oriented: flattened label strings,
+        lossy histogram summaries), this keeps labels structured and
+        histograms as raw log-bucket states so :mod:`repro.obs.aggregate`
+        can combine any number of processes losslessly: counters sum,
+        gauges get a ``process`` label, histogram sketches merge
+        bucket-wise.  ``growth_log`` stamps the bucket geometry — the
+        aggregator refuses to merge snapshots whose sketches use different
+        bucket boundaries (or a different schema version).
+        """
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            histograms = dict(self._histograms)
+
+        def entry(key, **rest):
+            name, labels = key
+            return dict(name=name, labels={k: str(v) for k, v in labels},
+                        **rest)
+
+        hists = []
+        for k, h in sorted(histograms.items()):
+            st = h.state()
+            hists.append(entry(
+                k, buckets={str(b): c for b, c in sorted(st["buckets"].items())},
+                count=st["count"], sum=st["sum"],
+                min=st["min"] if st["count"] else None,
+                max=st["max"] if st["count"] else None))
+        return {
+            "schema": SNAPSHOT_SCHEMA_VERSION,
+            "growth_log": _GROWTH_LOG,
+            "process": str(process),
+            "counters": [entry(k, value=c.value)
+                         for k, c in sorted(counters.items())],
+            "gauges": [entry(k, value=g.value)
+                       for k, g in sorted(gauges.items())],
+            "histograms": hists,
+        }
+
     def reset(self) -> None:
         with self._lock:
             self._counters.clear()
@@ -274,4 +375,5 @@ class MetricsRegistry:
 REGISTRY = MetricsRegistry()
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+           "SNAPSHOT_SCHEMA_VERSION", "merge_states", "summarize_state",
            "window_summary"]

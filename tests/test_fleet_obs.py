@@ -1,0 +1,406 @@
+"""Fleet telemetry: mergeable sketches, resource ledger, SLO control loop.
+
+The PR-10 acceptance bar, as tests:
+
+  * histogram-sketch states merge associatively and order-independently,
+    and a merged sketch's percentiles equal the pooled stream's within
+    one log bucket (here: exactly — bucket-wise addition IS the pooled
+    sketch);
+  * per-process mergeable snapshots round-trip through export validation,
+    and the aggregator rejects mixed-schema / duplicate-process inputs
+    with clear errors instead of skewing fleet percentiles;
+  * the resource ledger's ``hbm_bytes`` / ``bytes_per_triple`` gauges
+    agree with independently computed buffer sizes on a known store,
+    dedupe shared buffers, and zero out when an owner is dropped;
+  * the SLO monitor drives the serving runtime's admission bound DOWN
+    under injected overload and back up on recovery, with every
+    transition landing as a schema-valid trace — and a fault injected at
+    the control-plane apply site leaves the data plane's knobs untouched;
+  * the capacity-retry sites record ``join/capacity_retry`` counters and
+    doubling-depth histograms, and EXPLAIN surfaces observed hot-key
+    skew.
+"""
+import gc
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.engine import KnowledgeBase, PAPER_QUERIES
+from repro.obs.aggregate import (AggregationError, aggregate,
+                                 check_compatible)
+from repro.obs.export import (export_mergeable_metrics,
+                              validate_metrics_snapshot)
+from repro.obs.ledger import ResourceLedger
+from repro.obs.metrics import (MetricsRegistry, REGISTRY, _GROWTH_LOG,
+                               merge_states, summarize_state)
+from repro.obs.slo import SLO, SLOMonitor, TelemetryRollup, _spec
+from repro.obs.trace import Tracer
+from repro.serving.runtime import ServingRuntime
+from repro.testing import faults
+
+Q1, Q4 = PAPER_QUERIES["Q1"], PAPER_QUERIES["Q4"]
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    yield
+    faults.uninstall()
+
+
+# -- mergeable histogram sketches ---------------------------------------------
+
+def _hist_with(reg, values, **labels):
+    h = reg.histogram("t/lat", **labels)
+    for v in values:
+        h.observe(v)
+    return h
+
+
+def test_merge_states_associative_and_order_independent():
+    rng = np.random.default_rng(3)
+    regs = [MetricsRegistry() for _ in range(3)]
+    streams = [rng.lognormal(-3, 1, 500), rng.lognormal(-2, 0.5, 300),
+               rng.lognormal(-4, 2, 700)]
+    states = [_hist_with(reg, s).state()
+              for reg, s in zip(regs, streams)]
+    a, b, c = states
+    left = merge_states(merge_states(a, b), c)
+    right = merge_states(a, merge_states(b, c))
+    shuffled = merge_states(c, a, b)
+    for other in (right, shuffled):
+        # counts/buckets/min/max are integers or copied floats: exact.
+        # "sum" reassociates float additions, so approx only.
+        assert {k: v for k, v in left.items() if k != "sum"} \
+            == {k: v for k, v in other.items() if k != "sum"}
+        assert left["sum"] == pytest.approx(other["sum"])
+    assert left["count"] == sum(len(s) for s in streams)
+    assert left["sum"] == pytest.approx(sum(s.sum() for s in streams))
+    assert left["min"] == pytest.approx(min(s.min() for s in streams))
+    assert left["max"] == pytest.approx(max(s.max() for s in streams))
+
+
+def test_merged_percentiles_match_pooled_stream_within_one_bucket():
+    rng = np.random.default_rng(11)
+    streams = [rng.lognormal(-3, 1, 400) for _ in range(4)]
+    pooled_reg = MetricsRegistry()
+    pooled = _hist_with(pooled_reg, np.concatenate(streams))
+    merged = merge_states(*[
+        _hist_with(MetricsRegistry(), s).state() for s in streams])
+    ms = summarize_state(merged)
+    one_bucket = math.exp(_GROWTH_LOG)
+    for q in (50, 99):
+        p_pool = pooled.percentile(q)
+        p_merge = ms[f"p{q}"]
+        assert p_merge / p_pool <= one_bucket + 1e-9
+        assert p_pool / p_merge <= one_bucket + 1e-9
+    # bucket-wise addition IS the pooled sketch: exact equality too
+    assert merged["buckets"] == pooled.state()["buckets"]
+
+
+def test_mergeable_snapshot_roundtrip_and_validation(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("t/reqs", status="ok").inc(5)
+    reg.gauge("t/depth").set(3.5)
+    _hist_with(reg, [0.01, 0.02, 0.4], mode="x")
+    path = tmp_path / "snap.json"
+    export_mergeable_metrics(reg, str(path), process="7")
+    snap = json.loads(path.read_text())
+    assert snap["schema"] == "repro.metrics.snapshot/1"
+    assert snap["process"] == "7"
+    assert validate_metrics_snapshot(snap) == []
+    # corrupt a bucket count: the validator names the inconsistency
+    snap["histograms"][0]["buckets"][
+        next(iter(snap["histograms"][0]["buckets"]))] += 1
+    errs = validate_metrics_snapshot(snap)
+    assert errs and "bucket counts sum" in errs[0]
+    # unknown schema versions fail loudly, never silently skew a merge
+    errs = validate_metrics_snapshot({"schema": "repro.metrics/99"})
+    assert errs and "unknown metrics snapshot schema" in errs[0]
+
+
+def test_aggregate_sums_counters_and_rejects_bad_inputs():
+    snaps = []
+    for proc in ("0", "1"):
+        reg = MetricsRegistry()
+        reg.counter("t/reqs", status="ok").inc(3)
+        reg.gauge("t/depth").set(float(proc))
+        _hist_with(reg, [0.01, 0.1])
+        snaps.append(reg.mergeable_snapshot(process=proc))
+    fleet = aggregate(snaps)
+    assert fleet["schema"] == "repro.metrics.fleet/1"
+    assert fleet["processes"] == ["0", "1"]
+    assert validate_metrics_snapshot(fleet) == []
+    [ctr] = [e for e in fleet["counters"] if e["name"] == "t/reqs"]
+    assert ctr["value"] == 6  # counters SUM across processes
+    # gauges stay per-process (labelled), never averaged
+    depths = {e["labels"]["process"]: e["value"]
+              for e in fleet["gauges"] if e["name"] == "t/depth"}
+    assert depths == {"0": 0.0, "1": 1.0}
+    [h] = [e for e in fleet["histograms"] if e["name"] == "t/lat"]
+    assert h["count"] == 4 and "summary" in h
+    # duplicate process names would collide on every gauge: rejected
+    with pytest.raises(AggregationError, match="claim process"):
+        check_compatible([snaps[0], snaps[0]])
+    # mixed schema versions: rejected with the offending value named
+    bad = dict(snaps[1], schema="repro.metrics.snapshot/0")
+    with pytest.raises(AggregationError, match="snapshot/0"):
+        aggregate([snaps[0], bad])
+    # mixed bucket-growth constants cannot merge bucket-wise
+    bad = dict(snaps[1], growth_log=_GROWTH_LOG * 2)
+    with pytest.raises(AggregationError, match="growth_log"):
+        aggregate([snaps[0], bad])
+
+
+# -- resource ledger ----------------------------------------------------------
+
+class _Owner:
+    """Minimal device_buffers() provider over plain numpy arrays."""
+
+    def __init__(self, arrays, triples=0):
+        self.arrays = arrays
+        self.triples = triples
+
+    def device_buffers(self):
+        return [(comp, id(a), a.nbytes) for comp, a in self.arrays]
+
+    def n_live_triples(self):
+        return self.triples
+
+
+def test_ledger_accounts_dedupes_and_zeroes():
+    reg = MetricsRegistry()
+    led = ResourceLedger(registry=reg)
+    shared = np.zeros(1024, np.int32)  # 4096 B, owned by BOTH owners
+    a = _Owner([("base", np.zeros(256, np.int32)), ("base", shared)],
+               triples=100)
+    b = _Owner([("delta", shared)], triples=50)
+    led.track("0", a)
+    led.track("1", b)
+    s = led.sample()
+    # shared buffer counts ONCE, attributed to the first-registered owner
+    assert s["shards"]["0"]["components"]["base"] == 1024 + 4096
+    assert s["shards"]["1"].get("components") == {}
+    assert s["total_bytes"] == 1024 + 4096
+    assert s["total_triples"] == 150
+    assert reg.gauge_value("hbm_bytes", shard="0", component="base") == 5120
+    assert reg.gauge_value("store/bytes_per_triple") == pytest.approx(
+        5120 / 150)
+    # dropping an owner zeroes its gauges on the next sample — a dead
+    # store must not leave stale byte counts behind
+    del a
+    gc.collect()
+    s2 = led.sample()
+    assert "0" not in s2["shards"]
+    assert reg.gauge_value("hbm_bytes", shard="0", component="base") == 0
+    # ...and the survivor now owns the shared buffer
+    assert s2["shards"]["1"]["components"]["delta"] == 4096
+
+
+def test_ledger_matches_independent_buffer_sizes(lubm_kb):
+    K, raw = lubm_kb
+    reg = MetricsRegistry()
+    led = ResourceLedger(registry=reg)
+    led.track("0", K)
+    K.query(Q1)  # materialize indexes + device caches
+    s = led.sample()
+    rec = s["shards"]["0"]
+    # independent lower bound: the three raw store arrays must be counted
+    floor = K.kb.spo.nbytes + K.lite_spo.nbytes + K.full_spo.nbytes
+    assert rec["components"]["base"] >= floor
+    # live triples agree with the store's own row count
+    assert rec["triples"] == K.n_live_triples()
+    assert rec["triples"] == np.asarray(K.store_rows("litemat")).shape[0]
+    assert s["bytes_per_triple"] == pytest.approx(
+        s["total_bytes"] / s["total_triples"])
+    # sampling is read-only: a second sample reports identical bytes
+    assert led.sample()["total_bytes"] == s["total_bytes"]
+
+
+def test_sharded_ledger_reports_every_shard(lubm_kb):
+    from repro.core.shard import ShardedKB
+
+    _, raw = lubm_kb
+    S = ShardedKB.build(raw, n_shards=4)
+    reg = MetricsRegistry()
+    led = ResourceLedger(registry=reg)
+    for i, K in enumerate(S.shards):
+        led.track(str(i), K)
+    led.track("stack", S)
+    S.query(Q4)
+    s = led.sample()
+    for i in range(4):
+        rec = s["shards"][str(i)]
+        assert rec["total"] > 0 and rec["triples"] > 0
+        assert reg.gauge_value("hbm_bytes", shard=str(i),
+                               component="base") > 0
+    # per-shard triples sum to the whole store's litemat rows
+    total = sum(s["shards"][str(i)]["triples"] for i in range(4))
+    assert total == np.asarray(S.store_rows("litemat")).shape[0]
+
+
+# -- SLO monitor + admission control loop -------------------------------------
+
+def _mk_points(pairs, den_spec, num_spec):
+    """Timeline of points from cumulative (den, num) counter pairs."""
+    return [{"t": float(i), "counters": {den_spec: d, num_spec: n},
+             "hists": {}, "rates": {}} for i, (d, n) in enumerate(pairs)]
+
+
+def test_monitor_burn_rates_and_state_machine():
+    reg = MetricsRegistry()
+    den, num = _spec("t/submitted"), _spec("t/outcomes", status="deadline")
+    slo = SLO(name="miss", objective=0.01, num=num, den=den)
+    mon = SLOMonitor([slo], fast_window=2, slow_window=4, min_events=4,
+                     registry=reg)
+    seen = []
+    mon.on_transition(lambda st, detail: seen.append(st))
+    # healthy: 100 events/tick, zero bad
+    tl = _mk_points([(0, 0), (100, 0), (200, 0), (300, 0)], den, num)
+    assert mon.observe(tl) == "ok" and seen == []
+    # sustained 50% miss rate = 50x budget: page
+    tl = _mk_points([(0, 0), (100, 50), (200, 100), (300, 150),
+                     (400, 200)], den, num)
+    assert mon.observe(tl) == "page" and seen == ["page"]
+    assert reg.gauge_value("slo/burn_rate", slo="miss",
+                           window="fast") >= 2.0
+    # recovery: fast window clean, slow window still dirty -> min() clears
+    tl = _mk_points([(0, 100), (100, 100), (200, 100), (300, 100),
+                     (400, 100)], den, num)
+    assert mon.observe(tl) == "ok" and seen == ["page", "ok"]
+    # too few events: no signal, no flapping
+    tl = _mk_points([(0, 0), (2, 2)], den, num)
+    assert mon.observe(tl) == "ok"
+
+
+@pytest.fixture()
+def slo_rt(lubm_kb):
+    K, _ = lubm_kb
+    tracer = Tracer()
+    rt = ServingRuntime(K, max_queue=32, tracer=tracer)
+    # interval_s is huge: the tests drive tick() by hand so window
+    # contents are deterministic (a background tick between bursts would
+    # observe an empty fast window and recover early)
+    mon = rt.enable_slo_control(interval_s=60.0, fast_window=2,
+                                slow_window=4, min_events=4)
+    with rt:
+        rt.serve(Q4)  # compile warmup before any deadline-bounded traffic
+        yield rt, mon, tracer
+
+
+def test_slo_loop_tightens_admission_and_recovers(slo_rt):
+    rt, mon, tracer = slo_rt
+    tick = rt._slo_rollup.tick
+    for _ in range(12):
+        assert rt.serve(Q4).ok
+    tick(); tick()
+    assert mon.state == "ok"
+    b0, w0 = rt.admission_bound, rt.batch_window_s
+    # injected overload: every execute faults, deadlines pile up, and the
+    # monitor pages -> admission bound drops, batch window widens
+    with faults.inject() as inj:
+        inj.arm("serving.execute", times=0)
+        for _ in range(4):
+            for _ in range(10):
+                rt.serve(Q4, deadline_s=0.01)
+            tick()
+    assert mon.state == "page"
+    assert rt.admission_bound < b0
+    assert rt.batch_window_s > w0
+    assert rt.metrics.gauge_value("serving/admission_bound") == \
+        rt.admission_bound
+    # recovery: healthy traffic drains the windows, knobs restore
+    for _ in range(6):
+        for _ in range(8):
+            assert rt.serve(Q4).ok
+        tick()
+    assert mon.state == "ok"
+    assert rt.admission_bound == b0 and rt.batch_window_s == w0
+    # every transition landed as its own schema-valid single-span trace
+    from repro.obs.export import validate_trace
+
+    trans = [t for t in tracer.finished_traces()
+             if t.root.name == "slo_transition"]
+    assert len(trans) >= 2
+    states = [t.root.attrs["to"] for t in trans]
+    assert "page" in states and states[-1] == "ok"
+    for t in trans:
+        assert validate_trace(t.to_dict()) == []
+
+
+def test_slo_apply_fault_leaves_data_plane_knobs(slo_rt):
+    rt, mon, _ = slo_rt
+    tick = rt._slo_rollup.tick
+    for _ in range(12):
+        rt.serve(Q4)
+    tick(); tick()
+    b0 = rt.admission_bound
+    # the CONTROL plane faults at apply time: the monitor pages but the
+    # runtime keeps its previous knobs (serving never degrades because
+    # telemetry glue broke)
+    with faults.inject() as inj:
+        inj.arm("slo.apply", times=0)
+        inj.arm("serving.execute", times=0)
+        for _ in range(4):
+            for _ in range(10):
+                rt.serve(Q4, deadline_s=0.01)
+            tick()
+        assert mon.state == "page"
+        assert rt.admission_bound == b0  # apply faulted: knobs unchanged
+        assert rt.metrics.counter_value("slo/apply_faults") >= 1
+    # with the fault gone, the next transition applies normally
+    for _ in range(6):
+        for _ in range(8):
+            rt.serve(Q4)
+        tick()
+    assert mon.state == "ok" and rt.admission_bound == b0
+
+
+def test_rollup_rates_are_first_class_series():
+    reg = MetricsRegistry()
+    roll = TelemetryRollup(reg, maxlen=8)
+    reg.counter("serving/submitted").inc(10)
+    roll.tick()
+    reg.counter("serving/submitted").inc(30)
+    roll.tick()
+    series = roll.rate_series("serving/submitted")
+    assert len(series) == 1 and series[0][1] > 0
+    assert reg.gauge_value("rate/serving/submitted") == series[0][1]
+    for _ in range(20):  # timeline stays bounded
+        roll.tick()
+    assert len(roll.timeline) == 8
+
+
+# -- capacity-retry instrumentation + hot-key skew ----------------------------
+
+def test_forced_overflow_records_capacity_retry_metrics(lubm_kb):
+    K, _ = lubm_kb
+    eng = K.engine("litemat")
+    planned = list(eng._plan(Q1, None))
+    # shrink every capacity below the planner's estimate: the first
+    # dispatch overflows and the doubling ladder must climb back
+    planned[2] = [256] * len(planned[2])
+    planned[3] = 256
+    assert max(planned[7]) > 256, "query too small to force an overflow"
+    before = sum(REGISTRY.values("join/capacity_retry").values())
+    rows, _ = eng._run_planned(tuple(planned), max_retries=10)
+    retries = sum(REGISTRY.values("join/capacity_retry").values())
+    assert rows.shape[0] > 0
+    assert retries > before
+    # depth histogram landed for the query site
+    depth = [(labels, h) for (name, labels), h in
+             REGISTRY._histograms.items() if name == "join/capacity_depth"]
+    assert any(dict(labels).get("site") == "query" and h.count > 0
+               for labels, h in depth)
+
+
+def test_explain_surfaces_hot_key_skew(lubm_kb):
+    K, _ = lubm_kb
+    ex = K.engine("litemat").explain(Q4)
+    assert "hot_keys" in ex
+    assert ex["hot_keys"], "multi-pattern query must report join-var skew"
+    for var, rec in ex["hot_keys"].items():
+        assert rec["max_rows_per_key"] >= 1
+        assert rec["skew"] >= 1.0 - 1e-9
+        assert rec["max_rows_per_key"] <= ex["n_result_rows"]
